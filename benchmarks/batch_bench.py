@@ -1,0 +1,49 @@
+"""Beyond-paper TPU-path benchmark: batched (vmapped) diverse search
+throughput vs the per-query progressive driver — the optimization the paper
+cannot express on CPU (DESIGN.md §2; EXPERIMENTS.md §Perf paper-technique
+track)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import datasets as D
+from benchmarks.common import emit, timed
+from repro.core.api import diverse_search
+from repro.core.batch import batch_greedy_diverse, batch_optimal_diverse
+
+
+def run(n: int = D.N_DEFAULT, batch: int = 16, k: int = 10):
+    graph, x, metric = D.load_graph("deep-like", n=n)
+    queries = D.queries_for(x, batch)
+    eps = D.calibrate_eps(x, metric, D.PHI_TARGETS["medium"])
+    qs = jnp.asarray(queries)
+
+    # per-query driver (paper-faithful)
+    def loop_pss():
+        return [diverse_search(graph, q, k=k, eps=eps, method="pss", ef=10)
+                for q in queries]
+    _, dt_loop = timed(loop_pss, warmup=1, reps=1)
+    emit("batch/per_query_pss", dt_loop / batch * 1e6, "per-query us")
+
+    # batched fixed-K div-A* (TPU path)
+    def batched():
+        out = batch_optimal_diverse(graph, qs, k, eps, K=128, ef=4)
+        out[0].block_until_ready()
+        return out
+    out, dt_b = timed(batched, warmup=1, reps=2)
+    cert = float(np.mean(np.asarray(out[3])))
+    emit("batch/batched_divastar", dt_b / batch * 1e6,
+         f"certified_frac={cert:.2f};speedup={dt_loop/dt_b:.1f}x")
+
+    def batched_greedy():
+        out = batch_greedy_diverse(graph, qs, k, eps, L=256)
+        out[0].block_until_ready()
+        return out
+    _, dt_g = timed(batched_greedy, warmup=1, reps=2)
+    emit("batch/batched_greedy", dt_g / batch * 1e6,
+         f"speedup_vs_loop={dt_loop/dt_g:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

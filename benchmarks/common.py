@@ -1,0 +1,55 @@
+"""Shared benchmark machinery: timing, recall-vs-oracle, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.api import diverse_search
+from repro.core.baselines import div_astar_oracle
+
+
+def timed(fn, *args, warmup: int = 1, reps: int = 1, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / reps
+    return out, dt
+
+
+def recall(result_ids: np.ndarray, truth_ids: np.ndarray) -> float:
+    a = set(int(i) for i in result_ids if i >= 0)
+    b = set(int(i) for i in truth_ids if i >= 0)
+    if not b:
+        return 1.0
+    return len(a & b) / len(b)
+
+
+def oracle_for(x, metric, q, k, eps, cache: dict):
+    key = (id(x), float(np.sum(q)), k, round(eps, 6))
+    if key not in cache:
+        cache[key] = div_astar_oracle(x, metric, q, k, eps, X=1024)
+    return cache[key]
+
+
+def evaluate_method(graph, x, metric, queries, k, eps, method, ef,
+                    oracle_cache, **kw):
+    """Returns (mean latency s, mean score, mean recall, extras)."""
+    lats, scores, recs, Ks = [], [], [], []
+    for qi, q in enumerate(queries):
+        res, dt = timed(diverse_search, graph, q, k=k, eps=eps,
+                        method=method, ef=ef, warmup=0, **kw)
+        lats.append(dt)
+        scores.append(res.total)
+        o = oracle_for(x, metric, q, k, eps, oracle_cache)
+        recs.append(recall(res.ids, o.ids))
+        Ks.append(res.stats.K_final)
+    return (float(np.mean(lats)), float(np.mean(scores)),
+            float(np.mean(recs)), dict(K_avg=float(np.mean(Ks)),
+                                       K_max=int(np.max(Ks))))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

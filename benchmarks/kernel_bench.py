@@ -1,0 +1,47 @@
+"""Kernel microbenchmarks: jnp-oracle CPU timings + work derived metrics.
+
+(The Pallas kernels target TPU; interpret mode is a correctness harness, not
+a performance path — benchmarking it would measure the Python interpreter.)
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels import ops
+
+
+def run():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(65536, 64)), jnp.float32)
+    qs = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    for metric in ("l2", "ip", "cos"):
+        out, dt = timed(
+            lambda: ops.batch_similarity_many(qs, x, metric).block_until_ready(),
+            warmup=2, reps=5)
+        flops = 2 * qs.shape[0] * x.shape[0] * x.shape[1]
+        emit(f"kernel/batch_similarity/{metric}", dt * 1e6,
+             f"gflops={flops/dt/1e9:.1f}")
+    cand = jnp.asarray(rng.normal(size=(1024, 64)), jnp.float32)
+    out, dt = timed(
+        lambda: ops.pairwise_adjacency(cand, 0.1, "cos").block_until_ready(),
+        warmup=2, reps=5)
+    emit("kernel/pairwise_adjacency/K1024", dt * 1e6,
+         f"pairs_per_s={1024*1024/dt:.2e}")
+    scores = jnp.asarray(np.sort(rng.normal(size=1024))[::-1], jnp.float32)
+    adj = ops.pairwise_adjacency(cand, 0.1, "cos")
+    out, dt = timed(
+        lambda: ops.greedy_diversify(scores, adj, 20)[0].block_until_ready(),
+        warmup=2, reps=5)
+    emit("kernel/greedy_diversify/K1024_k20", dt * 1e6, "")
+    ia = jnp.arange(256, dtype=jnp.int32)
+    sa = jnp.asarray(np.sort(rng.normal(size=256))[::-1], jnp.float32)
+    out, dt = timed(
+        lambda: ops.topk_merge(ia, sa, ia + 999, sa)[0].block_until_ready(),
+        warmup=2, reps=10)
+    emit("kernel/topk_merge/L256", dt * 1e6, "")
+
+
+if __name__ == "__main__":
+    run()

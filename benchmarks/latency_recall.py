@@ -1,0 +1,30 @@
+"""Figs. 12-14: latency-recall frontier as ef sweeps (PGS/PDS/PSS)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import datasets as D
+from benchmarks.common import emit, evaluate_method
+
+
+def run(num_queries: int = 8, n: int = D.N_DEFAULT,
+        efs=(5, 10, 20), datasets=("deep-like", "txt2img-like")):
+    settings = [(10, "medium"), (10, "low"), (15, "medium")]
+    for ds in datasets:
+        graph, x, metric = D.load_graph(ds, n=n)
+        queries = D.queries_for(x, num_queries)
+        for k, level in settings:
+            eps = D.calibrate_eps(x, metric, D.PHI_TARGETS[level])
+            cache: dict = {}
+            for method in ("pgs", "pds", "pss"):
+                for ef in efs:
+                    kw = dict(max_K=2048) if method == "pds" else {}
+                    lat, score, rec, _ = evaluate_method(
+                        graph, x, metric, queries, k, eps, method, ef,
+                        cache, **kw)
+                    emit(f"latrec/{ds}/k{k}/{level}/{method}/ef{ef}",
+                         lat * 1e6, f"recall={rec:.3f};score={score:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only table2,...]
+
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit). The first
+run builds + caches the HNSW indexes (a few minutes at N=20k on one core).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller N / fewer queries")
+    ap.add_argument("--only", default="",
+                    help="comma list: table2,table3,table4,fig8,latrec,"
+                         "kernels,batch")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (datasets, fig8_ipgreedy, kernel_bench,
+                            latency_recall, table2, table3, table4)
+
+    n = 6000 if args.quick else datasets.N_DEFAULT
+    nq = 3 if args.quick else 4
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    if only is None or "kernels" in only:
+        kernel_bench.run()
+    if only is None or "table2" in only:
+        table2.run(num_queries=nq, n=n)
+    if only is None or "table3" in only:
+        table3.run(num_queries=max(4, nq // 2), n=n)
+    if only is None or "table4" in only:
+        table4.run(num_queries=max(4, nq // 2), n=n)
+    if only is None or "fig8" in only:
+        fig8_ipgreedy.run(num_queries=max(4, nq // 2), n=n)
+    if only is not None and "latrec" in only:
+        latency_recall.run(num_queries=max(3, nq // 2), n=n)
+    if only is None or "batch" in only:
+        from benchmarks import batch_bench
+        batch_bench.run(n=n)
+    print(f"# total {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Table III: PDS/PSS vs exact div-A* on the l2 dataset, k in {5, 20}."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import datasets as D
+from benchmarks.common import emit, evaluate_method, oracle_for, timed
+
+
+def run(num_queries: int = 10, n: int = D.N_DEFAULT, ef: int = 15):
+    graph, x, metric = D.load_graph("deep-like", n=n)
+    queries = D.queries_for(x, num_queries)
+    for k in (5, 20):
+        for level in ("low", "medium"):
+            eps = D.calibrate_eps(x, metric, D.PHI_TARGETS[level])
+            cache: dict = {}
+            o_lat = []
+            for q in queries:
+                _, dt = timed(oracle_for, x, metric, q, k, eps, cache,
+                              warmup=0)
+                o_lat.append(dt)
+            emit(f"table3/k{k}/{level}/div-astar",
+                 float(np.mean(o_lat)) * 1e6, "recall=1.00")
+            for method in ("pds", "pss"):
+                kw = dict(max_K=1024) if method == "pds" else {}
+                lat, score, rec, extra = evaluate_method(
+                    graph, x, metric, queries, k, eps, method, ef, cache,
+                    **kw)
+                speed = float(np.mean(o_lat)) / max(lat, 1e-9)
+                emit(f"table3/k{k}/{level}/{method}", lat * 1e6,
+                     f"score={score:.4f};recall={rec:.3f};"
+                     f"speedup_vs_oracle={speed:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Elastic scaling demo: checkpoint on one mesh, resume on a smaller one.
+
+Runs itself twice under different XLA device counts (the controller role).
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import subprocess
+import sys
+
+PHASE = os.environ.get("ELASTIC_PHASE")
+
+if PHASE is None:
+    env = dict(os.environ)
+    for phase, devs in (("big", "8"), ("small", "4")):
+        env["ELASTIC_PHASE"] = phase
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devs}"
+        out = subprocess.run([sys.executable, __file__], env=env)
+        assert out.returncode == 0
+    print("elastic 8-device -> 4-device restart OK")
+    raise SystemExit(0)
+
+import jax  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.distributed import sharding as sh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.train import checkpoint as ckpt  # noqa: E402
+
+cfg = get_config("qwen2-1.5b").reduced()
+CKPT = "/tmp/repro_elastic_demo"
+if PHASE == "big":
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    params = M.init_params(cfg, jax.random.key(0))
+    specs = sh.to_named(sh.param_spec_tree(cfg, params, mesh), mesh)
+    params = jax.tree.map(lambda x, s: jax.device_put(x, s), params, specs)
+    ckpt.save(CKPT, 1, params)
+    print("phase=big: saved on", mesh.shape)
+else:
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    like = M.init_params(cfg, jax.random.key(0))
+    specs = sh.to_named(sh.param_spec_tree(cfg, like, mesh), mesh)
+    params = ckpt.restore(CKPT, 1, like, shardings=specs)
+    batch = M.make_batch(cfg, batch=4, seq=8, rng=jax.random.key(1))
+    print("phase=small: restored on", mesh.shape, "loss=",
+          float(M.loss_fn(cfg, params, batch)))

@@ -1,0 +1,26 @@
+"""Quickstart: build an index, run every diverse-search method, compare.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.api import diverse_search
+from repro.core.baselines import div_astar_oracle
+from repro.index.flat import build_knn_graph
+
+rng = np.random.default_rng(0)
+centers = rng.normal(size=(20, 32)) * 2.0
+X = (centers[rng.integers(0, 20, 5000)]
+     + rng.normal(size=(5000, 32)) * 0.4).astype(np.float32)
+
+print("building proximity graph over N=5000 ...")
+graph = build_knn_graph(X, metric="l2", M=8)
+
+q = X[123] + 0.05 * rng.normal(size=32).astype(np.float32)
+k, eps = 5, 0.0
+for method in ("greedy", "pgs", "pds", "pss"):
+    res = diverse_search(graph, q, k=k, eps=eps, method=method, ef=15)
+    print(f"{method:8s} ids={res.ids} total={res.total:.4f} "
+          f"K={res.stats.K_final} certified={res.stats.certified}")
+oracle = div_astar_oracle(X, "l2", q, k, eps)
+print(f"oracle   ids={oracle.ids} total={oracle.total:.4f}")

@@ -1,0 +1,141 @@
+"""Beam search (paper Alg. 1) and progressive beam search (paper §III) in JAX.
+
+Both are one ``lax.while_loop`` over a fixed-capacity queue:
+
+  * ``beam_search``            — classic Alg. 1: stop when the first ``L``
+                                  candidates are stable, return top-k.
+  * ``progressive_beam_search`` — the paper's modification: stop when the
+                                  first ``stable_limit`` (= K*ef) candidates
+                                  are stable; the queue AND the visited set
+                                  are threaded through calls so the search
+                                  resumes instead of restarting (queue reuse).
+  * the PSS variant (ProgressiveBeamSearch*, Alg. 4 line 6) is the same loop
+    with ``min_value``: expansion stops once the best unexpanded candidate's
+    score falls below ``min_value``.
+
+TPU adaptation (DESIGN.md §2): neighbor scoring is one gathered (M0, d) block
+scored in a single fused similarity op (the Pallas `batch_similarity` kernel
+on TPU; its jnp oracle here), not one dot product at a time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import queue as qmod
+from repro.core.graph import FlatGraph, descend
+from repro.core.queue import Queue
+from repro.kernels import ops as kops
+
+
+class SearchState(NamedTuple):
+    queue: Queue
+    visited: jnp.ndarray   # bool[N] — nodes already EXPANDED
+    steps: jnp.ndarray     # int32
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "use_descent"))
+def init_state(graph: FlatGraph, q: jnp.ndarray, capacity: int,
+               use_descent: bool = True) -> SearchState:
+    """Start state: queue seeded with the entry point (after HNSW descent)."""
+    entry = descend(graph, q) if use_descent and graph.num_upper_levels else graph.entry
+    s0 = kops.batch_similarity(q, graph.vectors[entry][None, :], graph.metric)[0]
+    queue = qmod.make_queue(capacity)
+    queue = Queue(
+        ids=queue.ids.at[0].set(entry.astype(jnp.int32)),
+        scores=queue.scores.at[0].set(s0.astype(jnp.float32)),
+        stable=queue.stable.at[0].set(False),
+    )
+    visited = jnp.zeros((graph.size,), dtype=jnp.bool_)
+    return SearchState(queue, visited, jnp.int32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("graph_metric",))
+def _search_loop(vectors, neighbors, qvec, state: SearchState,
+                 stable_limit, min_value, max_steps, graph_metric: str):
+    """Shared while-loop. ``stable_limit``/``min_value``/``max_steps`` traced."""
+
+    def cond(st: SearchState):
+        p, exists = qmod.first_unstable(st.queue, stable_limit)
+        score_ok = st.queue.scores[p] >= min_value
+        return exists & score_ok & (st.steps < max_steps)
+
+    def body(st: SearchState):
+        queue, visited, steps = st
+        p, _ = qmod.first_unstable(queue, stable_limit)
+        node = queue.ids[p]
+        queue = Queue(queue.ids, queue.scores, queue.stable.at[p].set(True))
+        visited = visited.at[node].set(True)
+
+        nbrs = neighbors[node]                       # int32[M0]
+        safe = jnp.maximum(nbrs, 0)
+        fresh = (nbrs >= 0) & ~visited[safe]
+        vecs = vectors[safe]                         # [M0, d]
+        sims = kops.batch_similarity(qvec, vecs, graph_metric)
+        queue = qmod.insert(queue, nbrs, sims, fresh)
+        return SearchState(queue, visited, steps + 1)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def run_search(graph: FlatGraph, q: jnp.ndarray, state: SearchState,
+               stable_limit, min_value=-jnp.inf, max_steps=None) -> SearchState:
+    if max_steps is None:
+        max_steps = 4 * state.queue.capacity + 64
+    return _search_loop(
+        graph.vectors, graph.neighbors, q, state,
+        jnp.asarray(stable_limit, jnp.int32),
+        jnp.asarray(min_value, jnp.float32),
+        jnp.asarray(max_steps, jnp.int32),
+        graph.metric,
+    )
+
+
+def beam_search(graph: FlatGraph, q: jnp.ndarray, k: int, L: int,
+                capacity: int | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Paper Alg. 1: plain beam search; returns (ids[k], scores[k])."""
+    if capacity is None:
+        capacity = L
+    state = init_state(graph, q, capacity)
+    state = run_search(graph, q, state, stable_limit=L)
+    return state.queue.ids[:k], state.queue.scores[:k]
+
+
+def progressive_beam_search(graph: FlatGraph, q: jnp.ndarray,
+                            state: SearchState, K, ef: int,
+                            min_value=-jnp.inf) -> SearchState:
+    """The paper's ProgressiveBeamSearch: resume until first K*ef stable."""
+    return run_search(graph, q, state, stable_limit=K * ef, min_value=min_value)
+
+
+@functools.partial(jax.jit, static_argnames=("new_capacity",))
+def rebuild_for_growth(graph: FlatGraph, q: jnp.ndarray, state: SearchState,
+                       new_capacity: int) -> SearchState:
+    """Exact queue rebuild when the driver grows capacity.
+
+    Fixed capacity can silently drop (a) unexpanded frontier nodes and
+    (b) expanded nodes that fell below the old capacity boundary. Expanded
+    nodes are exactly the ``visited`` set, so rebuilding from
+    (current queue entries) ∪ (visited nodes, rescored) reproduces the
+    unbounded-queue state of the paper exactly. O(|visited|) and only runs on
+    the rare growth events.
+    """
+    visited = state.visited
+    n = graph.size
+    all_ids = jnp.arange(n, dtype=jnp.int32)
+    vis_scores = kops.batch_similarity(q, graph.vectors, graph.metric)
+    # queue membership of every node (to keep 'unstable' flags of frontier)
+    in_queue = jnp.zeros((n,), jnp.bool_).at[jnp.maximum(state.queue.ids, 0)].set(
+        state.queue.ids >= 0)
+    frontier_unstable = jnp.zeros((n,), jnp.bool_).at[
+        jnp.maximum(state.queue.ids, 0)].set(
+        (state.queue.ids >= 0) & ~state.queue.stable)
+    member = visited | in_queue
+    ids = jnp.where(member, all_ids, -1)
+    scores = jnp.where(member, vis_scores, qmod.NEG_INF)
+    stable = ~frontier_unstable
+    new_queue = qmod.from_entries(ids, scores, stable, new_capacity)
+    return SearchState(new_queue, visited, state.steps)

@@ -1,0 +1,60 @@
+"""Diversity-graph construction over a candidate prefix (paper Def. 2).
+
+Thin orchestration over the ``pairwise_adjacency`` kernel, plus the
+incremental extension the paper uses in PDS/PSS ("incrementally updates the
+diversity graph from the previous iteration, modifying only the newly
+discovered nodes"): when the candidate prefix grows from K_old to K_new only
+the new rows/cols are computed.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.graph import FlatGraph
+from repro.kernels import ops as kops
+
+
+def build_adjacency(graph: FlatGraph, ids: jnp.ndarray, eps,
+                    impl: str | None = None) -> jnp.ndarray:
+    """Adjacency bool[K, K] among candidate ids (-1 = padding, masked out)."""
+    vecs = graph.vectors[jnp.maximum(ids, 0)]
+    valid = ids >= 0
+    return kops.pairwise_adjacency(vecs, eps, graph.metric, valid, impl=impl)
+
+
+def extend_adjacency(graph: FlatGraph, old_adj: jnp.ndarray,
+                     old_ids: jnp.ndarray, new_ids: jnp.ndarray, eps,
+                     impl: str | None = None) -> jnp.ndarray:
+    """Extend a K_old adjacency with newly discovered candidates.
+
+    ``new_ids`` is the FULL new prefix (length K_new >= K_old) whose first
+    K_old entries must equal ``old_ids``. Only the (K_new - K_old) new
+    rows/cols are computed fresh.
+    """
+    k_old = old_ids.shape[0]
+    k_new = new_ids.shape[0]
+    if k_new == k_old:
+        return old_adj
+    fresh = new_ids[k_old:]
+    fresh_vecs = graph.vectors[jnp.maximum(fresh, 0)]
+    all_vecs = graph.vectors[jnp.maximum(new_ids, 0)]
+    valid_new = new_ids >= 0
+    # sims of fresh rows vs ALL candidates (old + fresh)
+    sims = kops.batch_similarity_many(fresh_vecs, all_vecs, graph.metric,
+                                      impl=impl)
+    rows = (sims > eps) & valid_new[None, :] & (fresh >= 0)[:, None]
+    # kill diagonal within the fresh block
+    diag = jnp.arange(k_new - k_old)[:, None] + k_old == jnp.arange(k_new)[None, :]
+    rows = rows & ~diag
+    adj = jnp.zeros((k_new, k_new), bool)
+    adj = adj.at[:k_old, :k_old].set(old_adj)
+    adj = adj.at[k_old:, :].set(rows)
+    adj = adj.at[:, k_old:].set(rows.T)
+    return adj
+
+
+def degrees(adj: jnp.ndarray, valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    d = jnp.sum(adj, axis=1).astype(jnp.int32)
+    if valid is not None:
+        d = jnp.where(valid, d, 0)
+    return d

@@ -1,0 +1,107 @@
+"""Flat, fixed-shape proximity-graph representation consumed by JAX search.
+
+The numpy HNSW builder (``repro.index.hnsw``) emits:
+
+  vectors    f32[N, d]          the database
+  neighbors  int32[N, M0]       level-0 adjacency, -1 padded
+  upper      int32[Lu, N, Mu]   upper-level adjacency (rows of non-member
+                                nodes are all -1); may have Lu == 0
+  entry      int32              entry node at the top level
+
+``metric`` travels as static aux data so jitted searchers specialize on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.similarity import query_sim
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FlatGraph:
+    vectors: jnp.ndarray
+    neighbors: jnp.ndarray
+    upper: jnp.ndarray
+    entry: jnp.ndarray
+    metric: str = dataclasses.field(metadata=dict(static=True), default="l2")
+
+    @property
+    def size(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def degree(self) -> int:
+        return self.neighbors.shape[1]
+
+    @property
+    def num_upper_levels(self) -> int:
+        return self.upper.shape[0]
+
+
+def make_flat_graph(vectors: Any, neighbors: Any, upper: Any | None,
+                    entry: int, metric: str) -> FlatGraph:
+    vectors = jnp.asarray(vectors, dtype=jnp.float32)
+    neighbors = jnp.asarray(neighbors, dtype=jnp.int32)
+    if upper is None or (hasattr(upper, "shape") and upper.shape[0] == 0):
+        upper = jnp.zeros((0, vectors.shape[0], 1), dtype=jnp.int32)
+    else:
+        upper = jnp.asarray(upper, dtype=jnp.int32)
+    return FlatGraph(vectors, neighbors, upper,
+                     jnp.asarray(entry, dtype=jnp.int32), metric)
+
+
+def descend(graph: FlatGraph, q: jnp.ndarray) -> jnp.ndarray:
+    """Greedy top-down descent through the upper HNSW levels.
+
+    Returns the level-0 entry node for query ``q``. Each level runs a greedy
+    walk: move to the best-scoring neighbor while it improves.
+    """
+    cur = graph.entry
+    cur_sim = query_sim(q, graph.vectors[cur][None, :], graph.metric)[0]
+
+    def level_walk(level_nbrs, cur, cur_sim):
+        def cond(state):
+            _, _, improved, steps = state
+            return improved & (steps < graph.size)
+
+        def body(state):
+            cur, cur_sim, _, steps = state
+            nbrs = level_nbrs[cur]
+            valid = nbrs >= 0
+            vecs = graph.vectors[jnp.maximum(nbrs, 0)]
+            sims = query_sim(q, vecs, graph.metric)
+            sims = jnp.where(valid, sims, -jnp.inf)
+            j = jnp.argmax(sims)
+            better = sims[j] > cur_sim
+            new_cur = jnp.where(better, nbrs[j], cur)
+            new_sim = jnp.where(better, sims[j], cur_sim)
+            return new_cur, new_sim, better, steps + 1
+
+        cur, cur_sim, _, _ = jax.lax.while_loop(
+            cond, body, (cur, cur_sim, jnp.bool_(True), jnp.int32(0)))
+        return cur, cur_sim
+
+    for lvl in range(graph.num_upper_levels):
+        # upper[0] is the TOP level; walk down.
+        cur, cur_sim = level_walk(graph.upper[lvl], cur, cur_sim)
+    return cur
+
+
+def to_host(graph: FlatGraph) -> dict:
+    return dict(
+        vectors=np.asarray(graph.vectors),
+        neighbors=np.asarray(graph.neighbors),
+        upper=np.asarray(graph.upper),
+        entry=int(graph.entry),
+        metric=graph.metric,
+    )

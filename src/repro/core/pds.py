@@ -1,0 +1,72 @@
+"""Progressive Degree Search — paper Algorithm 3 (Theorem 1 stopping rule).
+
+Stabilize K*ef candidates, build G^eps over the first K, recompute
+K <- sum over the k-1 highest degrees (phi_v + 1) + 1, and loop until the
+first K*ef candidates are already stable. Then one div-A* call returns the
+certified-optimal diverse set over the candidates.
+
+The paper reports (its §IV-B, Table IV) that this estimate explodes at high
+diversification — the driver honours that with ``max_K`` and flags the query
+N/A (exactly how the paper reports those cells).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import div_astar as da
+from repro.core.diversity_graph import build_adjacency, degrees, extend_adjacency
+from repro.core.graph import FlatGraph
+from repro.core.pgs import DiverseResult
+from repro.core.progressive import ProgressiveDriver
+from repro.core.theorems import theorem1_K
+
+
+def pds(graph: FlatGraph, q, k: int, eps: float, ef: int = 40,
+        max_K: int | None = None, max_iters: int = 64,
+        max_expansions: int = 400_000) -> DiverseResult:
+    driver = ProgressiveDriver(graph, q, ef, k)
+    n = graph.size
+    max_K = max_K or n
+    K = k
+    adj = None
+    prev_ids = None
+    for _ in range(max_iters):
+        stable = driver.ensure_stable(K * ef)
+        ids, scores = driver.prefix(K)
+        if adj is not None and prev_ids is not None and K >= prev_ids.shape[0] \
+                and bool(jnp.all(ids[: prev_ids.shape[0]] == prev_ids)):
+            adj = extend_adjacency(graph, adj, prev_ids, ids, eps)
+        else:
+            adj = build_adjacency(graph, ids, eps)
+        prev_ids = ids
+        K_new = int(theorem1_K(degrees(adj, ids >= 0), k))
+        K_new = min(K_new, n)
+        if K_new > max_K:
+            driver.stats.exhausted = True
+            break
+        if stable >= min(K_new * ef, n):
+            K = K_new
+            break
+        K = K_new
+        if stable < min(K * ef, n) and stable == driver.stable_prefix_len() \
+                and stable >= n:
+            break
+
+    ids, scores = driver.prefix(K)
+    if prev_ids is not None and K >= prev_ids.shape[0] and \
+            bool(jnp.all(ids[: prev_ids.shape[0]] == prev_ids)):
+        adj = extend_adjacency(graph, adj, prev_ids, ids, eps)
+    else:
+        adj = build_adjacency(graph, ids, eps)
+    res = da.div_astar(jnp.where(ids >= 0, scores, -jnp.inf), adj, k,
+                       max_expansions=max_expansions)
+    driver.stats.div_calls += 1
+    driver.stats.certified = bool(res.complete) and not driver.stats.exhausted
+    driver.stats.K_final = K
+    sel = np.asarray(res.best_sets[k - 1])
+    ids_np, sc_np = np.asarray(ids), np.asarray(scores)
+    out_ids = np.where(sel >= 0, ids_np[np.maximum(sel, 0)], -1)
+    out_sc = np.where(sel >= 0, sc_np[np.maximum(sel, 0)], 0.0)
+    return DiverseResult(out_ids.astype(np.int32), out_sc.astype(np.float32),
+                         float(out_sc.sum()), driver.stats)

@@ -1,0 +1,107 @@
+"""Progressive-search driver: host-side orchestration shared by PGS/PDS/PSS.
+
+The paper's progressive framework alternates device-side search bursts with
+host-side diversification decisions (pause / inspect / resume). The driver
+owns the capacity policy: the queue is fixed-capacity for jit, and on the
+rare growth events the state is rebuilt *exactly* (see
+``beam_search.rebuild_for_growth``) so semantics match the unbounded queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import beam_search as bs
+from repro.core.graph import FlatGraph
+from repro.core.queue import stable_count as q_stable_count
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (int(x) - 1)).bit_length()
+
+
+@dataclasses.dataclass
+class SearchStats:
+    expansions: int = 0
+    growths: int = 0
+    search_calls: int = 0
+    div_calls: int = 0
+    certified: bool = False
+    exhausted: bool = False
+    K_final: int = 0
+
+
+class ProgressiveDriver:
+    """Owns one query's progressive search state across pause/resume cycles."""
+
+    def __init__(self, graph: FlatGraph, q, ef: int, k: int,
+                 capacity0: int | None = None, max_capacity: int | None = None):
+        self.graph = graph
+        self.q = jnp.asarray(q, jnp.float32)
+        self.ef = ef
+        self.k = k
+        n = graph.size
+        if capacity0 is None:
+            capacity0 = min(_next_pow2(max(2 * k * ef, 256)), _next_pow2(n))
+        self.max_capacity = max_capacity or _next_pow2(n)
+        self.state = bs.init_state(graph, self.q, capacity0)
+        self.stats = SearchStats()
+        self._last_stable = -1
+
+    @property
+    def capacity(self) -> int:
+        return self.state.queue.capacity
+
+    def _grow_to(self, cap: int) -> None:
+        cap = min(_next_pow2(cap), self.max_capacity)
+        if cap <= self.capacity:
+            return
+        self.state = bs.rebuild_for_growth(self.graph, self.q, self.state, cap)
+        self.stats.growths += 1
+
+    def ensure_stable(self, target: int, min_value=-np.inf) -> int:
+        """Resume search until the first ``target`` candidates are stable
+        (or expansion scores drop below ``min_value`` / graph exhausts).
+        Returns the stable prefix length."""
+        target = int(min(target, self.graph.size))
+        if target + 8 > self.capacity:
+            self._grow_to(int(target * 1.5) + 64)
+        steps_before = int(self.state.steps)
+        self.state = bs.run_search(self.graph, self.q, self.state,
+                                   stable_limit=min(target, self.capacity),
+                                   min_value=min_value)
+        self.stats.search_calls += 1
+        self.stats.expansions += int(self.state.steps) - steps_before
+        stable = int(q_stable_count(self.state.queue))
+        self._last_stable = stable
+        return stable
+
+    def expand_until_below(self, min_value: float) -> int:
+        """PSS's ProgressiveBeamSearch*: expand while the frontier score is
+        >= min_value; grows capacity as needed. Returns stable count."""
+        while True:
+            stable = self.ensure_stable(self.capacity, min_value=min_value)
+            # done if frontier dropped below min_value or graph exhausted
+            if stable < self.capacity or self.capacity >= self.max_capacity:
+                return stable
+            self._grow_to(self.capacity * 2)
+
+    def prefix(self, K: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """First K candidate (ids, scores), padded to a shape bucket.
+
+        Entries beyond K are masked out (id=-1, score=-inf) so downstream
+        consumers see exactly the first-K semantics, while the padded shape
+        keeps the number of distinct jit signatures logarithmic in K.
+        """
+        K = int(min(K, self.capacity))
+        bucket = min(max(64, _next_pow2(K)), self.capacity)
+        ids = self.state.queue.ids[:bucket]
+        scores = self.state.queue.scores[:bucket]
+        keep = jnp.arange(bucket) < K
+        return (jnp.where(keep, ids, -1),
+                jnp.where(keep, scores, -jnp.inf))
+
+    def stable_prefix_len(self) -> int:
+        return int(q_stable_count(self.state.queue))

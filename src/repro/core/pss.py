@@ -1,0 +1,70 @@
+"""Progressive Score Search — paper Algorithm 4 (Theorem 2 early stop).
+
+Phase 1 runs PGS (guarantees a size-k diverse set exists among the
+candidates and warm-starts the queue). Each round then:
+  1. builds G^eps over the first K candidates (incremental extension),
+  2. runs div-A* for the optimal sets of sizes 1..k,
+  3. computes minValue = min_i (S_k - S_i)/(k - i)  (Theorem 2),
+  4. stops if minValue > s_K — the result is then certified optimal over the
+     whole database (under the paper's 100%-recall beam assumption);
+     otherwise resumes ProgressiveBeamSearch* until the frontier score drops
+     below minValue and sets K <- stable_count // ef.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import div_astar as da
+from repro.core.diversity_graph import build_adjacency, extend_adjacency
+from repro.core.graph import FlatGraph
+from repro.core.pgs import DiverseResult, pgs
+from repro.core.progressive import ProgressiveDriver
+from repro.core.theorems import theorem2_min_value
+
+
+def pss(graph: FlatGraph, q, k: int, eps: float, ef: int = 40,
+        max_iters: int = 64, max_expansions: int = 400_000) -> DiverseResult:
+    pgs_res, driver, K = pgs(graph, q, k, eps, ef)
+    n = graph.size
+    adj = None
+    prev_ids = None
+    best = pgs_res  # fallback if certification never fires
+    for it in range(max_iters):
+        K = max(k, min(K, n))
+        ids, scores = driver.prefix(K)
+        if adj is not None and prev_ids is not None \
+                and K >= prev_ids.shape[0] \
+                and bool(jnp.all(ids[: prev_ids.shape[0]] == prev_ids)):
+            adj = extend_adjacency(graph, adj, prev_ids, ids, eps)
+        else:
+            adj = build_adjacency(graph, ids, eps)
+        prev_ids = ids
+        res = da.div_astar(jnp.where(ids >= 0, scores, -jnp.inf), adj, k,
+                           max_expansions=max_expansions)
+        driver.stats.div_calls += 1
+        if np.isfinite(float(res.best_scores[k - 1])):
+            sel = np.asarray(res.best_sets[k - 1])
+            ids_np, sc_np = np.asarray(ids), np.asarray(scores)
+            out_ids = np.where(sel >= 0, ids_np[np.maximum(sel, 0)], -1)
+            out_sc = np.where(sel >= 0, sc_np[np.maximum(sel, 0)], 0.0)
+            best = DiverseResult(out_ids.astype(np.int32),
+                                 out_sc.astype(np.float32),
+                                 float(out_sc.sum()), driver.stats)
+        min_value = float(theorem2_min_value(res.best_scores, k))
+        s_K = float(scores[K - 1]) if K <= ids.shape[0] else -np.inf
+        if min_value > s_K:
+            driver.stats.certified = bool(res.complete)
+            break
+        if driver.stats.exhausted or K >= n:
+            break
+        stable_before = driver.stable_prefix_len()
+        stable = driver.expand_until_below(min_value)
+        if stable <= stable_before:  # no progress — graph exhausted
+            driver.stats.exhausted = True
+            if stable >= n or driver.capacity >= driver.max_capacity:
+                K = min(stable, n)
+                continue
+        K = max(k, stable // ef)
+    driver.stats.K_final = K
+    return best._replace(stats=driver.stats)

@@ -1,0 +1,135 @@
+"""Fixed-capacity candidate queue (the paper's ``C``), jit/vmap-safe.
+
+The paper's progressive beam search keeps an *unbounded* sorted candidate
+queue (its §III-C-3 names the resulting insert cost as a limitation). On TPU
+every shape must be static, so we keep a fixed-capacity queue sorted in
+descending score order:
+
+  ids    int32[C]   (-1 = empty slot)
+  scores f32[C]     (-inf for empty slots)
+  stable bool[C]    (True = already expanded; padding is marked stable)
+
+Capacity growth is handled by the *driver* (host side): the progressive
+drivers double the capacity and rebuild the queue exactly (see
+``repro.core.progressive``), so fixed capacity never changes the algorithm's
+semantics relative to the unbounded queue.
+
+Sorting is deterministic: primary key score (desc), secondary key id (asc),
+so ties cannot make tests flaky.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+class Queue(NamedTuple):
+    ids: jnp.ndarray     # int32[C]
+    scores: jnp.ndarray  # float32[C]
+    stable: jnp.ndarray  # bool[C]
+
+    @property
+    def capacity(self) -> int:
+        return self.ids.shape[-1]
+
+
+def make_queue(capacity: int) -> Queue:
+    return Queue(
+        ids=jnp.full((capacity,), -1, dtype=jnp.int32),
+        scores=jnp.full((capacity,), NEG_INF, dtype=jnp.float32),
+        stable=jnp.ones((capacity,), dtype=jnp.bool_),
+    )
+
+
+def _sort_desc(ids: jnp.ndarray, scores: jnp.ndarray, stable: jnp.ndarray):
+    """Deterministic descending sort by (score desc, id asc)."""
+    # jnp.lexsort: last key is primary. id asc breaks ties; empty slots
+    # (id=-1, score=-inf) sort to the back because of -inf scores.
+    order = jnp.lexsort((ids, -scores))
+    return ids[order], scores[order], stable[order]
+
+
+def sort_queue(q: Queue) -> Queue:
+    i, s, st = _sort_desc(q.ids, q.scores, q.stable)
+    return Queue(i, s, st)
+
+
+def insert(q: Queue, new_ids: jnp.ndarray, new_scores: jnp.ndarray,
+           new_mask: jnp.ndarray) -> Queue:
+    """Insert a batch of candidates, dedup against queue, truncate to capacity.
+
+    new_ids int32[M], new_scores f32[M], new_mask bool[M] (False = skip).
+    New entries arrive unstable. Entries already present in the queue are
+    dropped (a node is only scored once per presence; expanded nodes are
+    excluded upstream via the visited set).
+    """
+    cap = q.capacity
+    # Dedup: [M, C] comparison against current ids.
+    dup = jnp.any(new_ids[:, None] == q.ids[None, :], axis=1)
+    # ... and within the incoming batch (keep the first occurrence)
+    m = new_ids.shape[0]
+    earlier = (new_ids[:, None] == new_ids[None, :]) & (
+        jnp.arange(m)[None, :] < jnp.arange(m)[:, None])
+    dup = dup | jnp.any(earlier & new_mask[None, :], axis=1)
+    keep = new_mask & ~dup & (new_ids >= 0)
+    ids = jnp.where(keep, new_ids, -1).astype(jnp.int32)
+    scores = jnp.where(keep, new_scores, NEG_INF).astype(jnp.float32)
+    stable = jnp.where(keep, False, True)
+
+    all_ids = jnp.concatenate([q.ids, ids])
+    all_scores = jnp.concatenate([q.scores, scores])
+    all_stable = jnp.concatenate([q.stable, stable])
+    i, s, st = _sort_desc(all_ids, all_scores, all_stable)
+    return Queue(i[:cap], s[:cap], st[:cap])
+
+
+def first_unstable(q: Queue, limit: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Index of the first unstable valid entry among the first ``limit`` slots.
+
+    Returns (p, exists). ``limit`` may be a traced scalar.
+    """
+    pos = jnp.arange(q.capacity)
+    mask = (~q.stable) & (q.ids >= 0) & (pos < limit)
+    exists = jnp.any(mask)
+    p = jnp.argmax(mask)  # first True (argmax returns first max index)
+    return p, exists
+
+
+def stable_count(q: Queue) -> jnp.ndarray:
+    """Number of leading entries that are stable and valid (the paper's K*ef)."""
+    ok = q.stable & (q.ids >= 0)
+    # length of the leading run of True
+    run = jnp.cumprod(ok.astype(jnp.int32))
+    return jnp.sum(run)
+
+
+def valid_count(q: Queue) -> jnp.ndarray:
+    return jnp.sum(q.ids >= 0)
+
+
+def grow(q: Queue, new_capacity: int) -> Queue:
+    """Return a copy with larger capacity (host-side driver utility)."""
+    assert new_capacity >= q.capacity
+    pad = new_capacity - q.capacity
+    return Queue(
+        ids=jnp.concatenate([q.ids, jnp.full((pad,), -1, jnp.int32)]),
+        scores=jnp.concatenate([q.scores, jnp.full((pad,), NEG_INF, jnp.float32)]),
+        stable=jnp.concatenate([q.stable, jnp.ones((pad,), jnp.bool_)]),
+    )
+
+
+def from_entries(ids: jnp.ndarray, scores: jnp.ndarray, stable: jnp.ndarray,
+                 capacity: int) -> Queue:
+    """Build a queue of the given capacity from (possibly unsorted) entries."""
+    n = ids.shape[0]
+    if n < capacity:
+        pad = capacity - n
+        ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)])
+        scores = jnp.concatenate([scores, jnp.full((pad,), NEG_INF, jnp.float32)])
+        stable = jnp.concatenate([stable, jnp.ones((pad,), jnp.bool_)])
+    i, s, st = _sort_desc(ids, scores, stable)
+    return Queue(i[:capacity], s[:capacity], st[:capacity])

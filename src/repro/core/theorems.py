@@ -1,0 +1,57 @@
+"""The paper's Theorems 1-3 as executable predicates.
+
+Theorem 1 (degree bound, PDS): if K >= sum_{v in Phi}(phi_v + 1) + 1 where
+Phi holds the k-1 highest-degree nodes of G^eps over the top-K candidates,
+the top-K candidates suffice to contain the optimal diverse set.
+
+Theorem 2 (score bound, PSS): with optimal sizes-1..k scores S_1..S_k over
+the top-K candidates and s_K the K-th candidate score, if
+min_{0<i<k} (S_k - S_i)/(k - i) > s_K the current R_k is globally optimal.
+
+Theorem 3 (recall bound): Recall_P >= (1 - K*lambda/(K-k+1))^k.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def theorem1_K(degrees: jnp.ndarray, k: int,
+               valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Sufficient candidate count K from node degrees of G^eps."""
+    deg = degrees.astype(jnp.int32)
+    if valid is not None:
+        deg = jnp.where(valid, deg, -1)
+    if k <= 1:
+        return jnp.int32(1)
+    topk = jnp.sort(deg)[::-1][: k - 1]
+    topk = jnp.maximum(topk, 0)  # fewer than k-1 valid nodes: treat as deg 0
+    return (jnp.sum(topk + 1) + 1).astype(jnp.int32)
+
+
+def theorem2_min_value(best_scores: jnp.ndarray, k: int) -> jnp.ndarray:
+    """minValue = min_{0<i<k} (S_k - S_i)/(k-i); +inf when k == 1.
+
+    best_scores[i] = optimal total score of size i+1 (may be -inf when that
+    size is infeasible within the candidates — those i are skipped, matching
+    the paper's assumption that sets of all sizes exist).
+    """
+    if k <= 1:
+        return jnp.float32(jnp.inf)
+    s_k = best_scores[k - 1]
+    i = jnp.arange(1, k)  # sizes 1..k-1
+    s_i = best_scores[: k - 1]
+    gaps = (s_k - s_i) / (k - i)
+    gaps = jnp.where(jnp.isfinite(s_i), gaps, jnp.inf)
+    return jnp.min(gaps)
+
+
+def theorem2_holds(best_scores: jnp.ndarray, k: int, s_K) -> jnp.ndarray:
+    return theorem2_min_value(best_scores, k) > s_K
+
+
+def theorem3_recall_bound(K: float, k: int, lam: float) -> float:
+    """Lower bound on the diverse-search recall given Ak-NNS recall 1-lam."""
+    if K - k + 1 <= 0:
+        return 0.0
+    base = 1.0 - (K * lam) / (K - k + 1)
+    return max(0.0, base) ** k

@@ -1,0 +1,41 @@
+"""Elastic scaling: move a training state between differently-sized meshes.
+
+Checkpoints are logical (keyed by param path, device-layout-free), so
+elastic restore = rebuild shardings for the new mesh and device_put. This
+module adds the in-memory variant (``reshard_tree``) and the planning helper
+(``plan``) a controller would call when the fleet grows/shrinks:
+
+    new_mesh = make_mesh((new_dp, new_tp), ("data", "model"))
+    params = reshard_tree(params, cfg, new_mesh)
+
+Works for any mesh whose axis sizes still divide the sharded dims — the
+same divisibility rules the baseline sharding layer enforces.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as sh
+
+
+def plan(cfg: ModelConfig, old_mesh, new_mesh) -> dict:
+    """Summary of what changes between meshes (for logs/controllers)."""
+    return dict(
+        old=dict(zip(old_mesh.axis_names, old_mesh.devices.shape)),
+        new=dict(zip(new_mesh.axis_names, new_mesh.devices.shape)),
+        dp_change=new_mesh.shape.get("data", 1) / old_mesh.shape.get("data", 1),
+        tp_change=new_mesh.shape.get("model", 1)
+        / old_mesh.shape.get("model", 1),
+    )
+
+
+def reshard_tree(tree: Any, cfg: ModelConfig, new_mesh,
+                 spec_fn=sh.param_spec_tree) -> Any:
+    """Re-place a (param-like) tree onto ``new_mesh`` per the sharding rules."""
+    specs = spec_fn(cfg, tree, new_mesh)
+    shards = sh.to_named(specs, new_mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(jax.numpy.asarray(x), s), tree, shards)

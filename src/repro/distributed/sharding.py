@@ -1,0 +1,256 @@
+"""Sharding rules: map every param/cache/batch leaf to a PartitionSpec.
+
+Baseline policy (the §Perf starting point — deliberately simple and always
+divisibility-safe):
+
+  * batch/data-parallel over ("pod", "data") for all activations;
+  * Megatron-style tensor parallel over "model" for MLP hidden, MoE experts,
+    SSM channels, RG-LRU width, and the vocab dim (when divisible by the
+    model-axis size);
+  * attention q-heads shard over "model" only when the head count divides
+    the axis; kv projections shard at kv-head granularity when divisible,
+    else stay replicated (MQA/GQA with few kv heads).
+
+Rules are name-based over the param tree paths emitted by the model inits.
+``pad_heads`` (a §Perf hillclimb lever) is applied at the model level, not
+here.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _bat(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _div(n: int, m: int) -> bool:
+    return n % m == 0
+
+
+def param_spec_tree(cfg: ModelConfig, params: Any, mesh: Mesh,
+                    fsdp: bool = False):
+    """PartitionSpec pytree matching ``params`` (works on abstract trees).
+
+    ``fsdp``: additionally shard every large weight over the "data" axis on
+    a free (unsharded, divisible) dim — ZeRO-3-style; parameters and both
+    Adam moments then scale 1/(data*model). XLA inserts the per-layer
+    just-in-time all-gathers; the §Perf log prices that traffic.
+    """
+    ms = _model_size(mesh)
+    bat = _bat(mesh)          # ("pod", "data") on the multi-pod mesh
+    ds = 1
+    for a in bat:
+        ds *= mesh.shape[a]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def fsdpify(spec: P, shape) -> P:
+        if not fsdp:
+            return spec
+        n = 1
+        for d in shape:
+            n *= d
+        if n < (1 << 20):
+            return spec
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (dim, sp) in enumerate(zip(shape, parts)):
+            if sp is None and dim % ds == 0 and dim >= ds:
+                parts[i] = bat if len(bat) > 1 else bat[0]
+                return P(*parts)
+        return spec
+
+    def leaf_spec(path, leaf) -> P:
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        name = names[-1]
+        joined = "/".join(str(n) for n in names)
+        shape = leaf.shape
+        rank = len(shape)
+
+        def last_dims(spec_tail: tuple) -> P:
+            """Pad spec with leading Nones for stack dims."""
+            lead = rank - len(spec_tail)
+            return P(*([None] * lead + list(spec_tail)))
+
+        # ---- embeddings / heads
+        if name == "embed":
+            return P("model", None) if _div(shape[0], ms) else P(None, None)
+        if name == "lm_head":
+            return P(None, "model") if _div(shape[1], ms) else P(None, None)
+        if name == "dec_pos":
+            return P(None, None)
+
+        # ---- attention projections
+        if name in ("wq",):
+            return last_dims((None, "model")) if _div(h, ms) \
+                else last_dims((None, None))
+        if name in ("bq",):
+            return last_dims(("model",)) if _div(h, ms) else last_dims((None,))
+        if name in ("wk", "wv"):
+            return last_dims((None, "model")) if _div(kv, ms) \
+                else last_dims((None, None))
+        if name in ("bk", "bv"):
+            return last_dims(("model",)) if _div(kv, ms) else last_dims((None,))
+        if name == "wo":
+            return last_dims(("model", None)) if _div(h, ms) \
+                else last_dims((None, None))
+
+        # ---- MoE (expert parallel; router replicated)
+        if name == "wr":
+            return last_dims((None, None))
+        if "moe" in joined and name in ("wg", "wu", "wd"):
+            return last_dims(("model", None, None)) \
+                if _div(cfg.num_experts, ms) else last_dims((None,) * 3)
+
+        # ---- dense MLP (column/row parallel)
+        if name in ("wg", "wu", "w1"):
+            return last_dims((None, "model")) if _div(shape[-1], ms) \
+                else last_dims((None, None))
+        if name in ("b1",):
+            return last_dims(("model",)) if _div(shape[-1], ms) \
+                else last_dims((None,))
+        if name in ("wd", "w2"):
+            return last_dims(("model", None)) if _div(shape[-2], ms) \
+                else last_dims((None, None))
+        if name in ("b2",):
+            return last_dims((None,))
+
+        # ---- SSM (channel parallel)
+        if name == "w_in":
+            return last_dims((None, "model")) if _div(shape[-1], ms) \
+                else last_dims((None, None))
+        if name in ("conv_w", "conv_b", "norm_scale"):
+            return last_dims((None,) * (1 if name != "conv_w" else 2)) \
+                if not _div(shape[-1], ms) else (
+                    last_dims(("model",)) if name != "conv_w"
+                    else last_dims((None, "model")))
+        if name in ("A_log", "dt_bias", "D_skip"):
+            return last_dims(("model",)) if _div(shape[-1], ms) \
+                else last_dims((None,))
+        if name == "w_out":
+            return last_dims(("model", None)) if _div(shape[-2], ms) \
+                else last_dims((None, None))
+
+        # ---- RG-LRU
+        if name in ("w_gate", "w_branch"):
+            return last_dims((None, "model")) if _div(shape[-1], ms) \
+                else last_dims((None, None))
+        if name in ("w_r", "w_i"):
+            return last_dims(("model", None)) if _div(shape[-2], ms) \
+                else last_dims((None, None))
+        if name in ("b_r", "b_i", "lam"):
+            return last_dims(("model",)) if _div(shape[-1], ms) \
+                else last_dims((None,))
+
+        # ---- norms, gates, scalars
+        return P(*([None] * rank))
+
+    def leaf_spec_fsdp(path, leaf):
+        return fsdpify(leaf_spec(path, leaf), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec_fsdp, params)
+
+
+def batch_axes_for(b: int, mesh: Mesh,
+                   reserve_model: bool = False) -> tuple[str, ...]:
+    """Largest prefix of (pod, data[, model]) whose product divides b.
+
+    Sharding the batch over "model" too (when divisible) makes attention
+    compute fully local — no head-divisibility constraint — and scales
+    activation memory by 1/mesh_size; tensor-parallel weight shards still
+    contract correctly against batch-sharded activations.
+    ``reserve_model``: MoE models keep the model axis free so the expert
+    (EP) dimension can live there.
+    """
+    axes: list[str] = []
+    prod = 1
+    tail = () if reserve_model else ("model",)
+    for a in _bat(mesh) + tail:
+        n = mesh.shape[a]
+        if b % (prod * n) == 0:
+            axes.append(a)
+            prod *= n
+        else:
+            break
+    return tuple(axes)
+
+
+def batch_spec_tree(cfg: ModelConfig, batch: Any, mesh: Mesh):
+    reserve = cfg.num_experts > 0
+    def leaf(path, leaf):
+        rank = len(leaf.shape)
+        axes = batch_axes_for(leaf.shape[0], mesh, reserve_model=reserve)
+        return P(axes, *([None] * (rank - 1)))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch)
+
+
+def cache_spec_tree(cfg: ModelConfig, cache: Any, mesh: Mesh):
+    """Decode cache: batch over data axes; kv-heads over model if divisible.
+
+    Cache layouts (transformer.init_cache): [stack..., B, S, KV, hd] for k/v,
+    [stack..., B, ...] for states, cache_len [B].
+    """
+    ms = _model_size(mesh)
+
+    def leaf(path, leaf):
+        names = [str(getattr(p, "key", "")) for p in path]
+        name = names[-1]
+        shape = leaf.shape
+        if name == "cache_len":
+            return P(batch_axes_for(shape[0], mesh))
+        if name in ("k", "v", "cross_k", "cross_v") or name.endswith("_k") \
+                or name.endswith("_v"):
+            # [..., B, S, KV, hd]: kv-heads over model when divisible, else
+            # the cache SEQUENCE dim — SPMD partitions the attention
+            # contraction (softmax max/sum become small all-reduces), which
+            # trades a little collective time for 1/16th the cache memory.
+            lead = len(shape) - 4
+            kv = shape[-2]
+            bat = batch_axes_for(shape[lead], mesh)
+            if kv % ms == 0 and "model" not in bat:
+                return P(*([None] * lead), bat, None, "model", None)
+            if shape[-3] % ms == 0 and "model" not in bat:
+                return P(*([None] * lead), bat, "model", None, None)
+            return P(*([None] * lead), bat, None, None, None)
+        if name in ("lru_h",) or name.endswith("_h"):
+            lead = len(shape) - 2
+            w = shape[-1]
+            bat = batch_axes_for(shape[lead], mesh)
+            return P(*([None] * lead), bat,
+                     "model" if (w % ms == 0 and "model" not in bat) else None)
+        if name == "conv" or name.endswith("_conv"):
+            lead = len(shape) - 3
+            c = shape[-1]
+            bat = batch_axes_for(shape[lead], mesh)
+            return P(*([None] * lead), bat, None,
+                     "model" if (c % ms == 0 and "model" not in bat) else None)
+        if name == "h":  # ssm state [L, B, H, P, N]
+            lead = len(shape) - 4
+            nh = shape[-3]
+            bat = batch_axes_for(shape[lead], mesh)
+            return P(*([None] * lead), bat,
+                     "model" if (nh % ms == 0 and "model" not in bat)
+                     else None, None, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def to_named(spec_tree: Any, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def bytes_of(tree: Any) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(tree))

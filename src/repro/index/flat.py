@@ -1,0 +1,210 @@
+"""Exact (brute-force) index — the recall/ground-truth oracle.
+
+Also provides the fast KNN-graph proximity index (``build_knn_graph``): exact
+top-(M+1) neighbors via blocked matmul + Vamana-style alpha pruning + reverse
+edges. Functionally comparable to HNSW level-0 but built in O(N^2 d / block)
+vectorized work, which is what the 1-core container can afford at N >= 50k
+(DESIGN.md §2). Both emit ``FlatGraph`` so every searcher runs on either.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import FlatGraph, make_flat_graph
+
+
+def _sims_block(q_block: np.ndarray, x: np.ndarray, metric: str) -> np.ndarray:
+    dots = q_block @ x.T
+    if metric == "ip":
+        return dots
+    if metric == "cos":
+        qn = np.maximum(np.linalg.norm(q_block, axis=1, keepdims=True), 1e-12)
+        xn = np.maximum(np.linalg.norm(x, axis=1), 1e-12)
+        return dots / (qn * xn[None, :])
+    if metric == "l2":
+        q2 = np.einsum("nd,nd->n", q_block, q_block)[:, None]
+        x2 = np.einsum("nd,nd->n", x, x)[None, :]
+        return 1.0 - np.sqrt(np.maximum(q2 + x2 - 2.0 * dots, 0.0))
+    raise ValueError(metric)
+
+
+def exact_topk(queries: np.ndarray, x: np.ndarray, k: int, metric: str,
+               block: int = 256) -> tuple[np.ndarray, np.ndarray]:
+    """Exact top-k (ids, scores) per query; deterministic id tie-break."""
+    queries = np.atleast_2d(np.asarray(queries, np.float32))
+    out_ids = np.empty((queries.shape[0], k), np.int32)
+    out_scores = np.empty((queries.shape[0], k), np.float32)
+    for s in range(0, queries.shape[0], block):
+        sims = _sims_block(queries[s:s + block], x, metric)
+        # lexicographic: score desc, id asc
+        order = np.lexsort((np.arange(x.shape[0])[None, :].repeat(
+            sims.shape[0], 0), -sims), axis=1)[:, :k]
+        out_ids[s:s + block] = order
+        out_scores[s:s + block] = np.take_along_axis(sims, order, axis=1)
+    return out_ids, out_scores
+
+
+def build_knn_graph(vectors: np.ndarray, metric: str = "l2", M: int = 16,
+                    alpha_sim: float = 1.0, block: int = 512,
+                    seed: int = 0) -> FlatGraph:
+    """Exact-KNN proximity graph with alpha pruning + reverse edges."""
+    x = np.asarray(vectors, np.float32)
+    n = x.shape[0]
+    M0 = 2 * M
+    overfetch = min(n - 1, 3 * M0)
+    knn = np.empty((n, overfetch), np.int32)
+    for s in range(0, n, block):
+        sims = _sims_block(x[s:s + block], x, metric)
+        rows = np.arange(s, min(s + block, n))
+        sims[np.arange(rows.size), rows] = -np.inf  # drop self
+        part = np.argpartition(-sims, overfetch, axis=1)[:, :overfetch]
+        ps = np.take_along_axis(sims, part, axis=1)
+        order = np.argsort(-ps, axis=1, kind="stable")
+        knn[s:s + block] = np.take_along_axis(part, order, axis=1)
+
+    neighbors = np.full((n, M0), -1, np.int32)
+    for i in range(n):
+        cands = knn[i]
+        sims_q = _sims_block(x[i][None], x[cands], metric)[0]
+        chosen: list[int] = []
+        for cid, csim in zip(cands, sims_q):
+            if len(chosen) >= M0:
+                break
+            if chosen:
+                s_to = _sims_block(x[int(cid)][None], x[chosen], metric)[0]
+                if np.any(s_to * alpha_sim >= csim):
+                    continue
+            chosen.append(int(cid))
+        if len(chosen) < M0:
+            for cid in cands:
+                if int(cid) not in chosen:
+                    chosen.append(int(cid))
+                if len(chosen) >= M0:
+                    break
+        neighbors[i, : len(chosen)] = chosen
+
+    # reverse edges into free slots (connectivity)
+    free = (neighbors < 0).sum(axis=1)
+    for i in range(n):
+        for j in neighbors[i]:
+            if j < 0:
+                break
+            if free[j] > 0 and i not in neighbors[j]:
+                neighbors[j, M0 - free[j]] = i
+                free[j] -= 1
+
+    # medoid entry point
+    mean = x.mean(axis=0)
+    entry = int(np.argmax(_sims_block(mean[None], x, metric)[0]))
+
+    # --- connectivity repair -------------------------------------------
+    # Pure nearest-neighbor edges fragment clustered data into islands
+    # (every top-M neighbor is a cluster-mate). Stitch components together
+    # through their closest cross-component pairs, bidirectionally, until
+    # the graph is connected from the entry point.
+    neighbors = _stitch_components(x, neighbors, entry, metric)
+    neighbors = _directed_repair(x, neighbors, entry, knn, metric)
+    return make_flat_graph(x, neighbors, None, entry, metric)
+
+
+def _directed_reachable(neighbors: np.ndarray, entry: int) -> np.ndarray:
+    n = neighbors.shape[0]
+    reached = np.zeros(n, bool)
+    reached[entry] = True
+    frontier = np.array([entry])
+    while frontier.size:
+        nxt = neighbors[frontier].ravel()
+        nxt = nxt[nxt >= 0]
+        nxt = np.unique(nxt)
+        nxt = nxt[~reached[nxt]]
+        if nxt.size == 0:
+            break
+        reached[nxt] = True
+        frontier = nxt
+    return reached
+
+
+def _directed_repair(x: np.ndarray, neighbors: np.ndarray, entry: int,
+                     knn: np.ndarray, metric: str,
+                     max_rounds: int = 32) -> np.ndarray:
+    """Beam search follows directed edges; make every node entry-reachable.
+
+    For each unreached node, add one in-edge from its nearest already
+    reached KNN candidate (slot rotation spreads evictions); repeat until
+    the directed BFS covers the graph.
+    """
+    n, m0 = neighbors.shape
+    for _ in range(max_rounds):
+        reached = _directed_reachable(neighbors, entry)
+        missing = np.flatnonzero(~reached)
+        if missing.size == 0:
+            return neighbors
+        reached_ids = np.flatnonzero(reached)
+        for u in missing:
+            cands = knn[u]
+            rc = cands[reached[cands]]
+            if rc.size:
+                v = int(rc[0])
+            else:
+                sims = _sims_block(x[u][None], x[reached_ids], metric)[0]
+                v = int(reached_ids[int(np.argmax(sims))])
+            row = neighbors[v]
+            if u in row:
+                continue
+            slot = np.flatnonzero(row < 0)
+            idx = slot[0] if slot.size else (int(u) % m0)
+            neighbors[v, idx] = u
+    return neighbors
+
+
+def _components(neighbors: np.ndarray) -> np.ndarray:
+    """Undirected connected components over the adjacency (union-find)."""
+    n = neighbors.shape[0]
+    parent = np.arange(n)
+
+    def find(a):
+        while parent[a] != a:
+            parent[a] = parent[parent[a]]
+            a = parent[a]
+        return a
+
+    for i in range(n):
+        for j in neighbors[i]:
+            if j >= 0:
+                ra, rb = find(i), find(int(j))
+                if ra != rb:
+                    parent[ra] = rb
+    return np.array([find(i) for i in range(n)])
+
+
+def _stitch_components(x: np.ndarray, neighbors: np.ndarray, entry: int,
+                       metric: str, max_rounds: int = 64) -> np.ndarray:
+    n, m0 = neighbors.shape
+    for _ in range(max_rounds):
+        comp = _components(neighbors)
+        main = comp[entry]
+        others = np.unique(comp[comp != main])
+        if others.size == 0:
+            return neighbors
+        in_main = np.flatnonzero(comp == main)
+        for c in others:
+            members = np.flatnonzero(comp == c)
+            # closest (member, main) pair via blocked sims
+            best = (-np.inf, -1, -1)
+            for s in range(0, members.size, 128):
+                blk = members[s:s + 128]
+                sims = _sims_block(x[blk], x[in_main], metric)
+                flat = int(np.argmax(sims))
+                bi, bj = divmod(flat, in_main.size)
+                val = float(sims[bi, bj])
+                if val > best[0]:
+                    best = (val, int(blk[bi]), int(in_main[bj]))
+            _, a, b = best
+            for (u, v) in ((a, b), (b, a)):
+                row = neighbors[u]
+                slot = np.flatnonzero(row < 0)
+                if slot.size:
+                    neighbors[u, slot[0]] = v
+                else:
+                    neighbors[u, m0 - 1] = v  # overwrite weakest slot
+    return neighbors

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: fused greedy diverse selection (paper §II-B-2 / Alg. 2).
+
+Given a scored candidate tile and its diversity-graph adjacency, run the k
+greedy steps entirely in VMEM: pick the best non-banned candidate, then ban
+its adjacency row. Each step is one masked argmax + one vectorized mask OR
+over K lanes — the sequential-k loop stays on-chip instead of bouncing
+score/mask tensors through HBM between steps.
+
+Inputs: scores (1, K) f32 (-inf marks invalid/padded candidates),
+        adj (K, K) int8. Output: sel (1, k_pad) int32 local indices (-1 pad).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(scores_ref, adj_ref, sel_ref, *, k: int):
+    K = scores_ref.shape[1]
+    scores = scores_ref[...]                          # (1, K)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
+
+    def body(t, banned):
+        avail = jnp.where(banned, -jnp.inf, scores)
+        j = jnp.argmax(avail, axis=1)[0]
+        ok = avail[0, j] > -jnp.inf
+        pick = jnp.where(ok, j, -1).astype(jnp.int32)
+        pl.store(sel_ref, (slice(0, 1), pl.dslice(t, 1)), pick[None, None])
+        row = pl.load(adj_ref, (pl.dslice(j, 1), slice(None)))  # (1, K)
+        new_banned = banned | (row > 0) | (lane == j)
+        return jnp.where(ok, new_banned, banned)
+
+    banned0 = ~jnp.isfinite(scores)
+    jax.lax.fori_loop(0, k, body, banned0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def greedy_diversify_pallas(scores: jnp.ndarray, adj: jnp.ndarray, k: int,
+                            interpret: bool = False) -> jnp.ndarray:
+    """Returns sel int32[k] (local indices into scores; -1 padded)."""
+    K = scores.shape[0]
+    Kp = -(-K // 128) * 128
+    kp = -(-k // 128) * 128
+    s_p = jnp.full((1, Kp), -jnp.inf, jnp.float32).at[0, :K].set(
+        scores.astype(jnp.float32))
+    a_p = jnp.zeros((Kp, Kp), jnp.int8).at[:K, :K].set(adj.astype(jnp.int8))
+    sel = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        out_shape=jax.ShapeDtypeStruct((1, kp), jnp.int32),
+        interpret=interpret,
+    )(s_p, a_p)
+    return sel[0, :k]

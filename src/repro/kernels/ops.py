@@ -1,0 +1,103 @@
+"""Public kernel entry points with backend dispatch.
+
+impl resolution:
+  * "auto" (default): compiled Pallas on TPU, jnp oracle elsewhere — interpret
+    mode executes kernels in Python and would dominate CPU benchmark latency.
+  * "pallas": compiled Pallas (TPU target).
+  * "interpret": Pallas interpret mode (CPU validation path used by tests).
+  * "ref": the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.batch_similarity import batch_similarity_many_pallas
+from repro.kernels.greedy_diversify import greedy_diversify_pallas
+from repro.kernels.pairwise_adjacency import pairwise_adjacency_pallas
+from repro.kernels.topk_merge import topk_merge_pallas
+
+_DEFAULT_IMPL = None  # overridable for tests via set_default_impl
+
+# jitted oracle entry points — eager lax.scan/sort would otherwise re-trace
+# (and on cache-unfriendly closures re-compile) on every driver call.
+_ref_batch_similarity = jax.jit(_ref.batch_similarity,
+                                static_argnames=("metric",))
+_ref_batch_similarity_many = jax.jit(_ref.batch_similarity_many,
+                                     static_argnames=("metric",))
+_ref_pairwise_adjacency = jax.jit(_ref.pairwise_adjacency,
+                                  static_argnames=("metric",))
+_ref_topk_merge = jax.jit(_ref.topk_merge)
+_ref_greedy_diversify = jax.jit(_ref.greedy_diversify,
+                                static_argnames=("k",))
+
+
+def set_default_impl(impl: str | None) -> None:
+    global _DEFAULT_IMPL
+    _DEFAULT_IMPL = impl
+
+
+def _resolve(impl: str | None) -> str:
+    if impl is None:
+        impl = _DEFAULT_IMPL or "auto"
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def batch_similarity(q: jnp.ndarray, x: jnp.ndarray, metric: str,
+                     impl: str | None = None) -> jnp.ndarray:
+    """sim(q[d], x[n, d]) -> f32[n]."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref_batch_similarity(q, x, metric)
+    out = batch_similarity_many_pallas(q[None, :], x, metric,
+                                       interpret=(impl == "interpret"))
+    return out[0]
+
+
+def batch_similarity_many(qs: jnp.ndarray, x: jnp.ndarray, metric: str,
+                          impl: str | None = None) -> jnp.ndarray:
+    """sim(qs[b, d], x[n, d]) -> f32[b, n]."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref_batch_similarity_many(qs, x, metric)
+    return batch_similarity_many_pallas(qs, x, metric,
+                                        interpret=(impl == "interpret"))
+
+
+def pairwise_adjacency(x: jnp.ndarray, eps, metric: str,
+                       valid: jnp.ndarray | None = None,
+                       impl: str | None = None) -> jnp.ndarray:
+    """Diversity-graph adjacency bool[K, K] (no diagonal; padding masked)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref_pairwise_adjacency(x, eps, metric, valid)
+    raw = pairwise_adjacency_pallas(x, eps, metric,
+                                    interpret=(impl == "interpret"))
+    k = x.shape[0]
+    adj = raw.astype(bool) & ~jnp.eye(k, dtype=bool)
+    if valid is not None:
+        adj = adj & valid[:, None] & valid[None, :]
+    return adj
+
+
+def topk_merge(ids_a, scores_a, ids_b, scores_b, impl: str | None = None):
+    """Merge two descending-sorted lists; keep top len(a)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref_topk_merge(ids_a, scores_a, ids_b, scores_b)
+    return topk_merge_pallas(ids_a, scores_a, ids_b, scores_b,
+                             interpret=(impl == "interpret"))
+
+
+def greedy_diversify(scores, adj, k: int, valid=None, impl: str | None = None):
+    """Greedy diverse selection -> (sel int32[k] local idx, count)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref_greedy_diversify(scores, adj, k, valid)
+    s = scores if valid is None else jnp.where(valid, scores, -jnp.inf)
+    sel = greedy_diversify_pallas(s, adj, k,
+                                  interpret=(impl == "interpret"))
+    return sel, jnp.sum(sel >= 0).astype(jnp.int32)

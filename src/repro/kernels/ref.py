@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth; kernel tests sweep shapes/dtypes
+and assert_allclose against these. They are also the CPU fallback used by
+``ops.py`` (interpret-mode Pallas is far too slow for the benchmark loop).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.similarity import pairwise_sim, query_sim
+
+
+def batch_similarity(q: jnp.ndarray, x: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """Scores of rows of x[n, d] against a single query q[d] -> f32[n]."""
+    return query_sim(q, x, metric)
+
+
+def batch_similarity_many(qs: jnp.ndarray, x: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """Scores of rows of x[n, d] against queries qs[b, d] -> f32[b, n]."""
+    return pairwise_sim(qs, x, metric)
+
+
+def pairwise_adjacency(x: jnp.ndarray, eps: jnp.ndarray, metric: str,
+                       valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Diversity-graph adjacency (paper Def. 2): A[i,j] = sim(x_i,x_j) > eps.
+
+    Diagonal is False. ``valid`` masks padding rows (False rows/cols have no
+    edges).
+    """
+    k = x.shape[0]
+    sims = pairwise_sim(x, x, metric)
+    adj = sims > eps
+    adj = adj & ~jnp.eye(k, dtype=bool)
+    if valid is not None:
+        adj = adj & valid[:, None] & valid[None, :]
+    return adj
+
+
+def topk_merge(ids_a: jnp.ndarray, scores_a: jnp.ndarray,
+               ids_b: jnp.ndarray, scores_b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge two descending-sorted (ids, scores) lists, keep top len(a).
+
+    Deterministic tie-break on id (asc). This is the tournament-merge
+    primitive used by the sharded search reducer.
+    """
+    L = ids_a.shape[0]
+    ids = jnp.concatenate([ids_a, ids_b])
+    scores = jnp.concatenate([scores_a, scores_b])
+    order = jnp.lexsort((ids, -scores))
+    return ids[order][:L], scores[order][:L]
+
+
+def greedy_diversify(scores: jnp.ndarray, adj: jnp.ndarray, k: int,
+                     valid: jnp.ndarray | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Greedy diverse selection (paper §II-B-2) over a scored candidate tile.
+
+    Candidates need NOT be pre-sorted: at each of k steps pick the highest
+    scoring non-banned candidate, then ban its diversity-graph neighbors.
+    Returns (sel int32[k] local indices, -1 padded; count).
+    """
+    n = scores.shape[0]
+    banned = jnp.zeros((n,), bool) if valid is None else ~valid
+
+    def step(carry, _):
+        banned, sel_count = carry
+        avail = jnp.where(banned, -jnp.inf, scores)
+        j = jnp.argmax(avail)
+        ok = ~banned[j] & jnp.isfinite(avail[j])
+        new_banned = jnp.where(ok, banned | adj[j] | (jnp.arange(n) == j), banned)
+        pick = jnp.where(ok, j, -1).astype(jnp.int32)
+        return (new_banned, sel_count + ok.astype(jnp.int32)), pick
+
+    (banned, count), picks = jax.lax.scan(step, (banned, jnp.int32(0)),
+                                          None, length=k)
+    return picks, count

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: bitonic merge of two sorted candidate lists.
+
+The tournament reducer of the sharded search (DESIGN.md §5) repeatedly merges
+two descending-sorted (ids, scores) lists of length L and keeps the top L.
+Concatenating ``a`` (descending) with ``reverse(b)`` (ascending) forms a
+bitonic sequence, so log2(2L) vectorized compare-exchange stages produce a
+fully sorted result — no data-dependent control flow, pure VPU work.
+
+Comparator matches the ref's lexsort exactly: (score desc, id asc).
+L must be a power of two (wrapper pads with -inf sentinels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(scores, ids, dist):
+    """One bitonic stage at the given distance over a (1, 2L) vector."""
+    n = scores.shape[1]
+    s = scores.reshape(n // (2 * dist), 2, dist)
+    i = ids.reshape(n // (2 * dist), 2, dist)
+    s_hi, s_lo = s[:, 0, :], s[:, 1, :]
+    i_hi, i_lo = i[:, 0, :], i[:, 1, :]
+    # "hi" slot should hold the (score desc, id asc)-greater element.
+    take_lo = (s_lo > s_hi) | ((s_lo == s_hi) & (i_lo < i_hi))
+    new_s_hi = jnp.where(take_lo, s_lo, s_hi)
+    new_s_lo = jnp.where(take_lo, s_hi, s_lo)
+    new_i_hi = jnp.where(take_lo, i_lo, i_hi)
+    new_i_lo = jnp.where(take_lo, i_hi, i_lo)
+    s = jnp.stack([new_s_hi, new_s_lo], axis=1).reshape(1, n)
+    i = jnp.stack([new_i_hi, new_i_lo], axis=1).reshape(1, n)
+    return s, i
+
+
+def _kernel(sa_ref, ia_ref, sb_ref, ib_ref, so_ref, io_ref, *, length: int):
+    scores = jnp.concatenate(
+        [sa_ref[...], jnp.flip(sb_ref[...], axis=1)], axis=1)  # (1, 2L) bitonic
+    ids = jnp.concatenate(
+        [ia_ref[...], jnp.flip(ib_ref[...], axis=1)], axis=1)
+    dist = length
+    while dist >= 1:
+        scores, ids = _compare_exchange(scores, ids, dist)
+        dist //= 2
+    so_ref[...] = scores[:, :length]
+    io_ref[...] = ids[:, :length]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def topk_merge_pallas(ids_a, scores_a, ids_b, scores_b, interpret: bool = False):
+    """Merge two descending-sorted lists; return top len(a) (ids, scores)."""
+    L = ids_a.shape[0]
+    Lp = max(128, 1 << (L - 1).bit_length())
+
+    def pad(ids, scores):
+        ids_p = jnp.full((1, Lp), jnp.iinfo(jnp.int32).max, jnp.int32)
+        sc_p = jnp.full((1, Lp), -jnp.inf, jnp.float32)
+        return (ids_p.at[0, :L].set(ids.astype(jnp.int32)),
+                sc_p.at[0, :L].set(scores.astype(jnp.float32)))
+
+    ia, sa = pad(ids_a, scores_a)
+    ib, sb = pad(ids_b, scores_b)
+    so, io = pl.pallas_call(
+        functools.partial(_kernel, length=Lp),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, Lp), jnp.float32),
+            jax.ShapeDtypeStruct((1, Lp), jnp.int32),
+        ),
+        interpret=interpret,
+    )(sa, ia, sb, ib)
+    return io[0, :L], so[0, :L]

@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count on first
+init, and only the dry-run wants 512 placeholder devices.
+
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+
+Each cell writes results/dryrun/<arch>__<shape>__<mesh>[__tag].json with
+memory_analysis, cost_analysis, the trip-count-aware HLO totals, the
+collective schedule breakdown, and the roofline terms.
+"""
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.launch import hlo_analysis, roofline as rl  # noqa: E402
+from repro.launch.mesh import make_production_mesh     # noqa: E402
+from repro.launch.steps import (  # noqa: E402
+    build_prefill_step, build_serve_step, build_train_step, input_specs)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             tag: str = "", opts: dict | None = None) -> dict:
+    opts = opts or {}
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape_name)
+    rec: dict = dict(arch=arch, shape=shape_name, mesh=mesh_kind, tag=tag,
+                     opts=opts)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return _write(rec, out_dir)
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.size
+    t0 = time.time()
+    try:
+        specs = input_specs(cfg, shape, mesh, opts)
+        if specs["kind"] == "train":
+            step, _ = build_train_step(
+                cfg, mesh, skip_future=opts.get("skip_future", False),
+                remat=opts.get("remat", True), opts=opts)
+            args = (specs["params"], specs["opt_state"], specs["batch"])
+        elif specs["kind"] == "prefill":
+            step, _ = build_prefill_step(
+                cfg, mesh, skip_future=opts.get("skip_future", False),
+                opts=opts)
+            args = (specs["params"], specs["batch"])
+        else:
+            step, _ = build_serve_step(cfg, mesh, opts=opts)
+            args = (specs["params"], specs["cache"], specs["token"])
+
+        with mesh:
+            lowered = step.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        mem = dict(
+            argument_size_in_bytes=ma.argument_size_in_bytes,
+            output_size_in_bytes=ma.output_size_in_bytes,
+            temp_size_in_bytes=ma.temp_size_in_bytes,
+            alias_size_in_bytes=ma.alias_size_in_bytes,
+        )
+        print(f"[{arch} {shape_name} {mesh_kind}] memory_analysis:", mem,
+              flush=True)
+        ca = compiled.cost_analysis() or {}
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "utilization operand")}
+        print(f"[{arch} {shape_name} {mesh_kind}] cost_analysis(flops):",
+              cost.get("flops"), flush=True)
+
+        hlo_text = compiled.as_text()
+        hlo = hlo_analysis.analyze(hlo_text)
+        t_analyze = time.time() - t0 - t_lower - t_compile
+
+        import repro.models.model as M
+        aparams = jax.eval_shape(
+            lambda: M.abstract_params(cfg))  # cheap, cached by jax anyway
+        n_total, n_active = rl.param_counts(cfg, aparams)
+        roof = rl.compute_roofline(cfg, shape, chips, hlo, n_active,
+                                   mem["argument_size_in_bytes"])
+
+        rec.update(
+            status="ok", chips=chips,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            analyze_s=round(t_analyze, 2),
+            memory_analysis=mem, cost_analysis=cost,
+            hlo=dict(flops=hlo["flops"],
+                     collective_bytes=hlo["collective_bytes"],
+                     hbm_bytes=hlo["hbm_bytes"],
+                     collective_breakdown=hlo["collective_breakdown"]),
+            params_total=n_total, params_active=n_active,
+            roofline=roof.as_dict(),
+        )
+        # per-device memory sanity vs 16 GB HBM
+        per_dev = mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]
+        rec["per_device_bytes"] = per_dev
+        rec["fits_16gb_hbm"] = bool(per_dev < 16e9)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[{arch} {shape_name} {mesh_kind}] FAILED: {e}", flush=True)
+    return _write(rec, out_dir)
+
+
+def _write(rec: dict, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"__{rec['tag']}" if rec.get("tag") else ""
+    path = os.path.join(
+        out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f" bottleneck={r['bottleneck']}"
+                 f" frac={r['roofline_fraction']:.3f}"
+                 f" fits={rec['fits_16gb_hbm']}")
+    elif status == "skipped":
+        extra = f" ({rec['reason'][:60]})"
+    print(f"DRYRUN {rec['arch']:26s} {rec['shape']:12s} {rec['mesh']:6s}"
+          f" -> {status}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="key=value step options (e.g. skip_future=false)")
+    args = ap.parse_args()
+
+    opts = {}
+    for kv in args.opt:
+        k, v = kv.split("=", 1)
+        if v.isdigit():
+            opts[k] = int(v)
+        elif v.lower() in ("true", "false", "yes", "no", "1", "0"):
+            opts[k] = v.lower() in ("1", "true", "yes")
+        else:
+            opts[k] = v
+
+    archs = list(ARCH_NAMES) if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, args.out, args.tag,
+                               opts)
+                failures += rec["status"] == "error"
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,292 @@
+"""Static analyzer for optimized (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified in this
+container — a scanned 8-layer stack reports 1/8 of the unrolled FLOPs), so
+layer-scanned models would be wildly under-counted. This analyzer walks the
+HLO call graph instead and multiplies while bodies by their
+``known_trip_count`` backend config, giving:
+
+  * flops              — dot/convolution FLOPs (2*out*contraction)
+  * collective_bytes   — per-device operand bytes of all-reduce/all-gather/
+                         reduce-scatter/all-to-all/collective-permute
+  * collective_breakdown — bytes per collective opcode
+  * hbm_bytes          — fusion-boundary operand+output bytes (intra-fusion
+                         traffic excluded): a standard HBM-traffic proxy
+
+All numbers are per-device (the module is already partitioned).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_CALL_RE = re.compile(
+    r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_WINDOW_RE = re.compile(r"window=\{[^}]*size=([0-9x]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "copy-start", "copy-done", "after-all",
+                   "partition-id", "replica-id", "iota"}
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str           # operand list + attrs (raw tail of the line)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    collective_bytes: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_breakdown: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.collective_breakdown.items():
+            self.collective_breakdown[k] += v * mult
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[Instr]] = {}
+        self.entry: str | None = None
+        self._parse(text)
+        self._types: dict[str, str] = {}
+        for comp in self.computations.values():
+            for ins in comp:
+                self._types[ins.name] = ins.type_str
+        self._memo: dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur: list[Instr] | None = None
+        comment = re.compile(r"/\*.*?\*/")
+        for line in text.splitlines():
+            stripped = comment.sub("", line).rstrip()
+            if not stripped:
+                continue
+            hdr = _COMP_HDR_RE.match(stripped)
+            if hdr and stripped.endswith("{"):
+                name = hdr.group(2)
+                cur = []
+                self.computations[name] = cur
+                if hdr.group(1):
+                    self.entry = name
+                continue
+            if stripped.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _INSTR_RE.match(stripped)
+            if m:
+                cur.append(Instr(m.group(1), m.group(2), m.group(3),
+                                 m.group(4)))
+
+    # ------------------------------------------------------------- costs --
+    def _operand_names(self, ins: Instr) -> list[str]:
+        # operands come before the first "), " attr boundary; conservative:
+        head = ins.rest.split("),", 1)[0]
+        return [n for n in _OPERAND_RE.findall(head)
+                if n in self._types]
+
+    def _dot_flops(self, ins: Instr) -> float:
+        out_elems = shape_elems(ins.type_str)
+        ops = self._operand_names(ins)
+        if not ops:
+            return 0.0
+        lhs_dims = shape_dims(self._types[ops[0]])
+        m = _LHS_CDIMS_RE.search(ins.rest)
+        contraction = 1
+        if m and m.group(1):
+            for d in m.group(1).split(","):
+                contraction *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+        return 2.0 * out_elems * contraction
+
+    def _conv_flops(self, ins: Instr) -> float:
+        out = shape_dims(ins.type_str)
+        if not out:
+            return 0.0
+        out_elems = shape_elems(ins.type_str)
+        ops = self._operand_names(ins)
+        kshape = shape_dims(self._types[ops[1]]) if len(ops) > 1 else []
+        wm = _WINDOW_RE.search(ins.rest)
+        window = 1
+        if wm:
+            for s in wm.group(1).split("x"):
+                window *= int(s)
+        out_features = out[-1] if out else 1
+        kelems = 1
+        for d in kshape:
+            kelems *= d
+        per_out = kelems / max(out_features, 1)
+        return 2.0 * out_elems * max(per_out, window)
+
+    _SLICY = {"dynamic-slice", "dynamic-update-slice", "gather", "scatter"}
+
+    def _fusion_traffic(self, ins: Instr, callee_m) -> float:
+        """HBM traffic of a fusion: boundary bytes, except for fusions whose
+        body slices big loop-invariant tensors (stacked weights / remat
+        stacks) — those read/write only the slice, so count the inner
+        slice-level traffic instead of the full operand tensors."""
+        boundary = shape_bytes(ins.type_str) + sum(
+            shape_bytes(self._types[o]) for o in self._operand_names(ins))
+        if not callee_m:
+            return boundary
+        body = self.computations.get(callee_m.group(1), [])
+        if not any(i.opcode in self._SLICY for i in body):
+            return boundary
+        inner = 0.0
+        for i in body:
+            if i.opcode in ("dynamic-slice", "gather"):
+                inner += 2 * shape_bytes(i.type_str)
+            elif i.opcode == "dynamic-update-slice":
+                ops_ = self._operand_names(i)
+                upd = shape_bytes(self._types[ops_[1]]) if len(ops_) > 1 \
+                    else 0
+                inner += 2 * upd
+            elif i.opcode == "scatter":
+                ops_ = self._operand_names(i)
+                if len(ops_) > 2:
+                    inner += 2 * shape_bytes(self._types[ops_[2]])
+        # plus the fusion's own root output if it is not a pure update alias
+        root = body[-1] if body else None
+        if root is not None and root.opcode not in self._SLICY:
+            inner += shape_bytes(ins.type_str)
+        return min(boundary, inner)
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        cost = Cost()
+        self._memo[name] = cost  # guard cycles
+        for ins in self.computations.get(name, []):
+            op = ins.opcode
+            base = op.replace("-start", "")
+            if base in COLLECTIVES:
+                b = sum(shape_bytes(self._types[o])
+                        for o in self._operand_names(ins))
+                cost.collective_bytes += b
+                cost.collective_breakdown[base] += b
+                cost.hbm_bytes += b + shape_bytes(ins.type_str)
+                continue
+            if op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                body = _CALL_RE.search(ins.rest)
+                condm = _COND_RE.search(ins.rest)
+                if body:
+                    cost.add(self.comp_cost(body.group(1)), trip)
+                if condm:
+                    cost.add(self.comp_cost(condm.group(1)), trip)
+                continue
+            if op == "conditional":
+                # attribute all branches once (upper bound: max would need
+                # branch probabilities; branches here are tiny)
+                for cname in _CALL_RE.findall(ins.rest):
+                    cost.add(self.comp_cost(cname))
+                continue
+            if op in ("fusion", "call", "async-start"):
+                callee = _CALL_RE.search(ins.rest)
+                if callee:
+                    sub = self.comp_cost(callee.group(1))
+                    cost.flops += sub.flops
+                    cost.collective_bytes += sub.collective_bytes
+                    for k, v in sub.collective_breakdown.items():
+                        cost.collective_breakdown[k] += v
+                cost.hbm_bytes += self._fusion_traffic(ins, callee)
+                continue
+            if op in ("dynamic-slice", "gather"):
+                cost.hbm_bytes += 2 * shape_bytes(ins.type_str)
+                continue
+            if op == "dynamic-update-slice":
+                ops_ = self._operand_names(ins)
+                upd = shape_bytes(self._types[ops_[1]]) if len(ops_) > 1 \
+                    else shape_bytes(ins.type_str)
+                cost.hbm_bytes += 2 * upd
+                continue
+            if op == "dot":
+                cost.flops += self._dot_flops(ins)
+            elif op == "convolution":
+                cost.flops += self._conv_flops(ins)
+            elif op in ("reduce", "reduce-window", "sort", "scatter",
+                        "gather", "select-and-scatter"):
+                cost.flops += shape_elems(ins.type_str)
+            if op not in _SKIP_BYTES_OPS:
+                cost.hbm_bytes += shape_bytes(ins.type_str) + sum(
+                    shape_bytes(self._types[o])
+                    for o in self._operand_names(ins))
+        return cost
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    mod = HloModule(hlo_text)
+    c = mod.entry_cost()
+    return dict(
+        flops=c.flops,
+        collective_bytes=c.collective_bytes,
+        hbm_bytes=c.hbm_bytes,
+        collective_breakdown=dict(c.collective_breakdown),
+    )

@@ -1,0 +1,50 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load_all(out_dir="results/dryrun", tag=""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(path))
+        if (r.get("tag") or "") != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_table(rows, mesh="single"):
+    hdr = ("| arch | shape | status | compute_s | memory_s | coll_s | "
+           "bottleneck | MODEL_FLOPS | useful | roofline_frac | fits |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | skipped | - | - |"
+                         f" - | - | - | - | - | - |")
+            continue
+        if r["status"] == "error":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | - | - | -"
+                         f" | - | - | - | - | - |")
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {ro['compute_s']:.4f} | "
+            f"{ro['memory_s']:.4f} | {ro['collective_s']:.4f} | "
+            f"{ro['bottleneck']} | {ro['model_flops']:.2e} | "
+            f"{ro['useful_ratio']:.3f} | {ro['roofline_fraction']:.3f} | "
+            f"{'Y' if r.get('fits_16gb_hbm') else 'N'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    tag = sys.argv[2] if len(sys.argv) > 2 else ""
+    rows = load_all(tag=tag)
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(fmt_table(rows, mesh))

@@ -1,0 +1,86 @@
+"""Roofline terms from a compiled dry-run cell (TPU v5e constants).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / bytes come from the trip-count-aware HLO analyzer
+(launch/hlo_analysis.py) and are PER-DEVICE (the module is SPMD-partitioned),
+so the "/ chips" in the formulas is already applied — each term is simply
+per_device_quantity / per_chip_rate. MODEL_FLOPS = 6·N·D (dense) or
+6·N_active·D (MoE) gives the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCard
+from repro.launch.mesh import HW
+
+
+def param_counts(cfg: ModelConfig, params_tree: Any) -> tuple[int, int]:
+    """(total, active) parameter counts from the abstract param tree."""
+    import jax
+
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_tree)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        names = [str(getattr(p, "key", "")) for p in path]
+        if "moe" in names and names[-1] in ("wg", "wu", "wd"):
+            expert += n
+    active = total
+    if cfg.num_experts and expert:
+        active = total - expert + expert * cfg.experts_per_token \
+            / cfg.num_experts
+    return int(total), int(active)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeCard, n_active: int) -> float:
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops_per_dev: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs * chips)
+    roofline_fraction: float     # max-term time / sum-term time proxy
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def compute_roofline(cfg: ModelConfig, shape: ShapeCard, chips: int,
+                     hlo: dict, n_active: int,
+                     arg_bytes_per_dev: float = 0.0) -> Roofline:
+    compute_s = hlo["flops"] / HW["peak_flops_bf16"]
+    memory_s = hlo["hbm_bytes"] / HW["hbm_bw"]
+    collective_s = hlo["collective_bytes"] / HW["ici_bw"]
+    terms = dict(compute=compute_s, memory=memory_s,
+                 collective=collective_s)
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, n_active)
+    total_hlo = hlo["flops"] * chips
+    useful = mf / total_hlo if total_hlo else 0.0
+    # Roofline fraction: ideal step time is bounded below BOTH by useful
+    # model compute at peak AND by reading every input (params, optimizer
+    # state, KV cache) once from HBM — the latter is what makes decode
+    # fundamentally memory-bound. frac = ideal / dominant-term time.
+    ideal_compute_s = mf / (chips * HW["peak_flops_bf16"])
+    ideal_mem_s = arg_bytes_per_dev / HW["hbm_bw"]
+    ideal_s = max(ideal_compute_s, ideal_mem_s)
+    frac = ideal_s / max(terms[bottleneck], 1e-30)
+    return Roofline(compute_s, memory_s, collective_s, bottleneck, mf,
+                    hlo["flops"], useful, frac)

@@ -1,0 +1,142 @@
+"""Jitted train/serve step builders with mesh shardings (dry-run + runtime).
+
+``build_train_step(cfg, mesh)``: full AdamW training step — loss, grads,
+update — with params/opt-state donated and sharded per
+``distributed.sharding``. ``build_serve_step(cfg, mesh)``: one-token decode
+with donated KV cache. Both return (jitted_fn, abstract_inputs) so the
+dry-run can ``.lower(**abstract).compile()`` without allocating anything.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCard
+from repro.distributed import sharding as sh
+from repro.models import model as M
+from repro.train.optimizer import AdamW, AdamWState
+
+
+def build_train_step(cfg: ModelConfig, mesh, *, optimizer: AdamW | None = None,
+                     skip_future: bool = False, remat: bool = True,
+                     opts: dict | None = None):
+    opt = optimizer or AdamW()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch, remat=remat,
+                                skip_future=skip_future, opts=opts))(params)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    aparams = M.abstract_params(cfg)
+    aopt = jax.eval_shape(opt.init, aparams)
+    pspec = sh.param_spec_tree(cfg, aparams, mesh,
+                               fsdp=bool((opts or {}).get("fsdp")))
+    ospec = AdamWState(step=P(), mu=pspec, nu=pspec)
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(sh.to_named(pspec, mesh),
+                      sh.to_named(ospec, mesh),
+                      None),
+        out_shardings=(sh.to_named(pspec, mesh),
+                       sh.to_named(ospec, mesh),
+                       NamedSharding(mesh, P())),
+        donate_argnums=(0, 1),
+    )
+    return jitted, dict(params=aparams, opt_state=aopt)
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, *, skip_future: bool = False,
+                       opts: dict | None = None):
+    """Inference prefill: forward logits only (no grads/optimizer)."""
+
+    def prefill_step(params, batch):
+        logits, _ = M.forward(cfg, params, batch, remat=False,
+                              skip_future=skip_future, opts=opts)
+        return logits
+
+    aparams = M.abstract_params(cfg)
+    pspec = sh.param_spec_tree(cfg, aparams, mesh)
+    jitted = jax.jit(prefill_step,
+                     in_shardings=(sh.to_named(pspec, mesh), None))
+    return jitted, dict(params=aparams)
+
+
+def build_serve_step(cfg: ModelConfig, mesh, *, opts: dict | None = None):
+    def serve_step(params, cache, token):
+        return M.decode_step(cfg, params, cache, token, opts)
+
+    aparams = M.abstract_params(cfg)
+    pspec = sh.param_spec_tree(cfg, aparams, mesh)
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(sh.to_named(pspec, mesh), None, None),
+        donate_argnums=(1,),
+    )
+    return jitted, dict(params=aparams)
+
+
+def abstract_train_inputs(cfg: ModelConfig, shape: ShapeCard, mesh,
+                          opts: dict | None = None):
+    """ShapeDtypeStructs (with shardings attached) for lower()."""
+    aparams = M.abstract_params(cfg)
+    opt = AdamW()
+    aopt = jax.eval_shape(opt.init, aparams)
+    batch = M.make_batch(cfg, shape.global_batch, shape.seq_len,
+                         abstract=True)
+    pspec = sh.param_spec_tree(cfg, aparams, mesh,
+                               fsdp=bool((opts or {}).get("fsdp")))
+    bspec = sh.batch_spec_tree(cfg, batch, mesh)
+
+    def attach(tree, spec):
+        return jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=NamedSharding(mesh, s)),
+            tree, spec, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    ospec = AdamWState(step=P(), mu=pspec, nu=pspec)
+    return (attach(aparams, pspec), attach(aopt, ospec),
+            attach(batch, bspec))
+
+
+def abstract_serve_inputs(cfg: ModelConfig, shape: ShapeCard, mesh):
+    aparams = M.abstract_params(cfg)
+    pspec = sh.param_spec_tree(cfg, aparams, mesh)
+    acache = jax.eval_shape(
+        functools.partial(M.init_cache, cfg, shape.global_batch,
+                          shape.seq_len))
+    cspec = sh.cache_spec_tree(cfg, acache, mesh)
+    bat = sh.batch_axes_for(shape.global_batch, mesh)
+    token = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1), jnp.int32,
+        sharding=NamedSharding(mesh, P(bat, None)))
+
+    def attach(tree, spec):
+        return jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=NamedSharding(mesh, s)),
+            tree, spec, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    return (attach(aparams, pspec), attach(acache, cspec), token)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCard, mesh,
+                opts: dict | None = None) -> dict[str, Any]:
+    """The dry-run contract: abstract, sharded stand-ins for every input."""
+    if shape.kind == "train":
+        params, opt_state, batch = abstract_train_inputs(cfg, shape, mesh,
+                                                         opts)
+        return dict(kind="train", params=params, opt_state=opt_state,
+                    batch=batch)
+    if shape.kind == "prefill":
+        params, _, batch = abstract_train_inputs(cfg, shape, mesh, opts)
+        batch = dict(batch)
+        batch.pop("labels", None)
+        return dict(kind="prefill", params=params, batch=batch)
+    params, cache, token = abstract_serve_inputs(cfg, shape, mesh)
+    return dict(kind="serve", params=params, cache=cache, token=token)

@@ -1,0 +1,225 @@
+"""Encoder-decoder family (whisper-small backbone).
+
+Per the shape card the audio conv frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings [B, 1500, D] straight into the encoder stack.
+Whisper conventions: LayerNorm (with bias), plain GELU MLP, sinusoidal
+positions on the encoder, learned positions on the decoder, full (MHA)
+attention, cross-attention from every decoder layer into the encoder output.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+F32 = jnp.float32
+Params = dict[str, Any]
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def sinusoids(length: int, channels: int):
+    t = jnp.arange(length, dtype=F32)[:, None]
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(channels // 2, dtype=F32)
+                  / (channels // 2 - 1))
+    ang = t * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_ln(d):
+    return dict(scale=jnp.ones((d,), F32), bias=jnp.zeros((d,), F32))
+
+
+def _init_attn(rng, cfg, dt):
+    d, h, kv, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.resolved_head_dim)
+    ks = jax.random.split(rng, 4)
+    sc = d ** -0.5
+    return dict(
+        wq=(jax.random.normal(ks[0], (d, h * hd)) * sc).astype(dt),
+        wk=(jax.random.normal(ks[1], (d, kv * hd)) * sc).astype(dt),
+        wv=(jax.random.normal(ks[2], (d, kv * hd)) * sc).astype(dt),
+        wo=(jax.random.normal(ks[3], (h * hd, d)) * (h * hd) ** -0.5
+            ).astype(dt),
+        bq=jnp.zeros((h * hd,), dt), bk=jnp.zeros((kv * hd,), dt),
+        bv=jnp.zeros((kv * hd,), dt),
+    )
+
+
+def _init_mlp(rng, cfg, dt):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 2)
+    return dict(
+        w1=(jax.random.normal(ks[0], (d, f)) * d ** -0.5).astype(dt),
+        b1=jnp.zeros((f,), dt),
+        w2=(jax.random.normal(ks[1], (f, d)) * f ** -0.5).astype(dt),
+        b2=jnp.zeros((d,), dt),
+    )
+
+
+def _init_enc_block(rng, cfg, dt):
+    ks = jax.random.split(rng, 2)
+    return dict(ln1=_init_ln(cfg.d_model), attn=_init_attn(ks[0], cfg, dt),
+                ln2=_init_ln(cfg.d_model), mlp=_init_mlp(ks[1], cfg, dt))
+
+
+def _init_dec_block(rng, cfg, dt):
+    ks = jax.random.split(rng, 3)
+    return dict(
+        ln1=_init_ln(cfg.d_model), self_attn=_init_attn(ks[0], cfg, dt),
+        ln2=_init_ln(cfg.d_model), cross_attn=_init_attn(ks[1], cfg, dt),
+        ln3=_init_ln(cfg.d_model), mlp=_init_mlp(ks[2], cfg, dt),
+    )
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    dt = _dt(cfg)
+    ks = jax.random.split(rng, 6)
+
+    def stack(fn, r, n):
+        blocks = [fn(jax.random.fold_in(r, i)) for i in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+    return dict(
+        embed=(jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model))
+               * 0.02).astype(dt),
+        dec_pos=(jax.random.normal(ks[1], (4096, cfg.d_model)) * 0.01
+                 ).astype(dt),
+        enc_blocks=stack(lambda r: _init_enc_block(r, cfg, dt), ks[2],
+                         cfg.encoder_layers),
+        dec_blocks=stack(lambda r: _init_dec_block(r, cfg, dt), ks[3],
+                         cfg.num_layers),
+        enc_ln=_init_ln(cfg.d_model),
+        dec_ln=_init_ln(cfg.d_model),
+    )
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.key(0))
+
+
+def _mha(attn, q_src, kv_src, cfg, causal, decode=None):
+    b, s, _ = q_src.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (jnp.dot(q_src, attn["wq"], preferred_element_type=F32)
+         + attn["bq"]).reshape(b, s, h, hd).astype(q_src.dtype)
+    k = (jnp.dot(kv_src, attn["wk"], preferred_element_type=F32)
+         + attn["bk"]).reshape(b, kv_src.shape[1], kv, hd).astype(q_src.dtype)
+    v = (jnp.dot(kv_src, attn["wv"], preferred_element_type=F32)
+         + attn["bv"]).reshape(b, kv_src.shape[1], kv, hd).astype(q_src.dtype)
+    if decode is not None:
+        k_cache, v_cache, cache_len = decode
+        bidx = jnp.arange(b)
+        k_cache = k_cache.at[bidx, cache_len].set(k[:, 0])
+        v_cache = v_cache.at[bidx, cache_len].set(v[:, 0])
+        o = L.decode_attention(q, k_cache, v_cache, cache_len + 1)
+        return L.out_project(attn, o), (k_cache, v_cache)
+    o = L.flash_attention(q, k, v, causal=causal, skip_future=False)
+    return L.out_project(attn, o), None
+
+
+def encode(cfg: ModelConfig, params: Params, frames):
+    """frames [B, T, D] (stubbed conv-frontend output) -> [B, T, D]."""
+    x = frames.astype(_dt(cfg)) + sinusoids(
+        frames.shape[1], cfg.d_model).astype(_dt(cfg))[None]
+
+    def blk(x, p):
+        h = L.layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"])
+        o, _ = _mha(p["attn"], h, h, cfg, causal=False)
+        x = x + o
+        h = L.layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"])
+        x = x + L.dense_mlp(p["mlp"], h, "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(blk), x, params["enc_blocks"])
+    return L.layer_norm(x, params["enc_ln"]["scale"], params["enc_ln"]["bias"])
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, *, frontend_embeds,
+            remat: bool = True, skip_future: bool = True):
+    """Teacher-forced decoder logits. tokens [B, S]; frontend [B, T, D]."""
+    enc = encode(cfg, params, frontend_embeds)
+    b, s = tokens.shape
+    dt = _dt(cfg)
+    pos = params["dec_pos"]
+    if s > pos.shape[0]:  # extend learned positions by tiling (32k prefill)
+        pos = jnp.concatenate([pos] * (-(-s // pos.shape[0])), axis=0)
+    x = params["embed"][tokens].astype(dt) + pos[:s][None]
+
+    def blk(x, p):
+        h = L.layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"])
+        o, _ = _mha(p["self_attn"], h, h, cfg, causal=True)
+        x = x + o
+        h = L.layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"])
+        o, _ = _mha(p["cross_attn"], h, enc, cfg, causal=False)
+        x = x + o
+        h = L.layer_norm(x, p["ln3"]["scale"], p["ln3"]["bias"])
+        x = x + L.dense_mlp(p["mlp"], h, "gelu")
+        return x, None
+
+    fn = jax.checkpoint(blk) if remat else blk
+    x, _ = jax.lax.scan(fn, x, params["dec_blocks"])
+    x = L.layer_norm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"])
+    logits = jnp.dot(x, params["embed"].T, preferred_element_type=F32)
+    return logits, 0.0
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               frontend_tokens: int = 0, dtype=None) -> Params:
+    dt = dtype or _dt(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    t = frontend_tokens or cfg.num_frontend_tokens
+    nl = cfg.num_layers
+    return dict(
+        cache_len=jnp.zeros((batch,), jnp.int32),
+        k=jnp.zeros((nl, batch, max_seq, kv, hd), dt),
+        v=jnp.zeros((nl, batch, max_seq, kv, hd), dt),
+        cross_k=jnp.zeros((nl, batch, t, kv, hd), dt),
+        cross_v=jnp.zeros((nl, batch, t, kv, hd), dt),
+    )
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params, token):
+    """One decoder step against precomputed cross KV."""
+    dt = _dt(cfg)
+    b = token.shape[0]
+    cache_len = cache["cache_len"]
+    pos = params["dec_pos"]
+    pidx = jnp.mod(cache_len, pos.shape[0])
+    x = params["embed"][token].astype(dt) + pos[pidx][:, None]
+    new_cache = dict(cache)
+
+    def blk(x, scanned):
+        p, kc, vc, ck, cv = scanned
+        h = L.layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"])
+        o, (kc, vc) = _mha(p["self_attn"], h, h, cfg, causal=True,
+                           decode=(kc, vc, cache_len))
+        x = x + o
+        h = L.layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"])
+        hq = cfg.num_heads
+        hd = cfg.resolved_head_dim
+        q = (jnp.dot(h, p["cross_attn"]["wq"], preferred_element_type=F32)
+             + p["cross_attn"]["bq"]).reshape(b, 1, hq, hd).astype(dt)
+        o = L.decode_attention(q, ck, cv,
+                               jnp.full((b,), ck.shape[1], jnp.int32))
+        x = x + L.out_project(p["cross_attn"], o)
+        h = L.layer_norm(x, p["ln3"]["scale"], p["ln3"]["bias"])
+        x = x + L.dense_mlp(p["mlp"], h, "gelu")
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        blk, x, (params["dec_blocks"], cache["k"], cache["v"],
+                 cache["cross_k"], cache["cross_v"]))
+    new_cache["k"], new_cache["v"] = ks, vs
+    x = L.layer_norm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"])
+    logits = jnp.dot(x, params["embed"].T, preferred_element_type=F32)
+    new_cache["cache_len"] = cache_len + 1
+    return logits, new_cache

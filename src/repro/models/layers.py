@@ -1,0 +1,413 @@
+"""Shared neural layers for the 10-arch substrate (pure JAX, scan-friendly).
+
+Everything here is a pure function over a params pytree. Attention uses a
+chunked online-softmax ("flash") formulation so prefill_32k / train_4k never
+materialize an [S, S] score matrix; decode uses a single fused softmax over
+the KV cache. All matmuls accumulate in f32 via preferred_element_type.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+F32 = jnp.float32
+
+
+# ----------------------------------------------------------------- norms ---
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(F32)), axis=-1, keepdims=True)
+    out = x.astype(F32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(F32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope ---
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x [..., S, H, hd]; positions [..., S] (int)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., :, None].astype(F32) * freqs   # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ mlps ---
+def _act(name: str):
+    return dict(gelu=jax.nn.gelu, silu=jax.nn.silu, relu=jax.nn.relu)[name]
+
+
+def gated_mlp(params: Params, x, act: str = "silu"):
+    """SwiGLU (act=silu) / GeGLU (act=gelu): (act(x W_g) * x W_u) W_d."""
+    g = jnp.dot(x, params["wg"], preferred_element_type=F32)
+    u = jnp.dot(x, params["wu"], preferred_element_type=F32)
+    h = (_act(act)(g) * u).astype(x.dtype)
+    return jnp.dot(h, params["wd"], preferred_element_type=F32).astype(x.dtype)
+
+
+def dense_mlp(params: Params, x, act: str = "gelu"):
+    h = jnp.dot(x, params["w1"], preferred_element_type=F32)
+    if "b1" in params:
+        h = h + params["b1"]
+    h = _act(act)(h).astype(x.dtype)
+    o = jnp.dot(h, params["w2"], preferred_element_type=F32)
+    if "b2" in params:
+        o = o + params["b2"]
+    return o.astype(x.dtype)
+
+
+# ------------------------------------------------------- flash attention ---
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _attn_block(qb, kb, vb, mask, scale):
+    """One (q-chunk, kv-chunk) online-softmax block.
+
+    qb [B,cq,KV,G,hd]  kb/vb [B,ck,KV,hd]  mask [cq,ck] bool (True=keep).
+    Returns (scores_max [B,KV,G,cq], exp_scores [B,KV,G,cq,ck]).
+    """
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qb.astype(F32), kb.astype(F32)) * scale
+    s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+    return s
+
+
+def _block_mask(q_pos, k_pos, sk, causal, window):
+    mask = (k_pos[None, :] < sk)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    return mask
+
+
+@functools.lru_cache(maxsize=64)
+def _make_flash_vjp(causal: bool, window: int, cq: int, ck: int,
+                    sq: int, sk: int, q_offset: int, sk_valid: int = 0,
+                    block_dtype: str = "float32"):
+    """custom_vjp flash attention specialized to static geometry.
+
+    The naive differentiated double-scan saves the [nq, nk, B, KV, G, cq, ck]
+    exp-score tensors for the backward (tens of GB at train_4k); this VJP
+    saves only (q, k, v, out, lse) and recomputes each score block in the
+    backward — the standard FlashAttention-2 strategy, adapted to XLA scans.
+    """
+    nq = sq // cq
+    nk = sk // ck
+    sk_valid = sk_valid or sk
+    bdt = jnp.dtype(block_dtype)
+
+    def fwd_pass(q, k, v):
+        # q [B,Sq,KV,G,hd] (grouped); k/v [B,Sk,KV,hd]; all padded.
+        b, _, kvh, g, hd = q.shape
+        scale = 1.0 / float(hd) ** 0.5
+        qg = q.reshape(b, nq, cq, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+        kc = k.reshape(b, nk, ck, kvh, hd).transpose(1, 0, 2, 3, 4)
+        vc = v.reshape(b, nk, ck, kvh, hd).transpose(1, 0, 2, 3, 4)
+
+        def per_q(qi):
+            qb = qg[qi]
+            q_pos = q_offset + qi * cq + jnp.arange(cq)
+
+            def kv_step(carry, ki):
+                m, l, acc = carry
+                k_pos = ki * ck + jnp.arange(ck)
+                mask = _block_mask(q_pos, k_pos, sk_valid, causal, window)
+                s = jnp.einsum("bqkgh,bckh->bkgqc", qb.astype(F32),
+                               kc[ki].astype(F32)) * scale
+                s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+                blk_max = jnp.max(s, axis=-1)
+                new_m = jnp.maximum(m, blk_max)
+                p = jnp.exp(s - new_m[..., None])
+                corr = jnp.exp(m - new_m)
+                new_l = l * corr + jnp.sum(p, axis=-1)
+                pv = jnp.einsum("bkgqc,bckh->bkgqh", p.astype(bdt),
+                                vc[ki].astype(bdt),
+                                preferred_element_type=F32)
+                return (new_m, new_l, new_acc_fix(acc, corr, pv)), None
+
+            def new_acc_fix(acc, corr, pv):
+                return acc * corr[..., None] + pv
+
+            m0 = jnp.full((b, kvh, g, cq), NEG_INF, F32)
+            l0 = jnp.zeros((b, kvh, g, cq), F32)
+            a0 = jnp.zeros((b, kvh, g, cq, hd), F32)
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nk))
+            out = acc / jnp.maximum(l[..., None], 1e-30)
+            lse = m + jnp.log(jnp.maximum(l, 1e-30))
+            return out, lse                      # [B,KV,G,cq,(hd)], [B,KV,G,cq]
+
+        outs, lses = jax.lax.map(per_q, jnp.arange(nq))
+        # outs [nq,B,KV,G,cq,hd] -> [B,Sq,KV,G,hd]
+        out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, kvh, g, hd)
+        # lses [nq,B,KV,G,cq] -> [B,KV,G,Sq]
+        lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, kvh, g, sq)
+        return out.astype(q.dtype), lse
+
+    @jax.custom_vjp
+    def flash(q, k, v):
+        return fwd_pass(q, k, v)[0]
+
+    def flash_fwd(q, k, v):
+        out, lse = fwd_pass(q, k, v)
+        return out, (q, k, v, out, lse)
+
+    def flash_bwd(res, dout):
+        q, k, v, out, lse = res
+        b, _, kvh, g, hd = q.shape
+        scale = 1.0 / float(hd) ** 0.5
+        qg = q.reshape(b, nq, cq, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+        kc = k.reshape(b, nk, ck, kvh, hd).transpose(1, 0, 2, 3, 4)
+        vc = v.reshape(b, nk, ck, kvh, hd).transpose(1, 0, 2, 3, 4)
+        dog = dout.astype(F32).reshape(b, nq, cq, kvh, g, hd) \
+            .transpose(1, 0, 2, 3, 4, 5)
+        og = out.astype(F32).reshape(b, nq, cq, kvh, g, hd) \
+            .transpose(1, 0, 2, 3, 4, 5)
+        lseg = lse.transpose(0, 3, 1, 2).reshape(b, nq, cq, kvh, g) \
+            .transpose(1, 0, 3, 4, 2)            # [nq,B,KV,G,cq]
+        # D = rowsum(dout * out)
+        Dg = jnp.sum(dog * og, axis=-1)          # [nq,B,cq,KV,G]
+        Dg = Dg.transpose(0, 1, 3, 4, 2)         # [nq,B,KV,G,cq]
+
+        def per_q(qi):
+            qb = qg[qi].astype(F32)
+            dob = dog[qi]
+            lse_b = lseg[qi]
+            D_b = Dg[qi]
+            q_pos = q_offset + qi * cq + jnp.arange(cq)
+
+            def kv_step(dq_acc, ki):
+                k_pos = ki * ck + jnp.arange(ck)
+                mask = _block_mask(q_pos, k_pos, sk_valid, causal, window)
+                kb = kc[ki].astype(F32)
+                vb = vc[ki].astype(F32)
+                s = jnp.einsum("bqkgh,bckh->bkgqc", qb, kb) * scale
+                s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+                p = jnp.exp(s - lse_b[..., None])             # [B,KV,G,cq,ck]
+                dv_c = jnp.einsum("bkgqc,bqkgh->bckh", p.astype(bdt),
+                                  dob.astype(bdt),
+                                  preferred_element_type=F32)
+                dp = jnp.einsum("bqkgh,bckh->bkgqc", dob.astype(bdt),
+                                vb.astype(bdt), preferred_element_type=F32)
+                ds = (p * (dp - D_b[..., None]) * scale)
+                dq_blk = jnp.einsum("bkgqc,bckh->bqkgh", ds.astype(bdt),
+                                    kb.astype(bdt),
+                                    preferred_element_type=F32)
+                dk_c = jnp.einsum("bkgqc,bqkgh->bckh", ds.astype(bdt),
+                                  qb.astype(bdt), preferred_element_type=F32)
+                return dq_acc + dq_blk, (dk_c, dv_c)
+
+            dq0 = jnp.zeros((b, cq, kvh, g, hd), F32)
+            dq_b, (dk_chunks, dv_chunks) = jax.lax.scan(
+                kv_step, dq0, jnp.arange(nk))
+            return dq_b, dk_chunks, dv_chunks    # dk/dv: [nk,B,ck,KV,hd]
+
+        dqs, dks, dvs = jax.lax.map(per_q, jnp.arange(nq))
+        dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, kvh, g, hd)
+        dk = jnp.sum(dks, axis=0).transpose(1, 0, 2, 3, 4) \
+            .reshape(b, sk, kvh, hd)
+        dv = jnp.sum(dvs, axis=0).transpose(1, 0, 2, 3, 4) \
+            .reshape(b, sk, kvh, hd)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+    flash.defvjp(flash_fwd, flash_bwd)
+    return flash
+
+
+@functools.partial(jax.jit, static_argnames=("q_offset", "causal", "window",
+                                              "chunk_q", "chunk_k",
+                                              "skip_future", "gqa",
+                                              "pad_heads_to", "block_dtype",
+                                              "shard_heads"))
+def flash_attention(q, k, v, q_offset=0, causal: bool = True,
+                    window: int = 0, chunk_q: int = 512, chunk_k: int = 1024,
+                    skip_future: bool = False, gqa: str = "repeat",
+                    pad_heads_to: int = 0, block_dtype: str = "float32",
+                    shard_heads: bool = False):
+    """Chunked attention. q [B,Sq,H,hd], k/v [B,Sk,KV,hd] -> [B,Sq,H,hd].
+
+    GQA via head grouping (G = H // KV). ``causal`` masks with the global
+    query offset ``q_offset`` (prefill continuation / decode windows).
+    ``window > 0`` = sliding-window (local) attention.
+    ``skip_future``: iterate kv chunks with a dynamic bound so fully-masked
+    future blocks are never computed (halves causal FLOPs; the paper-faithful
+    masked-full variant is kept for the §Perf baseline via False).
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kvh, _ = k.shape
+    h_true = h
+    if gqa == "repeat" and kvh != h:
+        # Sharding-friendly layout (DESIGN.md §5 / EXPERIMENTS §Perf): the
+        # grouped [B,S,KV,G,hd] reshape splits the sharded head dim and
+        # forces GSPMD to all-gather activations per layer; repeating kv to
+        # one lane per q-head keeps every tensor sharded on the SAME head
+        # axis. kv was replicated anyway whenever KV < mesh model size.
+        rep = h // kvh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        kvh = h
+    if pad_heads_to and pad_heads_to > h and kvh == h:
+        # Head padding: divisibility-driven (e.g. 28 heads -> 32 on a
+        # 16-way model axis). Padded q lanes attend to padded (zero) kv
+        # lanes, produce zeros, and are sliced off before the out proj.
+        pad = pad_heads_to - h
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        h = kvh = pad_heads_to
+    if shard_heads:
+        # Padding only pays off if GSPMD actually splits the head dim —
+        # the (replicated) projection weights cannot carry that sharding,
+        # so constrain the activations explicitly.
+        from jax.sharding import PartitionSpec as _P
+        U = _P.UNCONSTRAINED
+        spec = _P(U, U, "model", U)
+        q = jax.lax.with_sharding_constraint(q, spec)
+        k = jax.lax.with_sharding_constraint(k, spec)
+        v = jax.lax.with_sharding_constraint(v, spec)
+    g = h // kvh
+    scale = 1.0 / jnp.sqrt(hd).astype(F32)
+    cq = min(chunk_q, sq)
+    ck = min(chunk_k, sk)
+    nq = -(-sq // cq)
+    nk = -(-sk // ck)
+    sq_p, sk_p = nq * cq, nk * ck
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+
+    if not (skip_future and causal):
+        # memory-safe custom-VJP path (recompute-based backward)
+        flash = _make_flash_vjp(causal, window, cq, ck, sq_p, sk_p,
+                                int(q_offset), sk_valid=sk,
+                                block_dtype=block_dtype)
+        qg_flat = q.reshape(b, sq_p, kvh, g, hd)
+        out = flash(qg_flat, k, v)
+        out = out.reshape(b, sq_p, h, hd)
+        return out[:, :sq, :h_true].astype(q.dtype)
+
+    qg = q.reshape(b, nq, cq, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(b, nk, ck, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, ck, kvh, hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos_base = jnp.asarray(q_offset, jnp.int32)
+
+    def per_q_chunk(qi, qb):
+        q_pos = q_pos_base + qi * cq + jnp.arange(cq)          # [cq]
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb = kc[ki]
+            vb = vc[ki]
+            k_pos = ki * ck + jnp.arange(ck)                   # [ck]
+            mask = (k_pos[None, :] < sk)
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            s = _attn_block(qb, kb, vb, mask, scale)           # [B,KV,G,cq,ck]
+            blk_max = jnp.max(s, axis=-1)
+            new_m = jnp.maximum(m, blk_max)
+            p = jnp.exp(s - new_m[..., None])
+            corr = jnp.exp(m - new_m)
+            new_l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqc,bckh->bkgqh", p, vb.astype(F32))
+            new_acc = acc * corr[..., None] + pv
+            return (new_m, new_l, new_acc), None
+
+        m0 = jnp.full((b, kvh, g, cq), NEG_INF, F32)
+        l0 = jnp.zeros((b, kvh, g, cq), F32)
+        a0 = jnp.zeros((b, kvh, g, cq, hd), F32)
+
+        if skip_future and causal:
+            # dynamic kv bound: only chunks whose start can be visible
+            hi = jnp.minimum(
+                (q_pos_base + (qi + 1) * cq + ck - 1) // ck, nk)
+            lo = jnp.int32(0)
+            if window:
+                lo = jnp.maximum(
+                    (q_pos_base + qi * cq - window) // ck, 0).astype(jnp.int32)
+
+            def body(ki, carry):
+                carry, _ = kv_step(carry, ki)
+                return carry
+
+            m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out  # [B,KV,G,cq,hd]
+
+    outs = jax.lax.map(lambda qi: per_q_chunk(qi, qg[qi]), jnp.arange(nq))
+    # [nq,B,KV,G,cq,hd] -> [B, Sq, H, hd]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq_p, h, hd)
+    return out[:, :sq, :h_true].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, window: int = 0):
+    """Single-token attention over a KV cache.
+
+    q [B,1,H,hd]; k/v_cache [B,Smax,KV,hd]; cache_len [] or [B] — number of
+    valid cache entries (the new token's KV must already be written).
+    """
+    b, _, h, hd = q.shape
+    _, smax, kvh, _ = k_cache.shape
+    g = h // kvh
+    scale = 1.0 / jnp.sqrt(hd).astype(F32)
+    qg = q.reshape(b, kvh, g, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(F32),
+                   k_cache.astype(F32)) * scale
+    pos = jnp.arange(smax)
+    cl = jnp.asarray(cache_len)
+    cl = cl[:, None] if cl.ndim == 1 else cl
+    mask = pos[None, :] < cl                                  # [B, Smax]
+    if window:
+        mask = mask & (pos[None, :] >= cl - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(F32))
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------- projections ---
+def qkv_project(params: Params, x, num_heads, num_kv_heads, head_dim):
+    """x [B,S,D] -> q [B,S,H,hd], k/v [B,S,KV,hd]."""
+    b, s, _ = x.shape
+    q = jnp.dot(x, params["wq"], preferred_element_type=F32)
+    k = jnp.dot(x, params["wk"], preferred_element_type=F32)
+    v = jnp.dot(x, params["wv"], preferred_element_type=F32)
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return (q.reshape(b, s, num_heads, head_dim).astype(x.dtype),
+            k.reshape(b, s, num_kv_heads, head_dim).astype(x.dtype),
+            v.reshape(b, s, num_kv_heads, head_dim).astype(x.dtype))
+
+
+def out_project(params: Params, o):
+    b, s, h, hd = o.shape
+    return jnp.dot(o.reshape(b, s, h * hd), params["wo"],
+                   preferred_element_type=F32).astype(o.dtype)

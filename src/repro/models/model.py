@@ -1,0 +1,109 @@
+"""Unified model API over all 10 architectures.
+
+    cfg = get_config("qwen2-7b")
+    params = model.init_params(cfg, rng)          # or abstract_params(cfg)
+    logits, aux = model.forward(cfg, params, batch)
+    loss = model.loss_fn(cfg, params, batch)
+    cache = model.init_cache(cfg, batch=8, max_seq=1024)
+    logits, cache = model.decode_step(cfg, params, cache, token)
+
+``batch`` is a dict: tokens [B,S] int32, labels [B,S] int32 (-1 = masked),
+and frontend_embeds [B,T,D] for audio/vision archs (stubbed embeddings per
+the shape card).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+F32 = jnp.float32
+
+
+def _mod(cfg: ModelConfig):
+    return encdec if cfg.family == "encdec" else transformer
+
+
+def init_params(cfg: ModelConfig, rng):
+    return _mod(cfg).init_params(cfg, rng)
+
+
+def abstract_params(cfg: ModelConfig):
+    return _mod(cfg).abstract_params(cfg)
+
+
+def needs_frontend(cfg: ModelConfig) -> bool:
+    return cfg.num_frontend_tokens > 0
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat: bool = True,
+            skip_future: bool = False, opts: dict | None = None):
+    if cfg.family == "encdec":
+        return encdec.forward(cfg, params, batch["tokens"],
+                              frontend_embeds=batch["frontend_embeds"],
+                              remat=remat)
+    return transformer.forward(cfg, params, batch["tokens"],
+                               frontend_embeds=batch.get("frontend_embeds"),
+                               remat=remat, skip_future=skip_future,
+                               opts=opts)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, remat: bool = True,
+            skip_future: bool = False, aux_weight: float = 0.01,
+            opts: dict | None = None):
+    logits, aux = forward(cfg, params, batch, remat=remat,
+                          skip_future=skip_future, opts=opts)
+    labels = batch["labels"]
+    mask = labels >= 0
+    logits = logits.astype(F32)
+    # Vocab-sharding-safe CE: take_along_axis over a model-sharded vocab dim
+    # would make SPMD all-gather the full [B,S,V] logits (tens of GB).
+    # A broadcasted-iota one-hot select keeps every op sharded over V.
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    onehot = vocab_iota == jnp.maximum(labels, 0)[..., None]
+    picked = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = jnp.where(mask, lse - picked, 0.0)
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+    return loss + aux_weight * aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, **kw):
+    return _mod(cfg).init_cache(cfg, batch, max_seq, **kw)
+
+
+def decode_step(cfg: ModelConfig, params, cache, token,
+                opts: dict | None = None):
+    if cfg.family == "encdec":
+        return encdec.decode_step(cfg, params, cache, token)
+    return transformer.decode_step(cfg, params, cache, token, opts)
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, rng=None,
+               abstract: bool = False):
+    """Concrete (or abstract) training batch for this arch."""
+    t_front = cfg.num_frontend_tokens
+    if abstract:
+        out = dict(
+            tokens=jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            labels=jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        )
+        if t_front:
+            out["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (batch, t_front, cfg.d_model), jnp.dtype(cfg.dtype))
+        return out
+    rng = rng if rng is not None else jax.random.key(0)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    out = dict(
+        tokens=jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size,
+                                  jnp.int32),
+        labels=jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size,
+                                  jnp.int32),
+    )
+    if t_front:
+        out["frontend_embeds"] = (jax.random.normal(
+            k3, (batch, t_front, cfg.d_model)) * 0.02).astype(cfg.dtype)
+    return out

@@ -1,0 +1,155 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity.
+
+Sort-based dispatch (DESIGN.md §5): instead of the GShard one-hot dispatch
+tensor [T, E, C] (which at llama4 scale is tens of GB per device), tokens are
+argsorted by expert id and scattered into an [E, C, D] buffer — O(T·D + E·C·D)
+memory, fixed shapes, fully shardable. Overflowing tokens are dropped
+(standard capacity-factor semantics); the residual path carries them.
+
+Expert weights live as [E, D, F]/[E, F, D] stacks so the expert axis shards
+over the mesh's model axis (expert parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def moe_ffn(params, x, *, num_experts: int, experts_per_token: int,
+            capacity_factor: float = 1.25, act: str = "silu",
+            impl: str = "sort", shard_experts: bool = False):
+    """x [B, S, D] -> [B, S, D].
+
+    params: wr [D, E] router; wg/wu [E, D, F]; wd [E, F, D].
+
+    impl="sort": argsort dispatch (least memory, but its dynamic scatter
+    indices defeat GSPMD sharding propagation — expert grads come back
+    replicated+all-reduced at terabyte scale; see EXPERIMENTS §Perf).
+    impl="einsum": GShard-style one-hot dispatch einsums — more dispatch
+    FLOPs and a [T, E, C] mask, but every contraction carries a clean
+    sharding (tokens on batch axes, experts on model), which is what the
+    collective-bound hillclimb iteration needed.
+    """
+    b, s, d = x.shape
+    e = num_experts
+    topk = experts_per_token
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = jnp.dot(xt.astype(F32), params["wr"].astype(F32))   # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, topk)                    # [T, topk]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(t * topk * capacity_factor / e))
+
+    if impl == "einsum":
+        return _moe_einsum(params, x, xt, probs, gate, expert, e, topk,
+                           capacity_factor, act, shard_experts)
+
+    flat_expert = expert.reshape(-1)                             # [T*topk]
+    flat_gate = gate.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), topk)
+
+    # rank of each (token, slot) within its expert, in token order
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    # position within expert = index - start offset of that expert
+    counts = jnp.bincount(flat_expert, length=e)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos_sorted = jnp.arange(t * topk) - starts[sorted_expert]
+    pos = jnp.zeros(t * topk, jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+
+    keep = pos < capacity
+    dest = jnp.where(keep, flat_expert * capacity + pos, e * capacity)
+
+    buf = jnp.zeros((e * capacity + 1, d), x.dtype)
+    buf = buf.at[dest].set(xt[flat_tok])
+    xe = buf[: e * capacity].reshape(e, capacity, d)
+
+    gdt = jnp.einsum("ecd,edf->ecf", xe.astype(F32), params["wg"].astype(F32))
+    udt = jnp.einsum("ecd,edf->ecf", xe.astype(F32), params["wu"].astype(F32))
+    actf = dict(silu=jax.nn.silu, gelu=jax.nn.gelu)[act]
+    h = (actf(gdt) * udt).astype(x.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h.astype(F32), params["wd"].astype(F32))
+    ye = ye.reshape(e * capacity, d)
+
+    contrib = jnp.where(keep[:, None],
+                        ye[jnp.minimum(dest, e * capacity - 1)]
+                        * flat_gate[:, None], 0.0)
+    yt = jnp.zeros((t, d), F32).at[flat_tok].add(contrib)
+
+    # auxiliary load-balance loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        (jax.nn.one_hot(expert[:, 0], e)), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return yt.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _moe_einsum(params, x, xt, probs, gate, expert, e, topk, cf, act,
+                shard_experts: bool = False):
+    """GShard dispatch WITH a group axis (= batch): xe [G, E, C, D].
+
+    The group dim shards over the data axes while experts shard over
+    "model", so the expert FFN einsum parallelizes over BOTH — collapsing
+    all tokens into one global group leaves expert compute only model-way
+    parallel (observed 5x compute inflation on llama4; EXPERIMENTS §Perf).
+    Dispatch masks are built per top-k slot to avoid a [T*topk, E, C]
+    monolith. Capacity is per group: C = S * topk * cf / E.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def pin(a, lead):
+        if not shard_experts:
+            return a
+        U = P.UNCONSTRAINED
+        spec = [U] * a.ndim
+        spec[lead] = "model"
+        return jax.lax.with_sharding_constraint(a, P(*spec))
+
+    g, s, d = x.shape
+    cap = max(1, int(s * topk * cf / e))
+    expert_g = expert.reshape(g, s, topk)
+    gate_g = gate.reshape(g, s, topk).astype(x.dtype)
+
+    # rank of each (s, k) slot within its (group, expert), token order
+    oh = jax.nn.one_hot(expert_g, e, dtype=jnp.int32)       # [G, S, K, E]
+    flat = oh.reshape(g, s * topk, e)
+    rank_flat = jnp.cumsum(flat, axis=1) - flat
+    rank = jnp.sum(rank_flat * flat, axis=-1).reshape(g, s, topk)
+    keep = rank < cap
+
+    xe = jnp.zeros((g, e, cap, d), F32)
+    combine = []
+    for k in range(topk):
+        pos_oh = jax.nn.one_hot(jnp.where(keep[..., k], rank[..., k], cap),
+                                cap + 1, dtype=x.dtype)[..., :cap]  # [G,S,C]
+        disp_k = oh[..., k, :].astype(x.dtype)[..., :, None] \
+            * pos_oh[..., None, :]                           # [G, S, E, C]
+        xe = xe + jnp.einsum("gsec,gsd->gecd", disp_k, x,
+                             preferred_element_type=F32)
+        combine.append(disp_k * gate_g[..., k][..., None, None])
+    xe = pin(xe.astype(x.dtype), 1)
+
+    gdt = jnp.einsum("gecd,edf->gecf", xe.astype(F32),
+                     params["wg"].astype(F32))
+    udt = jnp.einsum("gecd,edf->gecf", xe.astype(F32),
+                     params["wu"].astype(F32))
+    actf = dict(silu=jax.nn.silu, gelu=jax.nn.gelu)[act]
+    h = pin((actf(gdt) * udt).astype(x.dtype), 1)
+    ye = pin(jnp.einsum("gecf,efd->gecd", h.astype(F32),
+                        params["wd"].astype(F32)).astype(x.dtype), 1)
+
+    yt = jnp.zeros((g, s, d), F32)
+    for k in range(topk):
+        yt = yt + jnp.einsum("gsec,gecd->gsd", combine[k], ye,
+                             preferred_element_type=F32)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert[:, 0], e), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return yt.astype(x.dtype), aux

@@ -1,0 +1,83 @@
+"""Griffin / RecurrentGemma recurrent block — arXiv:2402.19427.
+
+Recurrent block = two branches: (linear -> GeLU) gate and
+(linear -> causal conv1d(4) -> RG-LRU), merged multiplicatively then
+projected out. The RG-LRU recurrence
+
+    r_t = sigmoid(x_t W_r + b_r)
+    i_t = sigmoid(x_t W_i + b_i)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+runs as an associative scan over (a, b) pairs for training/prefill and as a
+single fused step for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import _causal_conv
+
+F32 = jnp.float32
+_C = 8.0  # Griffin's fixed scalar c
+
+
+def _lru_coeffs(params, x):
+    r = jax.nn.sigmoid(jnp.dot(x.astype(F32), params["w_r"]) + params["b_r"])
+    i = jax.nn.sigmoid(jnp.dot(x.astype(F32), params["w_i"]) + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r      # [B,S,W] (<=0)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * x.astype(F32))
+    return a, gated
+
+
+def rg_lru(params, x, h0=None):
+    """x [B,S,W] -> (y [B,S,W], h_last [B,W]) via associative scan."""
+    a, b = _lru_coeffs(params, x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(F32))
+    _, ys = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return ys.astype(x.dtype), ys[:, -1]
+
+
+def rg_lru_step(params, x, h):
+    """Single-token update. x [B,1,W], h [B,W]."""
+    a, b = _lru_coeffs(params, x)
+    h_new = a[:, 0] * h.astype(F32) + b[:, 0]
+    return h_new[:, None].astype(x.dtype), h_new
+
+
+def recurrent_block(params, x, decode_state=None):
+    """Griffin recurrent block. x [B,S,D].
+
+    params: w_gate [D,W], w_branch [D,W], conv_w [K,W], conv_b [W],
+            lru (w_r, w_i, b_r, b_i, lam), w_out [W,D].
+    decode_state: (conv_buf [B,K,W], h [B,W]) or None.
+    """
+    gate = jax.nn.gelu(jnp.dot(x, params["w_gate"],
+                               preferred_element_type=F32))
+    br = jnp.dot(x, params["w_branch"], preferred_element_type=F32) \
+        .astype(x.dtype)
+    if decode_state is not None:
+        conv_buf, h = decode_state
+        conv_buf = jnp.concatenate([conv_buf[:, 1:], br], axis=1)
+        c = jnp.einsum("bkc,kc->bc", conv_buf.astype(F32),
+                       params["conv_w"].astype(F32)) + params["conv_b"]
+        c = c[:, None].astype(x.dtype)
+        y, h_new = rg_lru_step(params["lru"], c, h)
+        new_state = (conv_buf, h_new)
+    else:
+        c = _causal_conv(br, params["conv_w"], params["conv_b"])
+        y, h_last = rg_lru(params["lru"], c)
+        new_state = h_last
+    out = jnp.dot((y.astype(F32) * gate).astype(x.dtype), params["w_out"],
+                  preferred_element_type=F32)
+    return out.astype(x.dtype), new_state

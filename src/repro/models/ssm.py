@@ -1,0 +1,145 @@
+"""Mamba-2 (SSD, state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD algorithm: within-chunk attention-like term (quadratic in the
+chunk) + across-chunk recurrence on the [H, P, N] state. Matches the
+sequential scan reference (tests/test_models.py) and supports O(1)-state
+single-token decode for serving.
+
+Layout: d_inner = expand * d_model, H = d_inner / headdim heads, state N.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x [B,S,C], w [K,C], b [C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(F32), w[:, None, :].astype(F32),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return (out + b).astype(x.dtype)
+
+
+def ssd_chunked(xh, dt, A, B_, C_, chunk: int = 128, h0=None):
+    """SSD forward. xh [B,S,H,P], dt [B,S,H], A [H] (negative),
+    B_/C_ [B,S,N]. Returns (y [B,S,H,P], h_last [B,H,P,N])."""
+    b, s, h, p = xh.shape
+    n = B_.shape[-1]
+    c = min(chunk, s)
+    nc = -(-s // c)
+    pad = nc * c - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    xs = xh.reshape(b, nc, c, h, p).astype(F32)
+    dts = dt.reshape(b, nc, c, h).astype(F32)
+    Bs = B_.reshape(b, nc, c, n).astype(F32)
+    Cs = C_.reshape(b, nc, c, n).astype(F32)
+
+    dA = dts * A[None, None, None, :]           # [B,NC,c,H]  (<= 0)
+    cumA = jnp.cumsum(dA, axis=2)               # within-chunk cumulative
+    seg = cumA[:, :, :, None, :] - cumA[:, :, None, :, :]  # [B,NC,c(q),c(k),H]
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # within-chunk: y_diag[q] = sum_k C_q.B_k decay(q,k) dt_k x_k
+    cb = jnp.einsum("bzqn,bzkn->bzqk", Cs, Bs)               # [B,NC,c,c]
+    y_diag = jnp.einsum("bzqk,bzqkh,bzkh,bzkhp->bzqhp",
+                        cb, decay, dts, xs)
+
+    # chunk-level state contributions
+    chunk_decay = jnp.exp(cumA[:, :, -1, :])                  # [B,NC,H]
+    rem = jnp.exp(cumA[:, :, -1, None, :] - cumA)             # decay to end
+    state_in = jnp.einsum("bzkn,bzkh,bzkh,bzkhp->bzhpn",
+                          Bs, rem, dts, xs)                   # [B,NC,H,P,N]
+
+    def scan_state(hprev, inp):
+        dec, s_in = inp                                        # [B,H], [B,H,P,N]
+        hnew = hprev * dec[..., None, None] + s_in
+        return hnew, hprev
+
+    h_init = jnp.zeros((b, h, p, n), F32) if h0 is None else h0.astype(F32)
+    h_last, h_prevs = jax.lax.scan(
+        scan_state, h_init,
+        (chunk_decay.transpose(1, 0, 2), state_in.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                 # [B,NC,H,P,N]
+
+    # across-chunk: y_off[q] = C_q . (decay_to_start(q) * h_prev)
+    into = jnp.exp(cumA)                                       # decay start->q
+    y_off = jnp.einsum("bzqn,bzqh,bzhpn->bzqhp", Cs, into, h_prevs)
+
+    y = (y_diag + y_off).reshape(b, nc * c, h, p)[:, :s]
+    return y, h_last
+
+
+def ssd_step(xh, dt, A, B_, C_, h):
+    """Single-token SSD update. xh [B,1,H,P] dt [B,1,H] B_/C_ [B,1,N],
+    h [B,H,P,N] -> (y [B,1,H,P], h_new)."""
+    dA = jnp.exp(dt[:, 0, :, None, None].astype(F32)
+                 * A[None, :, None, None])                     # [B,H,1,1]
+    upd = jnp.einsum("bn,bh,bhp->bhpn", B_[:, 0].astype(F32),
+                     dt[:, 0].astype(F32), xh[:, 0].astype(F32))
+    h_new = h.astype(F32) * dA + upd
+    y = jnp.einsum("bn,bhpn->bhp", C_[:, 0].astype(F32), h_new)
+    return y[:, None].astype(xh.dtype), h_new
+
+
+def mamba2_block(params, x, *, headdim: int, d_state: int, chunk: int = 128,
+                 decode_state=None):
+    """Full Mamba-2 block. x [B,S,D].
+
+    params: w_in [D, 2*Di + 2*N + H], conv_w [K, Di+2N], conv_b, A_log [H],
+    D_skip [H], norm_scale [Di], w_out [Di, D], dt_bias [H].
+    Returns (y, new_decode_state) where decode_state = (conv_buf, h).
+    """
+    b, s, d = x.shape
+    w_in = params["w_in"]
+    di = params["w_out"].shape[0]
+    h_heads = params["A_log"].shape[0]
+    n = d_state
+
+    zxbcdt = jnp.dot(x, w_in, preferred_element_type=F32).astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * n], axis=-1)
+
+    if decode_state is not None:
+        conv_buf, h0 = decode_state
+        k = params["conv_w"].shape[0]
+        conv_buf = jnp.concatenate([conv_buf[:, 1:], xbc], axis=1)
+        xbc_conv = jnp.einsum("bkc,kc->bc", conv_buf.astype(F32),
+                              params["conv_w"].astype(F32))
+        xbc_conv = (xbc_conv + params["conv_b"])[:, None]
+        xbc_conv = jax.nn.silu(xbc_conv).astype(x.dtype)
+    else:
+        conv_buf = None
+        xbc_conv = jax.nn.silu(
+            _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        ).astype(x.dtype)
+
+    xh, B_, C_ = jnp.split(xbc_conv, [di, di + n], axis=-1)
+    xh = xh.reshape(b, -1, h_heads, headdim)
+    dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(F32))
+
+    if decode_state is not None:
+        y, h_new = ssd_step(xh, dt, A, B_, C_, h0)
+        new_state = (conv_buf, h_new)
+    else:
+        y, h_last = ssd_chunked(xh, dt, A, B_, C_, chunk=chunk)
+        new_state = h_last
+    y = y + xh.astype(F32) * params["D_skip"][None, None, :, None]
+    y = y.reshape(b, -1, di)
+    # gated RMSNorm (Mamba-2 uses norm(y * silu(z)))
+    from repro.models.layers import rms_norm
+    y = rms_norm((y * jax.nn.silu(z.astype(F32))).astype(x.dtype),
+                 params["norm_scale"])
+    out = jnp.dot(y, params["w_out"], preferred_element_type=F32)
+    return out.astype(x.dtype), new_state

@@ -1,0 +1,580 @@
+"""Decoder-only model assembly for the dense / moe / vlm / hybrid / ssm
+families. One module builds init, forward (train / prefill), and single-token
+decode from a ``ModelConfig``.
+
+Structure notes (DESIGN.md §3):
+  * every homogeneous layer stack is ``lax.scan``'d over stacked params
+    ([L, ...] leading axis) so HLO size is O(1) in depth;
+  * heterogeneous wiring (vlm cross-attn every N, hybrid R/R/A pattern) scans
+    over *superblocks* with the pattern unrolled inside;
+  * decode carries a cache pytree whose shape depends only on the config and
+    max sequence length (ring-buffered local windows for hybrid; constant
+    SSM state for mamba — that is what makes long_500k runnable there).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.moe import moe_ffn
+from repro.models.rglru import recurrent_block
+from repro.models.ssm import mamba2_block
+
+F32 = jnp.float32
+Params = dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# =================================================================== init ===
+def _init_attn(rng, cfg: ModelConfig, dt):
+    d, h, kv, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.resolved_head_dim)
+    ks = jax.random.split(rng, 4)
+    sc = d ** -0.5
+    p = dict(
+        wq=(jax.random.normal(ks[0], (d, h * hd)) * sc).astype(dt),
+        wk=(jax.random.normal(ks[1], (d, kv * hd)) * sc).astype(dt),
+        wv=(jax.random.normal(ks[2], (d, kv * hd)) * sc).astype(dt),
+        wo=(jax.random.normal(ks[3], (h * hd, d)) * (h * hd) ** -0.5).astype(dt),
+    )
+    if cfg.qkv_bias:
+        p.update(bq=jnp.zeros((h * hd,), dt), bk=jnp.zeros((kv * hd,), dt),
+                 bv=jnp.zeros((kv * hd,), dt))
+    return p
+
+
+def _init_mlp(rng, cfg: ModelConfig, dt):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    if cfg.mlp_act == "gelu_mlp":      # plain 2-matrix MLP (whisper)
+        return dict(
+            w1=(jax.random.normal(ks[0], (d, f)) * d ** -0.5).astype(dt),
+            b1=jnp.zeros((f,), dt),
+            w2=(jax.random.normal(ks[1], (f, d)) * f ** -0.5).astype(dt),
+            b2=jnp.zeros((d,), dt),
+        )
+    return dict(
+        wg=(jax.random.normal(ks[0], (d, f)) * d ** -0.5).astype(dt),
+        wu=(jax.random.normal(ks[1], (d, f)) * d ** -0.5).astype(dt),
+        wd=(jax.random.normal(ks[2], (f, d)) * f ** -0.5).astype(dt),
+    )
+
+
+def _init_moe(rng, cfg: ModelConfig, dt):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(rng, 4)
+    return dict(
+        wr=(jax.random.normal(ks[0], (d, e)) * d ** -0.5).astype(F32),
+        wg=(jax.random.normal(ks[1], (e, d, f)) * d ** -0.5).astype(dt),
+        wu=(jax.random.normal(ks[2], (e, d, f)) * d ** -0.5).astype(dt),
+        wd=(jax.random.normal(ks[3], (e, f, d)) * f ** -0.5).astype(dt),
+    )
+
+
+def _init_dense_block(rng, cfg: ModelConfig, dt, moe: bool):
+    ks = jax.random.split(rng, 3)
+    blk = dict(
+        norm1=jnp.zeros((cfg.d_model,), F32),
+        attn=_init_attn(ks[0], cfg, dt),
+        norm2=jnp.zeros((cfg.d_model,), F32),
+    )
+    if moe:
+        blk["moe"] = _init_moe(ks[1], cfg, dt)
+    else:
+        blk["mlp"] = _init_mlp(ks[1], cfg, dt)
+    return blk
+
+
+def _init_cross_block(rng, cfg: ModelConfig, dt):
+    ks = jax.random.split(rng, 3)
+    return dict(
+        norm1=jnp.zeros((cfg.d_model,), F32),
+        attn=_init_attn(ks[0], cfg, dt),
+        norm2=jnp.zeros((cfg.d_model,), F32),
+        mlp=_init_mlp(ks[1], cfg, dt),
+        gate=jnp.zeros((), F32),          # gated cross-attn (llama3.2-vision)
+    )
+
+
+def _init_recurrent_block(rng, cfg: ModelConfig, dt):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(rng, 6)
+    return dict(
+        norm1=jnp.zeros((d,), F32),
+        w_gate=(jax.random.normal(ks[0], (d, w)) * d ** -0.5).astype(dt),
+        w_branch=(jax.random.normal(ks[1], (d, w)) * d ** -0.5).astype(dt),
+        conv_w=(jax.random.normal(ks[2], (cfg.ssm_conv, w)) * 0.1).astype(dt),
+        conv_b=jnp.zeros((w,), dt),
+        lru=dict(
+            w_r=(jax.random.normal(ks[3], (w, w)) * w ** -0.5).astype(F32),
+            w_i=(jax.random.normal(ks[4], (w, w)) * w ** -0.5).astype(F32),
+            b_r=jnp.zeros((w,), F32), b_i=jnp.zeros((w,), F32),
+            lam=jnp.full((w,), 0.5, F32),
+        ),
+        w_out=(jax.random.normal(ks[5], (w, d)) * w ** -0.5).astype(dt),
+        norm2=jnp.zeros((d,), F32),
+        mlp=_init_mlp(jax.random.fold_in(rng, 7), cfg, dt),
+    )
+
+
+def _init_ssm_block(rng, cfg: ModelConfig, dt):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = di // cfg.ssm_headdim
+    ks = jax.random.split(rng, 3)
+    z_dim = 2 * di + 2 * n + nh
+    return dict(
+        norm1=jnp.zeros((d,), F32),
+        w_in=(jax.random.normal(ks[0], (d, z_dim)) * d ** -0.5).astype(dt),
+        conv_w=(jax.random.normal(ks[1], (cfg.ssm_conv, di + 2 * n)) * 0.1
+                ).astype(dt),
+        conv_b=jnp.zeros((di + 2 * n,), dt),
+        A_log=jnp.zeros((nh,), F32),
+        dt_bias=jnp.zeros((nh,), F32),
+        D_skip=jnp.ones((nh,), F32),
+        norm_scale=jnp.zeros((di,), F32),
+        w_out=(jax.random.normal(ks[2], (di, d)) * di ** -0.5).astype(dt),
+    )
+
+
+def _stack(init_fn, rng, n: int):
+    """Initialize n blocks and stack leaves on a leading axis."""
+    blocks = [init_fn(jax.random.fold_in(rng, i)) for i in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 8)
+    params: Params = dict(
+        embed=(jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model))
+               * 0.02).astype(dt),
+        final_norm=jnp.zeros((cfg.d_model,), F32),
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            ks[1], (cfg.d_model, cfg.vocab_size)) * cfg.d_model ** -0.5
+        ).astype(dt)
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        params["blocks"] = _stack(
+            lambda r: _init_dense_block(r, cfg, dt, fam == "moe"),
+            ks[2], cfg.num_layers)
+    elif fam == "vlm":
+        every = cfg.cross_attn_every
+        n_super = cfg.num_layers // every
+        params["blocks"] = _stack(
+            lambda r: jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[_init_dense_block(jax.random.fold_in(r, i), cfg, dt, False)
+                  for i in range(every)]),
+            ks[2], n_super)
+        params["cross_blocks"] = _stack(
+            lambda r: _init_cross_block(r, cfg, dt), ks[3], n_super)
+    elif fam == "hybrid":
+        pat = cfg.block_pattern
+        n_super = cfg.num_layers // len(pat)
+        tail = cfg.num_layers - n_super * len(pat)
+
+        def init_super(r):
+            out = {}
+            for i, c in enumerate(pat):
+                ri = jax.random.fold_in(r, i)
+                out[f"b{i}"] = (_init_recurrent_block(ri, cfg, dt) if c == "R"
+                                else _init_dense_block(ri, cfg, dt, False))
+            return out
+
+        params["blocks"] = _stack(init_super, ks[2], n_super)
+        for i in range(tail):
+            c = pat[i % len(pat)]
+            ri = jax.random.fold_in(ks[4], i)
+            params[f"tail{i}"] = (
+                _init_recurrent_block(ri, cfg, dt) if c == "R"
+                else _init_dense_block(ri, cfg, dt, False))
+    elif fam == "ssm":
+        params["blocks"] = _stack(lambda r: _init_ssm_block(r, cfg, dt),
+                                  ks[2], cfg.num_layers)
+    else:
+        raise ValueError(f"family {fam} not handled here")
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0))
+
+
+# ================================================================ forward ===
+def _self_attn(blk, x, positions, cfg: ModelConfig, window: int = 0,
+               decode=None, causal: bool = True,
+               skip_future: bool = False, rope: bool = True,
+               opts: dict | None = None):
+    h = L.rms_norm(x, blk["norm1"], cfg.norm_eps)
+    q, k, v = L.qkv_project(blk["attn"], h, cfg.num_heads,
+                            cfg.num_kv_heads, cfg.resolved_head_dim)
+    if rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    if decode is not None:
+        k_cache, v_cache, cache_len = decode
+        # write current kv at position cache_len (ring-buffer for windows)
+        idx = jnp.mod(cache_len, k_cache.shape[1])
+        bidx = jnp.arange(k.shape[0])
+        k_cache = k_cache.at[bidx, idx].set(k[:, 0])
+        v_cache = v_cache.at[bidx, idx].set(v[:, 0])
+        if window and k_cache.shape[1] <= window:
+            # ring buffer holds exactly the window: everything valid
+            valid = jnp.minimum(cache_len + 1, k_cache.shape[1])
+            o = L.decode_attention(q, k_cache, v_cache, valid, window=0)
+        else:
+            o = L.decode_attention(q, k_cache, v_cache, cache_len + 1,
+                                   window=window)
+        out = x + L.out_project(blk["attn"], o)
+        return out, (k_cache, v_cache)
+    opts = opts or {}
+    o = L.flash_attention(
+        q, k, v, q_offset=0, causal=causal, window=window,
+        skip_future=skip_future,
+        pad_heads_to=opts.get("pad_heads_to", 0),
+        block_dtype=opts.get("attn_block_dtype", "float32"),
+        shard_heads=opts.get("shard_attn_heads", False))
+    return x + L.out_project(blk["attn"], o), None
+
+
+def _ffn(blk, x, cfg: ModelConfig, opts: dict | None = None):
+    opts = opts or {}
+    h = L.rms_norm(x, blk["norm2"], cfg.norm_eps)
+    if "moe" in blk:
+        y, aux = moe_ffn(blk["moe"], h, num_experts=cfg.num_experts,
+                         experts_per_token=cfg.experts_per_token,
+                         capacity_factor=cfg.capacity_factor,
+                         act=cfg.mlp_act,
+                         impl=opts.get("moe_impl", "sort"),
+                         shard_experts=opts.get("moe_shard_experts", False))
+        return x + y, aux
+    if cfg.mlp_act == "gelu_mlp":
+        return x + L.dense_mlp(blk["mlp"], h, "gelu"), 0.0
+    return x + L.gated_mlp(blk["mlp"], h, cfg.mlp_act), 0.0
+
+
+def _cross_attn(blk, x, kv_src, cfg: ModelConfig):
+    """Gated cross-attention to (precomputed) vision embeddings."""
+    h = L.rms_norm(x, blk["norm1"], cfg.norm_eps)
+    q, k, v = L.qkv_project(blk["attn"], h, cfg.num_heads,
+                            cfg.num_kv_heads, cfg.resolved_head_dim)
+    # kv from the frontend embeds
+    b, t, _ = kv_src.shape
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = jnp.dot(kv_src, blk["attn"]["wk"], preferred_element_type=F32) \
+        .reshape(b, t, kvh, hd).astype(x.dtype)
+    v = jnp.dot(kv_src, blk["attn"]["wv"], preferred_element_type=F32) \
+        .reshape(b, t, kvh, hd).astype(x.dtype)
+    o = L.flash_attention(q, k, v, causal=False, skip_future=False)
+    x = x + (jnp.tanh(blk["gate"])
+             * L.out_project(blk["attn"], o)).astype(x.dtype)
+    y, _ = _ffn(blk, x, cfg)
+    return y
+
+
+def _rec_block(blk, x, cfg: ModelConfig, decode_state=None):
+    h = L.rms_norm(x, blk["norm1"], cfg.norm_eps)
+    y, new_state = recurrent_block(blk, h, decode_state)
+    x = x + y
+    y2, _ = _ffn(blk, x, cfg)
+    return y2, new_state
+
+
+def _ssm_block(blk, x, cfg: ModelConfig, decode_state=None):
+    h = L.rms_norm(x, blk["norm1"], cfg.norm_eps)
+    y, new_state = mamba2_block(blk, h, headdim=cfg.ssm_headdim,
+                                d_state=cfg.ssm_state, chunk=cfg.ssm_chunk,
+                                decode_state=decode_state)
+    return x + y, new_state
+
+
+# ------------------------------------------------------------- full pass ---
+def forward(cfg: ModelConfig, params: Params, tokens, *,
+            frontend_embeds=None, remat: bool = True,
+            skip_future: bool = False, opts: dict | None = None):
+    """Token logits for train/prefill. tokens [B, S] -> logits [B, S, V].
+
+    Returns (logits, aux_loss).
+    """
+    dt = _dtype(cfg)
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(dt)
+    if cfg.family in ("dense", "moe", "vlm", "hybrid"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt) if cfg.tie_embeddings else x
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    aux_total = 0.0
+    opts = opts or {}
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        def blk_fn(x, blk):
+            x, _ = _self_attn(blk, x, positions, cfg,
+                              skip_future=skip_future, opts=opts)
+            x, aux = _ffn(blk, x, cfg, opts)
+            return x, aux
+        if remat:
+            blk_fn = jax.checkpoint(blk_fn)
+        x, auxs = jax.lax.scan(blk_fn, x, params["blocks"])
+        aux_total = jnp.sum(auxs)
+    elif fam == "vlm":
+        def super_fn(x, blks):
+            selfs, cross = blks
+            def inner(x, blk):
+                x, _ = _self_attn(blk, x, positions, cfg,
+                                  skip_future=skip_future, opts=opts)
+                x, _ = _ffn(blk, x, cfg, opts)
+                return x, 0.0
+            x, _ = jax.lax.scan(inner, x, selfs)
+            x = _cross_attn(cross, x, frontend_embeds, cfg)
+            return x, 0.0
+        if remat:
+            super_fn = jax.checkpoint(super_fn)
+        x, _ = jax.lax.scan(super_fn, x,
+                            (params["blocks"], params["cross_blocks"]))
+    elif fam == "hybrid":
+        pat = cfg.block_pattern
+
+        def super_fn(x, blks):
+            for i, c in enumerate(pat):
+                blk = blks[f"b{i}"]
+                if c == "R":
+                    x, _ = _rec_block(blk, x, cfg)
+                else:
+                    x, _ = _self_attn(blk, x, positions, cfg,
+                                      window=cfg.local_window,
+                                      skip_future=skip_future, opts=opts)
+                    x, _ = _ffn(blk, x, cfg, opts)
+            return x, 0.0
+        if remat:
+            super_fn = jax.checkpoint(super_fn)
+        x, _ = jax.lax.scan(super_fn, x, params["blocks"])
+        i = 0
+        while f"tail{i}" in params:
+            blk = params[f"tail{i}"]
+            c = pat[i % len(pat)]
+            if c == "R":
+                x, _ = _rec_block(blk, x, cfg)
+            else:
+                x, _ = _self_attn(blk, x, positions, cfg,
+                                  window=cfg.local_window,
+                                  skip_future=skip_future, opts=opts)
+                x, _ = _ffn(blk, x, cfg, opts)
+            i += 1
+    elif fam == "ssm":
+        def blk_fn(x, blk):
+            x, _ = _ssm_block(blk, x, cfg)
+            return x, 0.0
+        if remat:
+            blk_fn = jax.checkpoint(blk_fn)
+        x, _ = jax.lax.scan(blk_fn, x, params["blocks"])
+    else:
+        raise ValueError(fam)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.dot(x, head, preferred_element_type=F32)
+    return logits, aux_total
+
+
+# ================================================================= decode ===
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               frontend_tokens: int = 0, dtype=None) -> Params:
+    """Decode cache pytree (shapes only depend on config/batch/max_seq)."""
+    dt = dtype or _dtype(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    fam = cfg.family
+    cache: Params = dict(cache_len=jnp.zeros((batch,), jnp.int32))
+    if fam in ("dense", "moe"):
+        cache["k"] = jnp.zeros((cfg.num_layers, batch, max_seq, kv, hd), dt)
+        cache["v"] = jnp.zeros((cfg.num_layers, batch, max_seq, kv, hd), dt)
+    elif fam == "vlm":
+        every = cfg.cross_attn_every
+        n_super = cfg.num_layers // every
+        cache["k"] = jnp.zeros((n_super, every, batch, max_seq, kv, hd), dt)
+        cache["v"] = jnp.zeros((n_super, every, batch, max_seq, kv, hd), dt)
+        t = frontend_tokens or cfg.num_frontend_tokens
+        cache["cross_k"] = jnp.zeros((n_super, batch, t, kv, hd), dt)
+        cache["cross_v"] = jnp.zeros((n_super, batch, t, kv, hd), dt)
+    elif fam == "hybrid":
+        pat = cfg.block_pattern
+        n_super = cfg.num_layers // len(pat)
+        n_attn = sum(c == "A" for c in pat)
+        n_rec = sum(c == "R" for c in pat)
+        w = cfg.lru_width or cfg.d_model
+        win = min(cfg.local_window, max_seq)
+        cache["k"] = jnp.zeros((n_super, n_attn, batch, win, kv, hd), dt)
+        cache["v"] = jnp.zeros((n_super, n_attn, batch, win, kv, hd), dt)
+        cache["lru_h"] = jnp.zeros((n_super, n_rec, batch, w), F32)
+        cache["conv"] = jnp.zeros((n_super, n_rec, batch, cfg.ssm_conv, w), dt)
+        tail = cfg.num_layers - n_super * len(pat)
+        for i in range(tail):
+            c = pat[i % len(pat)]
+            if c == "R":
+                cache[f"tail{i}_h"] = jnp.zeros((batch, w), F32)
+                cache[f"tail{i}_conv"] = jnp.zeros(
+                    (batch, cfg.ssm_conv, w), dt)
+            else:
+                cache[f"tail{i}_k"] = jnp.zeros((batch, win, kv, hd), dt)
+                cache[f"tail{i}_v"] = jnp.zeros((batch, win, kv, hd), dt)
+    elif fam == "ssm":
+        di = cfg.ssm_expand * cfg.d_model
+        nh = di // cfg.ssm_headdim
+        cache["conv"] = jnp.zeros(
+            (cfg.num_layers, batch, cfg.ssm_conv, di + 2 * cfg.ssm_state), dt)
+        cache["h"] = jnp.zeros(
+            (cfg.num_layers, batch, nh, cfg.ssm_headdim, cfg.ssm_state), F32)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params, token,
+                opts: dict | None = None):
+    """One decode step. token [B, 1] -> (logits [B, 1, V], new cache)."""
+    opts = opts or {}
+    dt = _dtype(cfg)
+    b = token.shape[0]
+    x = params["embed"][token].astype(dt)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    cache_len = cache["cache_len"]
+    positions = cache_len[:, None]
+    fam = cfg.family
+    new_cache = dict(cache)
+
+    if fam in ("dense", "moe"):
+        if opts.get("decode_cache_in_carry"):
+            # Cache as scan CARRY with per-layer in-place DUS: the xs/ys
+            # path stacks a fresh full-cache copy every step (2x cache
+            # HBM traffic; see EXPERIMENTS §Perf decode iteration).
+            def blk_fn(carry, blk):
+                x, kall, vall, li = carry
+                kc = jax.lax.dynamic_index_in_dim(kall, li, 0, False)
+                vc = jax.lax.dynamic_index_in_dim(vall, li, 0, False)
+                x, (kc, vc) = _self_attn(blk, x, positions, cfg,
+                                         decode=(kc, vc, cache_len))
+                kall = jax.lax.dynamic_update_slice_in_dim(
+                    kall, kc[None], li, axis=0)
+                vall = jax.lax.dynamic_update_slice_in_dim(
+                    vall, vc[None], li, axis=0)
+                x, _ = _ffn(blk, x, cfg, opts)
+                return (x, kall, vall, li + 1), None
+            (x, ks, vs, _), _ = jax.lax.scan(
+                blk_fn, (x, cache["k"], cache["v"], jnp.int32(0)),
+                params["blocks"])
+        else:
+            def blk_fn(x, scanned):
+                blk, kc, vc = scanned
+                x, (kc, vc) = _self_attn(blk, x, positions, cfg,
+                                         decode=(kc, vc, cache_len))
+                x, _ = _ffn(blk, x, cfg, opts)
+                return x, (kc, vc)
+            x, (ks, vs) = jax.lax.scan(
+                blk_fn, x, (params["blocks"], cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = ks, vs
+    elif fam == "vlm":
+        def super_fn(x, scanned):
+            blks, cross, kc, vc, ck, cv = scanned
+            def inner(x, inner_s):
+                blk, kci, vci = inner_s
+                x, (kci, vci) = _self_attn(blk, x, positions, cfg,
+                                           decode=(kci, vci, cache_len))
+                x, _ = _ffn(blk, x, cfg)
+                return x, (kci, vci)
+            x, (kc, vc) = jax.lax.scan(inner, x, (blks, kc, vc))
+            # cross attention against precomputed cross kv
+            h = L.rms_norm(x, cross["norm1"], cfg.norm_eps)
+            q, _, _ = L.qkv_project(cross["attn"], h, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.resolved_head_dim)
+            o = L.decode_attention(q, ck, cv,
+                                   jnp.full((b,), ck.shape[1], jnp.int32))
+            x = x + (jnp.tanh(cross["gate"])
+                     * L.out_project(cross["attn"], o)).astype(x.dtype)
+            x, _ = _ffn(cross, x, cfg)
+            return x, (kc, vc)
+        x, (ks, vs) = jax.lax.scan(
+            super_fn, x, (params["blocks"], params["cross_blocks"],
+                          cache["k"], cache["v"],
+                          cache["cross_k"], cache["cross_v"]))
+        new_cache["k"], new_cache["v"] = ks, vs
+    elif fam == "hybrid":
+        pat = cfg.block_pattern
+
+        def super_fn(x, scanned):
+            blks, kc, vc, hs, conv = scanned
+            ai = ri = 0
+            kc_n, vc_n, hs_n, conv_n = list(kc), list(vc), list(hs), list(conv)
+            for i, c in enumerate(pat):
+                blk = blks[f"b{i}"]
+                if c == "R":
+                    x, (cb, hh) = _rec_block(blk, x, cfg,
+                                             (conv[ri], hs[ri]))
+                    conv_n[ri], hs_n[ri] = cb, hh
+                    ri += 1
+                else:
+                    x, (kk, vv) = _self_attn(blk, x, positions, cfg,
+                                             window=cfg.local_window,
+                                             decode=(kc[ai], vc[ai],
+                                                     cache_len))
+                    kc_n[ai], vc_n[ai] = kk, vv
+                    x, _ = _ffn(blk, x, cfg)
+                    ai += 1
+            return x, (jnp.stack(kc_n), jnp.stack(vc_n),
+                       jnp.stack(hs_n), jnp.stack(conv_n))
+        x, (ks, vs, hs, conv) = jax.lax.scan(
+            super_fn, x, (params["blocks"], cache["k"], cache["v"],
+                          cache["lru_h"], cache["conv"]))
+        new_cache.update(k=ks, v=vs, lru_h=hs, conv=conv)
+        i = 0
+        while f"tail{i}" in params:
+            blk = params[f"tail{i}"]
+            c = pat[i % len(pat)]
+            if c == "R":
+                x, (cb, hh) = _rec_block(
+                    blk, x, cfg, (cache[f"tail{i}_conv"],
+                                  cache[f"tail{i}_h"]))
+                new_cache[f"tail{i}_conv"] = cb
+                new_cache[f"tail{i}_h"] = hh
+            else:
+                x, (kk, vv) = _self_attn(
+                    blk, x, positions, cfg, window=cfg.local_window,
+                    decode=(cache[f"tail{i}_k"], cache[f"tail{i}_v"],
+                            cache_len))
+                new_cache[f"tail{i}_k"] = kk
+                new_cache[f"tail{i}_v"] = vv
+                x, _ = _ffn(blk, x, cfg)
+            i += 1
+    elif fam == "ssm":
+        def blk_fn(x, scanned):
+            blk, conv, h = scanned
+            x, (conv, h) = _ssm_block(blk, x, cfg, (conv, h))
+            return x, (conv, h)
+        x, (conv, h) = jax.lax.scan(
+            blk_fn, x, (params["blocks"], cache["conv"], cache["h"]))
+        new_cache["conv"], new_cache["h"] = conv, h
+    else:
+        raise ValueError(fam)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.dot(x, head, preferred_element_type=F32)
+    new_cache["cache_len"] = cache_len + 1
+    return logits, new_cache

@@ -1,0 +1,142 @@
+"""Sharded checkpointing: atomic manifests, async save, elastic restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        arrays.npz          flattened param+opt tree ("/"-joined key paths)
+        MANIFEST.json       step, mesh shape, tree digest, status=complete
+
+Writes go to ``step_xxx.tmp`` then os.replace — a crashed writer never
+leaves a manifest behind, so ``latest_step`` only ever resumes from a
+complete checkpoint (the fault-tolerance contract). ``AsyncCheckpointer``
+snapshots to host then writes on a worker thread so the train loop never
+blocks on disk. Restore is *elastic*: arrays are laid out by logical key,
+so they restore onto any mesh — ``device_put`` with the new sharding
+re-partitions (tested 8 -> 4 devices in tests/test_train.py).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+_WIDTH_VIEW = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+_SAVEZ_SAFE = {"bool", "int8", "int16", "int32", "int64", "uint8", "uint16",
+               "uint32", "uint64", "float16", "float32", "float64",
+               "complex64", "complex128"}
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    """Flatten to numpy; ml_dtypes (bf16, fp8, ...) are stored as unsigned
+    views since np.savez cannot round-trip them natively. ``restore`` views
+    them back using the target tree's dtypes."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name not in _SAVEZ_SAFE:
+            arr = arr.view(_WIDTH_VIEW[arr.dtype.itemsize])
+        flat[key] = arr
+    return flat
+
+
+def tree_digest(tree: Any) -> str:
+    keys = sorted(
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        + f":{leaf.shape}:{leaf.dtype}"
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0])
+    return hashlib.sha256("|".join(keys).encode()).hexdigest()[:16]
+
+
+def save(dir_: str, step: int, tree: Any, extra: dict | None = None) -> str:
+    os.makedirs(dir_, exist_ok=True)
+    final = os.path.join(dir_, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = dict(step=step, digest=tree_digest(tree),
+                    num_arrays=len(flat), status="complete",
+                    **(extra or {}))
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        import shutil
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(dir_: str) -> int | None:
+    if not os.path.isdir(dir_):
+        return None
+    steps = []
+    for name in os.listdir(dir_):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(dir_, name, "MANIFEST.json")):
+            steps.append(int(name[5:]))
+    return max(steps) if steps else None
+
+
+def restore(dir_: str, step: int, like: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (shapes+dtypes must match).
+
+    ``shardings``: optional pytree of NamedSharding for elastic placement on
+    a (possibly different) mesh.
+    """
+    path = os.path.join(dir_, f"step_{step:08d}")
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    assert manifest["status"] == "complete"
+    want = tree_digest(like)
+    if manifest["digest"] != want:
+        raise ValueError(
+            f"checkpoint tree digest {manifest['digest']} != expected {want}")
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else None)
+    out = []
+    for i, (p, leaf) in enumerate(leaves_with_path[0]):
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = arrays[key]
+        want = np.dtype(leaf.dtype)
+        if arr.dtype != want and want.name not in _SAVEZ_SAFE:
+            arr = arr.view(want)  # stored as a uint view (bf16, fp8, ...)
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(leaves_with_path[1], out)
+
+
+class AsyncCheckpointer:
+    """Snapshot to host immediately; persist on a background thread."""
+
+    def __init__(self, dir_: str):
+        self.dir = dir_
+        self._thread: threading.Thread | None = None
+        self.last_path: str | None = None
+
+    def save(self, step: int, tree: Any, extra: dict | None = None):
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot (blocks on xfer)
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_tree, extra), daemon=True)
+        self._thread.start()
+
+    def _write(self, step, tree, extra):
+        self.last_path = save(self.dir, step, tree, extra)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

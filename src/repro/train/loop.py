@@ -1,0 +1,133 @@
+"""Fault-tolerant training loop.
+
+Single entry ``train(cfg, ...)``: builds the sharded train step, resumes
+from the newest complete checkpoint, prefetches data, checkpoints every N
+steps (async), and runs a straggler/fault monitor:
+
+  * per-step wall times feed an EWMA; a step slower than
+    ``straggler_factor`` x EWMA is logged as a straggler event (at fleet
+    scale this hook is where the controller would re-slice or evict);
+  * any exception inside the step triggers restore-from-checkpoint and
+    replay (``max_restarts`` bound), exercised by tests via
+    ``fault_hook`` (injects a crash at a chosen step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as sh
+from repro.launch.steps import build_train_step
+from repro.models import model as M
+from repro.train import checkpoint as ckpt
+from repro.train.data import Prefetcher, SyntheticLM
+from repro.train.optimizer import AdamW
+
+
+@dataclasses.dataclass
+class TrainReport:
+    steps_run: int
+    final_loss: float
+    restarts: int
+    straggler_events: list
+    losses: list
+
+
+def train(cfg: ModelConfig, mesh, *, steps: int, global_batch: int,
+          seq_len: int, ckpt_dir: str, ckpt_every: int = 50,
+          optimizer: AdamW | None = None, seed: int = 0,
+          fault_hook: Callable[[int], None] | None = None,
+          straggler_factor: float = 3.0, max_restarts: int = 3,
+          log_every: int = 10) -> TrainReport:
+    opt = optimizer or AdamW(lr=1e-3)
+    step_fn, _ = build_train_step(cfg, mesh, optimizer=opt)
+    pspec = sh.param_spec_tree(cfg, M.abstract_params(cfg), mesh)
+    pshard = sh.to_named(pspec, mesh)
+
+    def fresh_state():
+        with mesh:
+            params = jax.jit(
+                lambda k: M.init_params(cfg, k),
+                out_shardings=pshard)(jax.random.key(seed))
+            opt_state = jax.jit(opt.init)(params)
+        return params, opt_state
+
+    params, opt_state = fresh_state()
+    start = 0
+    last = ckpt.latest_step(ckpt_dir)
+    if last is not None:
+        params = ckpt.restore(ckpt_dir, last, params,
+                              shardings=pshard)
+        opt_state = ckpt.restore(ckpt_dir + "/opt", last, opt_state)
+        start = last
+
+    saver = ckpt.AsyncCheckpointer(ckpt_dir)
+    opt_saver = ckpt.AsyncCheckpointer(ckpt_dir + "/opt")
+    data = SyntheticLM(cfg.vocab_size, seq_len, global_batch, seed=seed)
+    pf = Prefetcher(data, start_step=start)
+
+    losses: list[float] = []
+    stragglers: list[tuple[int, float]] = []
+    restarts = 0
+    ewma = None
+    step = start
+    try:
+        while step < steps:
+            try:
+                t0 = time.time()
+                dstep, batch = pf.next()
+                if fault_hook is not None:
+                    fault_hook(dstep)
+                fb = dict(batch)
+                if M.needs_frontend(cfg):
+                    fb["frontend_embeds"] = np.zeros(
+                        (batch["tokens"].shape[0], cfg.num_frontend_tokens,
+                         cfg.d_model), np.float32)
+                with mesh:
+                    params, opt_state, loss = step_fn(params, opt_state, fb)
+                loss = float(loss)
+                dt = time.time() - t0
+                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+                if dt > straggler_factor * ewma and step > start + 3:
+                    stragglers.append((step, dt))
+                losses.append(loss)
+                if log_every and step % log_every == 0:
+                    print(f"step {step:6d} loss {loss:.4f} {dt*1e3:.0f}ms",
+                          flush=True)
+                step += 1
+                if ckpt_every and step % ckpt_every == 0:
+                    saver.save(step, params)
+                    opt_saver.save(step, opt_state)
+            except Exception as e:  # noqa: BLE001 — restart-from-checkpoint
+                restarts += 1
+                print(f"step {step} failed ({type(e).__name__}: {e}); "
+                      f"restart {restarts}/{max_restarts}", flush=True)
+                if restarts > max_restarts:
+                    raise
+                saver.wait()
+                opt_saver.wait()
+                last = ckpt.latest_step(ckpt_dir)
+                if last is None:
+                    params, opt_state = fresh_state()
+                    step = 0
+                else:
+                    params, opt_state = fresh_state()
+                    params = ckpt.restore(ckpt_dir, last, params,
+                                          shardings=pshard)
+                    opt_state = ckpt.restore(ckpt_dir + "/opt", last,
+                                             opt_state)
+                    step = last
+                pf.close()
+                pf = Prefetcher(data, start_step=step)
+    finally:
+        pf.close()
+        saver.wait()
+        opt_saver.wait()
+    return TrainReport(steps_run=step - start, final_loss=losses[-1] if losses
+                       else float("nan"), restarts=restarts,
+                       straggler_events=stragglers, losses=losses)

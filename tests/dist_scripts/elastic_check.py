@@ -1,0 +1,29 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models import model as M
+from repro.distributed import sharding as sh
+from repro.distributed.elastic import reshard_tree, plan
+from repro.train import checkpoint as ckpt
+import tempfile
+
+cfg = get_config("qwen2-1.5b").reduced()
+mesh8 = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh4 = jax.make_mesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+params = M.init_params(cfg, jax.random.key(0))
+p8 = reshard_tree(params, cfg, mesh8)
+with tempfile.TemporaryDirectory() as d:
+    ckpt.save(d, 1, p8)
+    restored = ckpt.restore(d, 1, p8, shardings=sh.to_named(sh.param_spec_tree(cfg, p8, mesh4), mesh4))
+# values identical after 8-dev -> 4-dev move
+a = np.asarray(jax.tree.leaves(params)[0]); b = np.asarray(jax.tree.leaves(restored)[0])
+np.testing.assert_array_equal(a, b)
+info = plan(cfg, mesh8, mesh4)
+assert info["dp_change"] == 0.5
+# loss identical on both meshes
+batch = M.make_batch(cfg, batch=4, seq=8, rng=jax.random.key(1))
+l8 = float(M.loss_fn(cfg, p8, batch))
+l4 = float(M.loss_fn(cfg, restored, batch))
+assert abs(l8 - l4) < 1e-4, (l8, l4)
+print("OK")

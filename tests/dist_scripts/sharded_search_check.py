@@ -1,0 +1,28 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from repro.sharded_search import build_sharded_index, sharded_topk, sharded_diverse_search
+from repro.index.flat import exact_topk
+from repro.core.similarity import pairwise_sim
+
+rng = np.random.default_rng(0)
+N, d = 2048, 16
+X = rng.normal(size=(N, d)).astype(np.float32)
+idx = build_sharded_index(X, 4, "ip", M=8)
+mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+qs = jnp.asarray(rng.normal(size=(8, d)), jnp.float32)
+ids, scores = sharded_topk(idx, qs, k=10, L=64, mesh=mesh)
+gt_ids, _ = exact_topk(np.asarray(qs), X, 10, "ip")
+rec = np.mean([len(set(np.asarray(ids[i]).tolist()) & set(gt_ids[i].tolist()))/10 for i in range(8)])
+assert rec >= 0.95, rec
+ids2, _ = sharded_topk(idx, qs, k=10, L=64, mesh=mesh, merge="allgather")
+assert bool(jnp.all(ids == ids2)), "tournament != allgather merge"
+dids, dsc, cert = sharded_diverse_search(idx, jnp.asarray(X), qs, k=5, eps=4.0, K=64, mesh=mesh)
+dids = np.asarray(dids)
+for i in range(8):
+    sel = dids[i][dids[i] >= 0]
+    assert len(sel) == 5, (i, sel)
+    sims = np.asarray(pairwise_sim(jnp.asarray(X[sel]), jnp.asarray(X[sel]), "ip"))
+    off = sims[~np.eye(len(sel), dtype=bool)]
+    assert np.all(off < 4.0 + 1e-4)
+print("OK")

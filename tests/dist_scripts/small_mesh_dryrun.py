@@ -1,0 +1,24 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs import get_config, ShapeCard
+from repro.launch.steps import build_train_step, build_serve_step, input_specs
+from repro.launch.hlo_analysis import analyze
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*3)
+for arch in ("qwen2-1.5b", "moonshot-v1-16b-a3b", "mamba2-370m", "whisper-small"):
+    cfg = get_config(arch).reduced()
+    shape = ShapeCard("t", 32, 8, "train")
+    specs = input_specs(cfg, shape, mesh)
+    step, _ = build_train_step(cfg, mesh)
+    with mesh:
+        comp = step.lower(specs["params"], specs["opt_state"], specs["batch"]).compile()
+    res = analyze(comp.as_text())
+    assert res["flops"] > 0
+    sshape = ShapeCard("d", 64, 8, "decode")
+    sspecs = input_specs(cfg, sshape, mesh)
+    sstep, _ = build_serve_step(cfg, mesh)
+    with mesh:
+        comp2 = sstep.lower(sspecs["params"], sspecs["cache"], sspecs["token"]).compile()
+    print(arch, "train+serve compile OK, flops=%.2e" % res["flops"])
+print("OK")

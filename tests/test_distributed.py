@@ -1,0 +1,39 @@
+"""Multi-device tests (subprocesses: each needs its own XLA device count)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPTS = os.path.join(os.path.dirname(__file__), "dist_scripts")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(name, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    out = subprocess.run(
+        [sys.executable, os.path.join(SCRIPTS, name)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"{name}:\n{out.stdout}\n{out.stderr}"
+    assert "OK" in out.stdout
+
+
+def test_sharded_search_4dev():
+    _run("sharded_search_check.py")
+
+
+def test_compressed_psum_4dev():
+    _run("compression_check.py")
+
+
+def test_ring_collective_matmul_4dev():
+    _run("ring_matmul_check.py")
+
+
+def test_elastic_reshard_8to4():
+    _run("elastic_check.py")
+
+
+def test_small_mesh_dryrun_multifamily():
+    _run("small_mesh_dryrun.py", timeout=560)

@@ -1,0 +1,55 @@
+"""HLO analyzer: trip-count-aware flop counting and collective parsing."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import HloModule, analyze, shape_bytes
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert shape_bytes("(s32[], f32[2,3])") == 4 + 24
+    assert shape_bytes("bf16[10]") == 20
+    assert shape_bytes("pred[7]") == 7
+
+
+def test_scan_trip_count_flops():
+    def f(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((6, 128, 128), jnp.float32)
+    comp = jax.jit(f).lower(x, w).compile()
+    res = analyze(comp.as_text())
+    want = 6 * 2 * 64 * 128 * 128
+    assert abs(res["flops"] - want) / want < 0.02
+
+
+def test_comment_stripping_in_tuples():
+    txt = """
+ENTRY %main (p: f32[4,4]) -> f32[4,4] {
+  %p = f32[4,4]{1,0} parameter(0)
+  %t = (f32[4,4]{1,0}, /*index=1*/f32[4,4]{1,0}) tuple(%p, %p)
+  ROOT %dot = f32[4,4]{1,0} dot(%p, %p), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    mod = HloModule(txt)
+    assert mod.entry == "main"
+    assert mod.entry_cost().flops == 2 * 4 * 4 * 4
+
+
+def test_nested_while_multiplication():
+    def f(x):
+        def outer(h, _):
+            def inner(g, _):
+                return jnp.tanh(g @ g), None
+            g, _ = jax.lax.scan(inner, h, None, length=3)
+            return g, None
+        h, _ = jax.lax.scan(outer, x, None, length=5)
+        return h
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    comp = jax.jit(f).lower(x).compile()
+    res = analyze(comp.as_text())
+    want = 5 * 3 * 2 * 32 * 32 * 32
+    assert abs(res["flops"] - want) / want < 0.05

@@ -1,0 +1,60 @@
+"""Index builders: HNSW + fast KNN-graph; reachability/recall/determinism."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.beam_search import beam_search
+from repro.index.flat import (_directed_reachable, build_knn_graph,
+                              exact_topk)
+from repro.index.hnsw import build_hnsw
+
+
+def test_knng_fully_reachable(clustered_data):
+    g = build_knn_graph(clustered_data, metric="l2", M=8)
+    reached = _directed_reachable(np.asarray(g.neighbors), int(g.entry))
+    assert reached.all()
+
+
+def test_knng_deterministic(clustered_data):
+    g1 = build_knn_graph(clustered_data[:300], metric="cos", M=6)
+    g2 = build_knn_graph(clustered_data[:300], metric="cos", M=6)
+    np.testing.assert_array_equal(np.asarray(g1.neighbors),
+                                  np.asarray(g2.neighbors))
+
+
+def test_hnsw_recall(clustered_data):
+    x = clustered_data[:400]
+    g = build_hnsw(x, metric="l2", M=8, ef_construction=60)
+    rng = np.random.default_rng(0)
+    recs = []
+    for _ in range(8):
+        q = x[rng.integers(len(x))] + \
+            rng.normal(size=x.shape[1]).astype(np.float32) * 0.05
+        ids, _ = beam_search(g, jnp.asarray(q), k=5, L=60)
+        gt, _ = exact_topk(q[None], x, 5, "l2")
+        recs.append(len(set(np.asarray(ids).tolist())
+                        & set(gt[0].tolist())) / 5)
+    assert np.mean(recs) >= 0.95
+
+
+def test_hnsw_has_upper_levels(clustered_data):
+    g = build_hnsw(clustered_data[:500], metric="l2", M=8,
+                   ef_construction=40)
+    assert g.num_upper_levels >= 1
+
+
+def test_exact_topk_tie_break():
+    x = np.zeros((5, 3), np.float32)
+    ids, _ = exact_topk(np.zeros((1, 3), np.float32), x, 3, "ip")
+    np.testing.assert_array_equal(ids[0], [0, 1, 2])
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
+def test_exact_topk_matches_numpy(metric, clustered_data):
+    x = clustered_data[:200]
+    q = clustered_data[201]
+    ids, scores = exact_topk(q[None], x, 10, metric)
+    from repro.core.similarity import query_sim
+    sims = np.asarray(query_sim(jnp.asarray(q), jnp.asarray(x), metric))
+    order = np.lexsort((np.arange(len(x)), -sims))[:10]
+    np.testing.assert_array_equal(ids[0], order)

@@ -1,0 +1,90 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
+pure-jnp oracle (ref.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+METRICS = ("l2", "ip", "cos")
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("shape", [(1, 7, 5), (3, 150, 37), (2, 129, 64),
+                                   (5, 600, 24)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_batch_similarity_sweep(metric, shape, dtype):
+    b, n, d = shape
+    qs = jnp.asarray(RNG.normal(size=(b, d)), dtype)
+    x = jnp.asarray(RNG.normal(size=(n, d)), dtype)
+    got = ops.batch_similarity_many(qs, x, metric, impl="interpret")
+    want = ref.batch_similarity_many(qs.astype(jnp.float32),
+                                     x.astype(jnp.float32), metric)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("k", [5, 70, 129, 256])
+def test_pairwise_adjacency_sweep(metric, k):
+    x = jnp.asarray(RNG.normal(size=(k, 19)), jnp.float32)
+    eps = float(RNG.normal()) * 0.3
+    got = ops.pairwise_adjacency(x, eps, metric, impl="interpret")
+    want = ref.pairwise_adjacency(x, eps, metric)
+    # threshold comparisons can flip on ties within fp error: allow <=0.5%
+    assert np.mean(np.asarray(got) != np.asarray(want)) < 5e-3
+    assert not np.any(np.diag(np.asarray(got)))
+
+
+def test_pairwise_adjacency_valid_mask():
+    x = jnp.asarray(RNG.normal(size=(40, 8)), jnp.float32)
+    valid = jnp.asarray(np.arange(40) < 25)
+    got = ops.pairwise_adjacency(x, 0.0, "cos", valid, impl="interpret")
+    assert not np.any(np.asarray(got)[25:, :])
+    assert not np.any(np.asarray(got)[:, 25:])
+
+
+@pytest.mark.parametrize("n", [8, 64, 100, 128])
+def test_topk_merge_sweep(n):
+    sa = np.sort(RNG.normal(size=n))[::-1].astype(np.float32)
+    sb = np.sort(RNG.normal(size=n))[::-1].astype(np.float32)
+    ia = np.arange(n, dtype=np.int32)
+    ib = np.arange(1000, 1000 + n, dtype=np.int32)
+    gi, gs = ops.topk_merge(jnp.asarray(ia), jnp.asarray(sa),
+                            jnp.asarray(ib), jnp.asarray(sb),
+                            impl="interpret")
+    ri, rs = ref.topk_merge(jnp.asarray(ia), jnp.asarray(sa),
+                            jnp.asarray(ib), jnp.asarray(sb))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(rs))
+
+
+def test_topk_merge_ties_deterministic():
+    s = np.zeros(16, np.float32)
+    ia = np.arange(16, dtype=np.int32) * 2
+    ib = np.arange(16, dtype=np.int32) * 2 + 1
+    gi, _ = ops.topk_merge(jnp.asarray(ia), jnp.asarray(s),
+                           jnp.asarray(ib), jnp.asarray(s),
+                           impl="interpret")
+    np.testing.assert_array_equal(np.asarray(gi), np.arange(16))
+
+
+@pytest.mark.parametrize("k,K", [(3, 20), (5, 64), (10, 130)])
+def test_greedy_diversify_sweep(k, K):
+    x = jnp.asarray(RNG.normal(size=(K, 16)), jnp.float32)
+    scores = jnp.asarray(RNG.normal(size=K), jnp.float32)
+    adj = ref.pairwise_adjacency(x, 0.2, "cos")
+    gs, gc = ops.greedy_diversify(scores, adj, k, impl="interpret")
+    rs, rc = ref.greedy_diversify(scores, adj, k)
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(rs))
+    assert int(gc) == int(rc)
+    # result is an independent set
+    sel = np.asarray(gs)
+    sel = sel[sel >= 0]
+    a = np.asarray(adj)
+    for i in sel:
+        for j in sel:
+            if i != j:
+                assert not a[i, j]

@@ -1,0 +1,85 @@
+"""End-to-end ADk-NNS: PGS/PDS/PSS vs the exact oracle, paper properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import diverse_search
+from repro.core.baselines import div_astar_oracle, greedy_fixed, ip_greedy
+from repro.core.similarity import pairwise_sim
+
+
+def _queries(data, n=6, seed=3):
+    rng = np.random.default_rng(seed)
+    return [data[rng.integers(len(data))]
+            + rng.normal(size=data.shape[1]).astype(np.float32) * 0.05
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("method", ["pgs", "pds", "pss", "greedy"])
+def test_exact_k_and_diversification_condition(clustered_data, small_graph,
+                                               method):
+    eps = 0.0  # l2-sim: bans pairs closer than distance 1
+    for q in _queries(clustered_data, 4):
+        res = diverse_search(small_graph, q, k=5, eps=eps, method=method,
+                             ef=10)
+        ids = res.ids[res.ids >= 0]
+        if method != "greedy":  # greedy with fixed L may return < k
+            assert len(ids) == 5
+        # diversification condition (paper Def. 1)
+        sims = np.asarray(pairwise_sim(
+            jnp.asarray(clustered_data[ids]), jnp.asarray(clustered_data[ids]),
+            "l2"))
+        off = sims[~np.eye(len(ids), dtype=bool)]
+        assert np.all(off < eps + 1e-5)
+
+
+def test_pss_matches_oracle(clustered_data, small_graph):
+    agree = 0
+    qs = _queries(clustered_data, 6)
+    for q in qs:
+        r = diverse_search(small_graph, q, k=5, eps=0.0, method="pss", ef=20)
+        o = div_astar_oracle(clustered_data, "l2", q, 5, 0.0, X=256)
+        agree += abs(r.total - o.total) < 1e-3
+    assert agree >= 5  # beam-recall assumption can cost at most one query
+
+
+def test_pss_beats_or_matches_greedy(clustered_data, small_graph):
+    """The paper's core claim: PSS total >= greedy total (high div)."""
+    wins = ties = losses = 0
+    for q in _queries(clustered_data, 6, seed=11):
+        g = diverse_search(small_graph, q, k=5, eps=0.0, method="greedy")
+        p = diverse_search(small_graph, q, k=5, eps=0.0, method="pss", ef=20)
+        if p.total > g.total + 1e-4:
+            wins += 1
+        elif p.total < g.total - 1e-4:
+            losses += 1
+        else:
+            ties += 1
+    assert losses == 0
+
+
+def test_pds_certifies_on_easy_queries(clustered_data, small_graph):
+    res = diverse_search(small_graph, clustered_data[5], k=3, eps=-3.0,
+                         method="pds", ef=10)
+    assert res.stats.certified
+    assert (res.ids >= 0).all()
+
+
+def test_cosine_metric_end_to_end(clustered_data, small_graph_cos):
+    q = clustered_data[17]
+    r = diverse_search(small_graph_cos, q, k=4, eps=0.9, method="pss", ef=15)
+    o = div_astar_oracle(clustered_data, "cos", q, 4, 0.9, X=256)
+    assert abs(r.total - o.total) < 5e-3
+
+
+def test_ip_greedy_runs(clustered_data, small_graph_cos):
+    res = ip_greedy(small_graph_cos, clustered_data[3], k=5, lam=0.7, L=64)
+    assert (res.ids >= 0).sum() == 5
+
+
+def test_greedy_missing_results_scored_zero(clustered_data, small_graph):
+    # eps so strict nothing fits: greedy returns < k, missing slots = 0
+    res = greedy_fixed(small_graph, clustered_data[0], k=5, eps=-50.0, L=32)
+    n_found = (res.ids >= 0).sum()
+    assert res.total == pytest.approx(res.scores[res.ids >= 0].sum())
+    assert n_found <= 5

@@ -1,0 +1,45 @@
+"""Similarity-space properties (paper Eqs. 5-7) via hypothesis."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.similarity import pairwise_sim, query_sim, sim_one
+
+vecs = st.lists(st.floats(-5, 5, allow_nan=False), min_size=4, max_size=4)
+
+
+@given(vecs, vecs)
+@settings(max_examples=50, deadline=None)
+def test_symmetry(u, v):
+    u = jnp.asarray(u, jnp.float32)
+    v = jnp.asarray(v, jnp.float32)
+    for metric in ("l2", "ip", "cos"):
+        a = float(sim_one(u, v, metric))
+        b = float(sim_one(v, u, metric))
+        assert abs(a - b) < 1e-4
+
+
+@given(vecs)
+@settings(max_examples=30, deadline=None)
+def test_self_similarity_is_max(u):
+    u = jnp.asarray(u, jnp.float32)
+    if float(jnp.linalg.norm(u)) < 1e-3:
+        return
+    # fp cancellation in ||u||^2+||v||^2-2<u,v> bounds accuracy at
+    # ~sqrt(eps)*|u|; allow that
+    assert float(sim_one(u, u, "l2")) >= 1.0 - 5e-3
+    assert abs(float(sim_one(u, u, "cos")) - 1.0) < 1e-5
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_pairwise_matches_query(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(7, 5)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)
+    for metric in ("l2", "ip", "cos"):
+        m = pairwise_sim(x, y, metric)
+        for i in range(7):
+            row = query_sim(x[i], y, metric)
+            np.testing.assert_allclose(np.asarray(m[i]), np.asarray(row),
+                                       rtol=1e-5, atol=1e-5)
