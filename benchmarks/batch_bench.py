@@ -1,7 +1,11 @@
-"""Beyond-paper TPU-path benchmark: batched (vmapped) diverse search
-throughput vs the per-query progressive driver — the optimization the paper
-cannot express on CPU (DESIGN.md §2; EXPERIMENTS.md §Perf paper-technique
-track)."""
+"""Serving-path benchmark: the batched progressive engine vs the per-query
+progressive driver loop, plus the legacy fixed-K batched baselines.
+
+The headline comparison (EXPERIMENTS.md §Perf): at serving batch sizes the
+per-query pause/inspect/resume loop pays its host round-trips and device
+dispatches per *query*, while ``core.batch_progressive`` pays them per
+*round* for the whole batch — same per-lane semantics (exact parity with
+``pss``), ~B-fold fewer dispatches."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -11,39 +15,61 @@ from benchmarks import datasets as D
 from benchmarks.common import emit, timed
 from repro.core.api import diverse_search
 from repro.core.batch import batch_greedy_diverse, batch_optimal_diverse
+from repro.core.batch_progressive import batch_pss
 
 
-def run(n: int = D.N_DEFAULT, batch: int = 16, k: int = 10):
+def run(n: int = D.N_DEFAULT, batch: int = 64, k: int = 10, ef: int = 10,
+        phis: tuple = ("low", "medium")):
     graph, x, metric = D.load_graph("deep-like", n=n)
     queries = D.queries_for(x, batch)
-    eps = D.calibrate_eps(x, metric, D.PHI_TARGETS["medium"])
     qs = jnp.asarray(queries)
+    speedups = {}
+    for phi in phis:
+        eps = D.calibrate_eps(x, metric, D.PHI_TARGETS[phi])
 
-    # per-query driver (paper-faithful)
-    def loop_pss():
-        return [diverse_search(graph, q, k=k, eps=eps, method="pss", ef=10)
-                for q in queries]
-    _, dt_loop = timed(loop_pss, warmup=1, reps=1)
-    emit("batch/per_query_pss", dt_loop / batch * 1e6, "per-query us")
+        # per-query progressive driver loop (paper-faithful baseline)
+        def loop_pss():
+            return [diverse_search(graph, q, k=k, eps=eps, method="pss",
+                                   ef=ef) for q in queries]
+        _, dt_loop = timed(loop_pss, warmup=1, reps=1)
+        emit(f"batch/{phi}/per_query_pss", dt_loop / batch * 1e6,
+             "per-query us")
 
-    # batched fixed-K div-A* (TPU path)
-    def batched():
-        out = batch_optimal_diverse(graph, qs, k, eps, K=128, ef=4)
-        out[0].block_until_ready()
-        return out
-    out, dt_b = timed(batched, warmup=1, reps=2)
-    cert = float(np.mean(np.asarray(out[3])))
-    emit("batch/batched_divastar", dt_b / batch * 1e6,
-         f"certified_frac={cert:.2f};speedup={dt_loop/dt_b:.1f}x")
+        # batched progressive engine (exact same per-lane results);
+        # streams=2 overlaps host orchestration with device work
+        def engine():
+            return batch_pss(graph, qs, k, eps, ef=ef, streams=2)
+        res, dt_e = timed(engine, warmup=1, reps=2)
+        speedups[phi] = dt_loop / dt_e
+        emit(f"batch/{phi}/progressive_engine", dt_e / batch * 1e6,
+             f"certified_frac={res.stats.certified.mean():.2f};"
+             f"speedup={dt_loop / dt_e:.1f}x")
 
-    def batched_greedy():
-        out = batch_greedy_diverse(graph, qs, k, eps, L=256)
-        out[0].block_until_ready()
-        return out
-    _, dt_g = timed(batched_greedy, warmup=1, reps=2)
-    emit("batch/batched_greedy", dt_g / batch * 1e6,
-         f"speedup_vs_loop={dt_loop/dt_g:.1f}x")
+        # legacy fixed-K div-A* (approximation: static candidate budget)
+        def batched():
+            out = batch_optimal_diverse(graph, qs, k, eps, K=128, ef=4)
+            out[0].block_until_ready()
+            return out
+        out, dt_b = timed(batched, warmup=1, reps=2)
+        cert = float(np.mean(np.asarray(out[3])))
+        emit(f"batch/{phi}/batched_divastar", dt_b / batch * 1e6,
+             f"certified_frac={cert:.2f};speedup={dt_loop/dt_b:.1f}x")
+
+        def batched_greedy():
+            out = batch_greedy_diverse(graph, qs, k, eps, L=256)
+            out[0].block_until_ready()
+            return out
+        _, dt_g = timed(batched_greedy, warmup=1, reps=2)
+        emit(f"batch/{phi}/batched_greedy", dt_g / batch * 1e6,
+             f"speedup_vs_loop={dt_loop/dt_g:.1f}x")
+    return speedups
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    kwargs = {}
+    if len(sys.argv) > 1:
+        kwargs["n"] = int(sys.argv[1])
+    if len(sys.argv) > 2:
+        kwargs["batch"] = int(sys.argv[2])
+    run(**kwargs)

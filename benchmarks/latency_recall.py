@@ -1,7 +1,6 @@
 """Figs. 12-14: latency-recall frontier as ef sweeps (PGS/PDS/PSS)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import datasets as D
 from benchmarks.common import emit, evaluate_method

@@ -21,6 +21,7 @@ if PHASE is None:
     raise SystemExit(0)
 
 import jax  # noqa: E402
+from repro.compat import make_mesh
 from repro.configs import get_config  # noqa: E402
 from repro.distributed import sharding as sh  # noqa: E402
 from repro.models import model as M  # noqa: E402
@@ -29,16 +30,14 @@ from repro.train import checkpoint as ckpt  # noqa: E402
 cfg = get_config("qwen2-1.5b").reduced()
 CKPT = "/tmp/repro_elastic_demo"
 if PHASE == "big":
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     params = M.init_params(cfg, jax.random.key(0))
     specs = sh.to_named(sh.param_spec_tree(cfg, params, mesh), mesh)
     params = jax.tree.map(lambda x, s: jax.device_put(x, s), params, specs)
     ckpt.save(CKPT, 1, params)
     print("phase=big: saved on", mesh.shape)
 else:
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 2), ("data", "model"))
     like = M.init_params(cfg, jax.random.key(0))
     specs = sh.to_named(sh.param_spec_tree(cfg, like, mesh), mesh)
     params = ckpt.restore(CKPT, 1, like, shardings=specs)

@@ -3,15 +3,14 @@ straggler monitor, resume).
 
     PYTHONPATH=src python examples/train_lm.py
 """
-import jax
+from repro.compat import make_mesh
 
 from repro.configs import get_config
 from repro.train.loop import train
 from repro.train.optimizer import AdamW, cosine_schedule
 
 cfg = get_config("qwen2-1.5b").reduced()
-mesh = jax.make_mesh((1, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((1, 1), ("data", "model"))
 report = train(cfg, mesh, steps=60, global_batch=16, seq_len=32,
                ckpt_dir="/tmp/repro_train_demo", ckpt_every=20,
                optimizer=AdamW(lr=cosine_schedule(3e-3, 10, 60)))

@@ -1,0 +1,590 @@
+"""Batched progressive serving engine (paper Alg. 2-4 over a request batch).
+
+The per-query drivers (``pgs``/``pds``/``pss``) are faithful but serve one
+query at a time: every pause/inspect/resume cycle costs a host round-trip and
+a single-lane device dispatch. This module runs the *same* progressive
+framework over a whole batch at once:
+
+* **One-dispatch device bursts** — a single ``lax.map`` dispatch advances
+  every lane's beam-search ``while_loop`` to that lane's own stop condition
+  (stable-prefix target reached, frontier below its Theorem-2 ``minValue``,
+  or step budget); lanes run lane-serial on device, paying exactly the sum
+  of per-lane work with none of the per-query dispatch overhead (see
+  ``_batched_search_loop`` for the lax.map-vs-vmap trade-off).
+* **Per-lane logical capacity** — all lanes share one fixed-shape state at
+  the max bucket capacity, but each lane's queue is clamped to its own
+  logical capacity after every insert, so per-lane semantics are *bit-exact*
+  with a solo ``ProgressiveDriver`` at that capacity.
+* **Bucketed growth** — lanes whose candidate budget outgrows their capacity
+  are grouped by next-power-of-two target and rebuilt together with the
+  exact rebuild of ``beam_search.rebuild_for_growth`` (one vmapped rebuild
+  per bucket), preserving the unbounded-queue semantics of the paper.
+* **Batched diversify + verify** — adjacency builds and greedy selection
+  (the (B, K)-grid Pallas kernel) run vmapped across the batch, div-A*
+  lane-serial (its trip counts are heavy-tailed); Theorem-2 certificates
+  come back per lane and only uncertified lanes re-enter the progressive
+  loop.
+
+Entry points: ``batch_pgs`` (Alg. 2), ``batch_pss`` (Alg. 4, the default
+serving path), both returning a ``BatchDiverseResult`` whose per-lane
+ids/scores match the per-query drivers exactly.
+
+Parity scope: every per-lane decision replicates the per-query driver's
+formulas, queue-score computations are batch-invariant by construction
+(``query_sim``'s reduce form, the rank-merge insert, top_k rebuilds), and
+``tests/test_batch_progressive.py`` enforces bit-equality on the CPU
+reference path. The one caveat is the adjacency build: ``sims > eps`` edges
+come from matmuls whose accumulation order XLA may vary across batch shapes
+and backends, so a pair landing within one rounding step of ``eps`` could in
+principle flip an edge relative to the solo driver (which additionally uses
+``extend_adjacency``'s different-shaped matmul). Measured bit-stable across
+vmap/widths on CPU; re-validate the parity suite before relying on
+bit-equality on a new backend.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import beam_search as bs
+from repro.core import div_astar as da
+from repro.core import queue as qmod
+from repro.core.graph import FlatGraph
+from repro.core.progressive import _next_pow2
+from repro.core.theorems import theorem2_min_value
+from repro.kernels import ops as kops
+
+
+# --------------------------------------------------------------- results ----
+
+@dataclasses.dataclass
+class BatchSearchStats:
+    """Per-lane counters mirroring ``progressive.SearchStats``."""
+    expansions: np.ndarray
+    growths: np.ndarray
+    search_calls: np.ndarray
+    div_calls: np.ndarray
+    certified: np.ndarray
+    exhausted: np.ndarray
+    K_final: np.ndarray
+
+    @classmethod
+    def zeros(cls, b: int) -> "BatchSearchStats":
+        return cls(expansions=np.zeros(b, np.int64),
+                   growths=np.zeros(b, np.int64),
+                   search_calls=np.zeros(b, np.int64),
+                   div_calls=np.zeros(b, np.int64),
+                   certified=np.zeros(b, bool),
+                   exhausted=np.zeros(b, bool),
+                   K_final=np.zeros(b, np.int64))
+
+
+class BatchDiverseResult(NamedTuple):
+    ids: np.ndarray      # int32[B, k], -1 padded
+    scores: np.ndarray   # f32[B, k]
+    totals: np.ndarray   # f32[B]
+    stats: BatchSearchStats
+
+
+# ------------------------------------------------------- device functions ----
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def _batched_init(graph: FlatGraph, qs: jnp.ndarray, capacity: int):
+    return jax.vmap(lambda q: bs.init_state(graph, q, capacity))(qs)
+
+
+def _pad_queue(queue: qmod.Queue, pad: int) -> qmod.Queue:
+    """Extend a queue's last axis with empty-slot sentinels (id=-1,
+    score=-inf, stable=True) — the one place the sentinel convention for
+    padding lives in this module."""
+    if pad == 0:
+        return queue
+    spec = [(0, 0)] * (queue.ids.ndim - 1) + [(0, pad)]
+    return qmod.Queue(
+        ids=jnp.pad(queue.ids, spec, constant_values=-1),
+        scores=jnp.pad(queue.scores, spec, constant_values=-np.inf),
+        stable=jnp.pad(queue.stable, spec, constant_values=True),
+    )
+
+
+def _merge_insert(queue: qmod.Queue, new_ids: jnp.ndarray,
+                  new_scores: jnp.ndarray, new_mask: jnp.ndarray) -> qmod.Queue:
+    """Bit-identical replacement for ``queue.insert`` on an already-sorted
+    queue. ``queue.insert`` re-sorts all C+M entries with an O(C log C)
+    *comparator* sort per expansion step — the dominant cost of the burst
+    at (B, C) shapes. Here each entry's merged position is its rank
+    under the same (score desc, id asc) order, computed from an O(C*M)
+    vectorized comparison matrix (M = M0 graph degree, so this is the same
+    cost class as the dedup matrix insert already builds). Ties (only the
+    empty-slot sentinel) resolve queue-first / index-order, matching the
+    stable lexsort exactly."""
+    cap = queue.capacity
+    m = new_ids.shape[0]
+    b_ids, b_scores, b_stable = qmod.dedup_candidates(
+        queue, new_ids, new_scores, new_mask)
+    a_ids, a_scores = queue.ids, queue.scores
+
+    def before(s1, i1, s2, i2):
+        # strict (score desc, id asc) precedence
+        return (s1 > s2) | ((s1 == s2) & (i1 < i2))
+
+    # a entries keep their rank among a (queue is sorted); b entries ahead
+    # of a_i push it back. Full ties (empty sentinels) resolve a-first.
+    # rank of each b among b (strict order; sentinel ties resolve by index)
+    bb = before(b_scores[:, None], b_ids[:, None],
+                b_scores[None, :], b_ids[None, :])
+    tie_bb = (b_scores[:, None] == b_scores[None, :]) & \
+        (b_ids[:, None] == b_ids[None, :]) & (
+        jnp.arange(m)[:, None] < jnp.arange(m)[None, :])
+    rank_b = jnp.sum(bb | tie_bb, axis=0)
+    inv_rank = jnp.argmax(rank_b[:, None] == jnp.arange(m)[None, :], axis=0)
+    bs_ids, bs_scores = b_ids[inv_rank], b_scores[inv_rank]
+    bs_stable = b_stable[inv_rank]
+    # merged slot of each sorted-b element: a entries ahead of it (ties:
+    # queue entries first, matching the stable concat-lexsort), plus its
+    # own rank among b
+    a_before_b = before(a_scores[:, None], a_ids[:, None],
+                        bs_scores[None, :], bs_ids[None, :]) | (
+        (a_scores[:, None] == bs_scores[None, :])
+        & (a_ids[:, None] == bs_ids[None, :]))
+    pos_b = jnp.sum(a_before_b, axis=0) + jnp.arange(m)
+    # slot-wise gather (no scatter, no comparator sort): slot r holds
+    # b_sorted[cb[r]] if some b lands at r, else a[r - cb[r]]
+    slots = jnp.arange(cap)
+    cb = jnp.sum(pos_b[None, :] < slots[:, None], axis=1)
+    is_b = jnp.any(pos_b[None, :] == slots[:, None], axis=1)
+    ai = jnp.minimum(slots - cb, cap - 1)
+    bi = jnp.minimum(cb, m - 1)
+    return qmod.Queue(
+        ids=jnp.where(is_b, bs_ids[bi], a_ids[ai]),
+        scores=jnp.where(is_b, bs_scores[bi], a_scores[ai]),
+        stable=jnp.where(is_b, bs_stable[bi], queue.stable[ai]),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("graph_metric",))
+def _batched_search_loop(vectors, neighbors, qs, state, caps, stable_limits,
+                         min_values, max_steps, graph_metric: str):
+    """One-dispatch burst: every lane runs its own beam-search while_loop.
+
+    Identical to ``beam_search._search_loop`` per lane, plus the logical
+    capacity clamp: entries at positions >= cap are forced back to the empty
+    sentinel after each insert, which is exactly a capacity-``cap`` queue
+    stored in a wider array.
+
+    Lanes run lane-serial on device (``lax.map``): lane step counts vary
+    several-fold, so a vmapped while_loop would charge every lane the
+    straggler's trip count, while ``lax.map`` pays exactly the sum of
+    per-lane work with none of the per-call dispatch overhead the per-query
+    driver loop pays (measured ~2x faster than the vmapped variant on CPU
+    even before straggler effects; revisit per-backend — on TPU the lockstep
+    vmap variant may win back).
+    """
+    C = state.queue.ids.shape[-1]
+    pos = jnp.arange(C)
+
+    def one(args):
+        q, st, cap, sl, mv, ms = args
+
+        def clamp(queue: qmod.Queue) -> qmod.Queue:
+            live = pos < cap
+            return qmod.Queue(jnp.where(live, queue.ids, -1),
+                              jnp.where(live, queue.scores, qmod.NEG_INF),
+                              jnp.where(live, queue.stable, True))
+
+        # the frontier pointer rides in the carry so the queue is scanned
+        # once per expansion, not once in cond and again in body
+        def cond(c):
+            st, p, exists = c
+            score_ok = st.queue.scores[p] >= mv
+            return exists & score_ok & (st.steps < ms)
+
+        def body(c):
+            st, p, _ = c
+            queue, visited, steps = st
+            node = queue.ids[p]
+            queue = qmod.Queue(queue.ids, queue.scores,
+                               queue.stable.at[p].set(True))
+            visited = visited.at[node].set(True)
+            nbrs = neighbors[node]
+            safe = jnp.maximum(nbrs, 0)
+            fresh = (nbrs >= 0) & ~visited[safe]
+            sims = kops.batch_similarity(q, vectors[safe], graph_metric)
+            queue = clamp(_merge_insert(queue, nbrs, sims, fresh))
+            p2, exists2 = qmod.first_unstable(queue, sl)
+            return bs.SearchState(queue, visited, steps + 1), p2, exists2
+
+        p0, exists0 = qmod.first_unstable(st.queue, sl)
+        out, _, _ = jax.lax.while_loop(cond, body, (st, p0, exists0))
+        return out
+
+    return jax.lax.map(
+        one, (qs, state, caps, stable_limits, min_values, max_steps))
+
+
+@functools.partial(jax.jit, static_argnames=("new_capacity",))
+def _rebuild_lanes(graph: FlatGraph, qs, state, new_capacity: int):
+    """Exact rebuild of a growth bucket's lanes.
+
+    Same construction as ``beam_search.rebuild_for_growth`` — rescore
+    (visited ∪ queue), rebuild the queue — but the new queue is selected
+    with ``lax.top_k`` instead of a full N-entry comparator sort: entries
+    are indexed by node id, and top_k's documented lower-index-first tie
+    rule is exactly the queue's (score desc, id asc) order, so the result
+    is bit-identical at a fraction of the cost. Bit-parity of the rescoring
+    itself holds because ``query_sim`` uses a batch-invariant reduce (see
+    ``similarity.query_sim``)."""
+    n = graph.size
+    k0 = min(new_capacity, n)
+    pad = new_capacity - k0
+
+    def one(q, st):
+        vis_scores = kops.batch_similarity(q, graph.vectors, graph.metric)
+        in_queue = jnp.zeros((n,), jnp.bool_).at[
+            jnp.maximum(st.queue.ids, 0)].set(st.queue.ids >= 0)
+        frontier_unstable = jnp.zeros((n,), jnp.bool_).at[
+            jnp.maximum(st.queue.ids, 0)].set(
+            (st.queue.ids >= 0) & ~st.queue.stable)
+        member = st.visited | in_queue
+        scores = jnp.where(member, vis_scores, qmod.NEG_INF)
+        top_scores, sel = jax.lax.top_k(scores, k0)
+        valid = top_scores > qmod.NEG_INF  # similarities are always finite
+        queue = _pad_queue(qmod.Queue(
+            ids=jnp.where(valid, sel.astype(jnp.int32), -1),
+            scores=jnp.where(valid, top_scores, qmod.NEG_INF),
+            stable=jnp.where(valid, ~frontier_unstable[sel], True)), pad)
+        return bs.SearchState(queue, st.visited, st.steps)
+
+    return jax.vmap(one)(qs, state)
+
+
+_batched_stable_count = jax.jit(jax.vmap(qmod.stable_count))
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _batched_adjacency(vectors, ids, eps, metric: str):
+    vecs = vectors[jnp.maximum(ids, 0)]
+    valid = ids >= 0
+    return jax.vmap(
+        lambda v, m: kops.pairwise_adjacency(v, eps, metric, m))(vecs, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_expansions"))
+def _batched_div_astar(scores, adj, k: int, max_expansions: int):
+    """Batched div-A* + Theorem-2 minValue per lane.
+
+    Lane-serial on device (``lax.map``) rather than vmapped: div-A* trip
+    counts are heavy-tailed (the paper's §IV hard cases run 10-100x the
+    median), and a vmapped while_loop would make every lane pay the
+    straggler's trips with both cond branches materialized. ``lax.map``
+    keeps the per-query cost profile — one dispatch for the whole batch,
+    branch-and-bound pruning intact per lane."""
+    def one(s, a):
+        r = da.div_astar(s, a, k, max_expansions)
+        return r, theorem2_min_value(r.best_scores, k)
+    return jax.lax.map(lambda args: one(*args), (scores, adj))
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _batched_prefix(queue_ids, queue_scores, Ks, width: int):
+    ids = queue_ids[:, :width]
+    scores = queue_scores[:, :width]
+    keep = jnp.arange(width)[None, :] < Ks[:, None]
+    return (jnp.where(keep, ids, -1),
+            jnp.where(keep, scores, -jnp.inf))
+
+
+# ----------------------------------------------------------------- driver ----
+
+class BatchProgressiveDriver:
+    """Owns a whole batch's progressive search state across pause/resume.
+
+    Mirrors ``progressive.ProgressiveDriver`` lane-for-lane: the same
+    capacity policy, growth thresholds, and stop conditions are applied to
+    every lane individually (as host-side numpy vectors), so each lane's
+    trajectory is identical to a solo driver on the same query.
+    """
+
+    def __init__(self, graph: FlatGraph, qs, ef: int, k: int,
+                 capacity0: int | None = None,
+                 max_capacity: int | None = None):
+        self.graph = graph
+        self.qs = jnp.asarray(qs, jnp.float32)
+        self.B = int(self.qs.shape[0])
+        self.ef = ef
+        self.k = k
+        n = graph.size
+        if capacity0 is None:
+            capacity0 = min(_next_pow2(max(2 * k * ef, 256)), _next_pow2(n))
+        self.max_capacity = max_capacity or _next_pow2(n)
+        self.caps = np.full(self.B, capacity0, np.int64)
+        self.state = _batched_init(graph, self.qs, capacity0)
+        self.stats = BatchSearchStats.zeros(self.B)
+
+    # -- capacity management ------------------------------------------------
+    @property
+    def physical_capacity(self) -> int:
+        return int(self.state.queue.ids.shape[-1])
+
+    def _ensure_physical(self, cap: int) -> None:
+        C = self.physical_capacity
+        if cap <= C:
+            return
+        queue = _pad_queue(self.state.queue, cap - C)
+        self.state = bs.SearchState(queue, self.state.visited, self.state.steps)
+
+    def _grow_lanes(self, req: np.ndarray, mask: np.ndarray) -> None:
+        """Grow each masked lane to next_pow2(req) (clamped), per-bucket.
+
+        Same policy as ``ProgressiveDriver._grow_to`` per lane; lanes landing
+        on the same power-of-two bucket are rebuilt together in one vmapped
+        exact rebuild.
+        """
+        targets = np.array([min(_next_pow2(int(r)), self.max_capacity)
+                            for r in req])
+        grow = mask & (targets > self.caps)
+        if not grow.any():
+            return
+        self._ensure_physical(int(targets[grow].max()))
+        C = self.physical_capacity
+        for cap in sorted(set(int(c) for c in targets[grow])):
+            idx = np.flatnonzero(grow & (targets == cap))
+            jidx = jnp.asarray(idx)
+            sub = jax.tree_util.tree_map(lambda a: a[jidx], self.state)
+            rebuilt = _rebuild_lanes(self.graph, self.qs[jidx], sub, cap)
+            q = _pad_queue(rebuilt.queue, C - cap)
+            bq = self.state.queue
+            self.state = bs.SearchState(
+                qmod.Queue(bq.ids.at[jidx].set(q.ids),
+                           bq.scores.at[jidx].set(q.scores),
+                           bq.stable.at[jidx].set(q.stable)),
+                self.state.visited, self.state.steps)
+            self.caps[idx] = cap
+            self.stats.growths[idx] += 1
+
+    # -- search bursts ------------------------------------------------------
+    def ensure_stable(self, targets: np.ndarray,
+                      min_values: np.ndarray | None = None,
+                      active: np.ndarray | None = None) -> np.ndarray:
+        """Resume every active lane until its first ``targets[i]`` candidates
+        are stable (or its frontier drops below ``min_values[i]``).
+        Returns the per-lane stable prefix length."""
+        n = self.graph.size
+        if active is None:
+            active = np.ones(self.B, bool)
+        targets = np.minimum(np.asarray(targets, np.int64), n)
+        need = active & (targets + 8 > self.caps)
+        self._grow_lanes((targets * 1.5).astype(np.int64) + 64, need)
+        if min_values is None:
+            min_values = np.full(self.B, -np.inf, np.float32)
+        sl = np.where(active, np.minimum(targets, self.caps), 0)
+        ms = 4 * self.caps + 64
+        self.state = _batched_search_loop(
+            self.graph.vectors, self.graph.neighbors, self.qs, self.state,
+            jnp.asarray(self.caps, jnp.int32), jnp.asarray(sl, jnp.int32),
+            jnp.asarray(min_values, jnp.float32), jnp.asarray(ms, jnp.int32),
+            self.graph.metric)
+        self.stats.search_calls[active] += 1
+        self.stats.expansions = np.asarray(self.state.steps, np.int64).copy()
+        return np.asarray(_batched_stable_count(self.state.queue), np.int64)
+
+    def expand_until_below(self, min_values: np.ndarray,
+                           active: np.ndarray) -> np.ndarray:
+        """PSS's ProgressiveBeamSearch* per lane: expand while the frontier
+        score is >= minValue, growing capacity as needed."""
+        stable = np.zeros(self.B, np.int64)
+        remaining = active.copy()
+        while remaining.any():
+            got = self.ensure_stable(np.where(remaining, self.caps, 0),
+                                     min_values, remaining)
+            stable[remaining] = got[remaining]
+            done = (stable < self.caps) | (self.caps >= self.max_capacity)
+            remaining = remaining & ~done
+            if remaining.any():
+                self._grow_lanes(self.caps * 2, remaining)
+        return stable
+
+    def stable_prefix_len(self) -> np.ndarray:
+        return np.asarray(_batched_stable_count(self.state.queue), np.int64)
+
+    # -- candidate prefixes -------------------------------------------------
+    def _buckets(self, Ks: np.ndarray) -> np.ndarray:
+        return np.minimum(
+            np.maximum(64, np.array([_next_pow2(int(K)) for K in Ks])),
+            self.caps)
+
+    def prefix_groups(self, Ks: np.ndarray, active: np.ndarray):
+        """Yield (lane_indices, ids, scores) per power-of-two shape bucket.
+
+        The diversify/verify stages consume prefixes through this: lanes
+        whose prefix lands in the same bucket are processed together at
+        exactly that width. Width changes div-A*'s cursor-step accounting
+        (padding slots consume budget), so running each lane at its own
+        per-query bucket width — not the batch max — is what keeps div-A*
+        results identical to the per-query driver."""
+        Ks = np.minimum(np.asarray(Ks, np.int64), self.caps)
+        buckets = self._buckets(Ks)
+        groups: dict[int, list[int]] = {}
+        for i in np.flatnonzero(active):
+            groups.setdefault(int(buckets[i]), []).append(i)
+        for width, idx in sorted(groups.items()):
+            idx = np.asarray(idx)
+            jidx = jnp.asarray(idx)
+            ids, scores = _batched_prefix(
+                self.state.queue.ids[jidx], self.state.queue.scores[jidx],
+                jnp.asarray(Ks[idx], jnp.int32), width)
+            yield idx, ids, scores
+
+
+# ---------------------------------------------------------------- batch PGS --
+
+def batch_pgs(graph: FlatGraph, qs, k: int, eps: float, ef: int = 40,
+              driver: BatchProgressiveDriver | None = None,
+              max_iters: int = 64
+              ) -> tuple[BatchDiverseResult, BatchProgressiveDriver, np.ndarray]:
+    """Batched Alg. 2: returns (result, driver, K_final) — batch_pss reuses
+    the driver and per-lane K exactly like the per-query pgs/pss pair."""
+    if driver is None:
+        driver = BatchProgressiveDriver(graph, qs, ef, k)
+    B, n = driver.B, graph.size
+    K = np.full(B, k, np.int64)
+    active = np.ones(B, bool)
+    out_ids = np.full((B, k), -1, np.int32)
+    out_sc = np.zeros((B, k), np.float32)
+    for _ in range(max_iters):
+        if not active.any():
+            break
+        stable = driver.ensure_stable(K * ef, active=active)
+        exhausted = stable < np.minimum(K * ef, n)
+        K = np.where(active & exhausted, np.maximum(K, stable), K)
+        count = np.zeros(B, np.int64)
+        for idx, ids, scores in driver.prefix_groups(K, active):
+            adj = _batched_adjacency(graph.vectors, ids, eps, graph.metric)
+            sel, cnt = kops.greedy_diversify_batch(scores, adj, k,
+                                                   valid=ids >= 0)
+            count[idx] = np.asarray(cnt)
+            sel_np = np.asarray(sel)
+            ids_np = np.asarray(ids)
+            sc_np = np.asarray(scores)
+            for g, i in enumerate(idx):
+                s = sel_np[g]
+                out_ids[i] = np.where(s >= 0, ids_np[g][np.maximum(s, 0)], -1)
+                out_sc[i] = np.where(s >= 0, sc_np[g][np.maximum(s, 0)], 0.0)
+        driver.stats.div_calls[active] += 1
+        done = active & ((count >= k) | exhausted)
+        driver.stats.exhausted |= active & exhausted & (count < k)
+        K = np.where(active & ~done, K + k, K)
+        active = active & ~done
+    driver.stats.K_final = K.copy()
+    res = BatchDiverseResult(out_ids, out_sc, out_sc.sum(axis=1),
+                             driver.stats)
+    return res, driver, K
+
+
+# ---------------------------------------------------------------- batch PSS --
+
+def _concat_results(parts: list[BatchDiverseResult]) -> BatchDiverseResult:
+    stats = BatchSearchStats(*[
+        np.concatenate([getattr(p.stats, f.name) for p in parts])
+        for f in dataclasses.fields(BatchSearchStats)])
+    return BatchDiverseResult(np.vstack([p.ids for p in parts]),
+                              np.vstack([p.scores for p in parts]),
+                              np.concatenate([p.totals for p in parts]),
+                              stats)
+
+
+def batch_pss(graph: FlatGraph, qs, k: int, eps: float, ef: int = 40,
+              max_iters: int = 64, max_expansions: int = 400_000,
+              streams: int = 1) -> BatchDiverseResult:
+    """Batched Alg. 4 — the progressive serving engine's default path.
+
+    Phase 1 runs batched PGS (warm start + a size-k diverse set exists among
+    the candidates). Each round then builds every active lane's G^eps, runs
+    batched div-A*, applies the Theorem-2 certificate per lane, and resumes
+    ProgressiveBeamSearch* only for the uncertified lanes. Per-lane results
+    are identical to the per-query ``pss`` driver.
+
+    ``streams > 1`` splits the batch into that many sub-batches driven from
+    worker threads, overlapping host orchestration with device work (jax
+    dispatch releases the GIL). Every lane's trajectory is independent of
+    its batch, so streaming changes nothing about the results; ``streams=2``
+    is the measured sweet spot on CPU hosts.
+    """
+    qs = jnp.asarray(qs, jnp.float32)
+    if streams > 1 and qs.shape[0] > 1:
+        parts = np.array_split(np.arange(qs.shape[0]),
+                               min(streams, qs.shape[0]))
+        with concurrent.futures.ThreadPoolExecutor(len(parts)) as ex:
+            futs = [ex.submit(batch_pss, graph, qs[jnp.asarray(c)], k, eps,
+                              ef, max_iters, max_expansions) for c in parts]
+            return _concat_results([f.result() for f in futs])
+    pgs_res, driver, K = batch_pgs(graph, qs, k, eps, ef)
+    B, n = driver.B, graph.size
+    best_ids = pgs_res.ids.copy()
+    best_sc = pgs_res.scores.copy()
+    active = np.ones(B, bool)
+    for _ in range(max_iters):
+        if not active.any():
+            break
+        K = np.maximum(k, np.minimum(K, n))
+        min_values = np.full(B, -np.inf)
+        s_K = np.full(B, -np.inf)
+        complete = np.zeros(B, bool)
+        for idx, ids, scores in driver.prefix_groups(K, active):
+            adj = _batched_adjacency(graph.vectors, ids, eps, graph.metric)
+            masked = jnp.where(ids >= 0, scores, -jnp.inf)
+            res, mv = _batched_div_astar(masked, adj, k, max_expansions)
+            best_scores_np = np.asarray(res.best_scores)
+            sets_np = np.asarray(res.best_sets)
+            complete[idx] = np.asarray(res.complete)
+            min_values[idx] = np.asarray(mv, np.float64)
+            ids_np = np.asarray(ids)
+            sc_np = np.asarray(scores)
+            width = ids_np.shape[1]
+            for g, i in enumerate(idx):
+                if np.isfinite(best_scores_np[g, k - 1]):
+                    s = sets_np[g, k - 1]
+                    best_ids[i] = np.where(
+                        s >= 0, ids_np[g][np.maximum(s, 0)], -1)
+                    best_sc[i] = np.where(
+                        s >= 0, sc_np[g][np.maximum(s, 0)], 0.0)
+                s_K[i] = sc_np[g, K[i] - 1] if K[i] <= width else -np.inf
+        driver.stats.div_calls[active] += 1
+        certified = active & (min_values > s_K)
+        driver.stats.certified |= certified & complete
+        active = active & ~certified
+        stop = active & (driver.stats.exhausted | (K >= n))
+        active = active & ~stop
+        if not active.any():
+            break
+        stable_before = driver.stable_prefix_len()
+        stable = driver.expand_until_below(
+            np.asarray(min_values, np.float32), active)
+        no_progress = active & (stable <= stable_before)
+        driver.stats.exhausted |= no_progress
+        hard_stop = no_progress & ((stable >= n)
+                                   | (driver.caps >= driver.max_capacity))
+        K = np.where(active & hard_stop, np.minimum(stable, n), K)
+        K = np.where(active & ~hard_stop,
+                     np.maximum(k, stable // driver.ef), K)
+    driver.stats.K_final = K.copy()
+    return BatchDiverseResult(best_ids, best_sc, best_sc.sum(axis=1),
+                              driver.stats)
+
+
+def batch_progressive_search(graph: FlatGraph, qs, k: int, eps: float,
+                             method: str = "pss", ef: int = 40,
+                             **kwargs) -> BatchDiverseResult:
+    """One entry point for the batched progressive engine."""
+    if method == "pss":
+        return batch_pss(graph, qs, k, eps, ef, **kwargs)
+    if method == "pgs":
+        res, _, _ = batch_pgs(graph, qs, k, eps, ef, **kwargs)
+        return res
+    raise ValueError(f"unknown batched progressive method {method!r}")

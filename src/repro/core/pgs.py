@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.diversity_graph import build_adjacency

@@ -19,7 +19,6 @@ from repro.core import div_astar as da
 from repro.core.diversity_graph import build_adjacency, extend_adjacency
 from repro.core.graph import FlatGraph
 from repro.core.pgs import DiverseResult, pgs
-from repro.core.progressive import ProgressiveDriver
 from repro.core.theorems import theorem2_min_value
 
 

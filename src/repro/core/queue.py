@@ -58,6 +58,28 @@ def sort_queue(q: Queue) -> Queue:
     return Queue(i, s, st)
 
 
+def dedup_candidates(q: Queue, new_ids: jnp.ndarray, new_scores: jnp.ndarray,
+                     new_mask: jnp.ndarray
+                     ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Shared candidate masking for insert implementations.
+
+    Candidates already present in the queue, duplicated within the incoming
+    batch (first occurrence wins), masked out, or invalid (< 0) become the
+    empty sentinel (-1, -inf, stable). This is the bit-parity contract
+    between ``insert`` and the batched engine's merge-based insert — any
+    change here affects both identically.
+    """
+    dup = jnp.any(new_ids[:, None] == q.ids[None, :], axis=1)
+    m = new_ids.shape[0]
+    earlier = (new_ids[:, None] == new_ids[None, :]) & (
+        jnp.arange(m)[None, :] < jnp.arange(m)[:, None])
+    dup = dup | jnp.any(earlier & new_mask[None, :], axis=1)
+    keep = new_mask & ~dup & (new_ids >= 0)
+    return (jnp.where(keep, new_ids, -1).astype(jnp.int32),
+            jnp.where(keep, new_scores, NEG_INF).astype(jnp.float32),
+            jnp.where(keep, False, True))
+
+
 def insert(q: Queue, new_ids: jnp.ndarray, new_scores: jnp.ndarray,
            new_mask: jnp.ndarray) -> Queue:
     """Insert a batch of candidates, dedup against queue, truncate to capacity.
@@ -68,17 +90,7 @@ def insert(q: Queue, new_ids: jnp.ndarray, new_scores: jnp.ndarray,
     excluded upstream via the visited set).
     """
     cap = q.capacity
-    # Dedup: [M, C] comparison against current ids.
-    dup = jnp.any(new_ids[:, None] == q.ids[None, :], axis=1)
-    # ... and within the incoming batch (keep the first occurrence)
-    m = new_ids.shape[0]
-    earlier = (new_ids[:, None] == new_ids[None, :]) & (
-        jnp.arange(m)[None, :] < jnp.arange(m)[:, None])
-    dup = dup | jnp.any(earlier & new_mask[None, :], axis=1)
-    keep = new_mask & ~dup & (new_ids >= 0)
-    ids = jnp.where(keep, new_ids, -1).astype(jnp.int32)
-    scores = jnp.where(keep, new_scores, NEG_INF).astype(jnp.float32)
-    stable = jnp.where(keep, False, True)
+    ids, scores, stable = dedup_candidates(q, new_ids, new_scores, new_mask)
 
     all_ids = jnp.concatenate([q.ids, ids])
     all_scores = jnp.concatenate([q.scores, scores])

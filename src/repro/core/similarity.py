@@ -32,10 +32,16 @@ def _l2_sim(dots: jnp.ndarray, u_sq: jnp.ndarray, v_sq: jnp.ndarray) -> jnp.ndar
 
 
 def query_sim(q: jnp.ndarray, x: jnp.ndarray, metric: Metric) -> jnp.ndarray:
-    """Similarity of one query ``q``[d] against rows of ``x``[..., d]."""
+    """Similarity of one query ``q``[d] against rows of ``x``[..., d].
+
+    The dot products are a multiply+reduce rather than a matvec: XLA's gemv
+    changes accumulation order under vmap, while the last-axis reduce is
+    bitwise batch-invariant — the batched progressive engine relies on this
+    for exact per-lane parity with the per-query drivers.
+    """
     q = q.astype(jnp.float32)
     x = x.astype(jnp.float32)
-    dots = x @ q
+    dots = jnp.sum(x * q, axis=-1)
     if metric == "ip":
         return dots
     if metric == "cos":

@@ -13,8 +13,6 @@ so the reconstruction error stays bounded by one quantization step.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

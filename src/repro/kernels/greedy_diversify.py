@@ -8,6 +8,11 @@ score/mask tensors through HBM between steps.
 
 Inputs: scores (1, K) f32 (-inf marks invalid/padded candidates),
         adj (K, K) int8. Output: sel (1, k_pad) int32 local indices (-1 pad).
+
+The batched entry point (``greedy_diversify_batch_pallas``) runs the same
+kernel over a (B, K) score grid with one program per request lane — the
+batched progressive engine diversifies a whole serving batch in one launch,
+each lane's greedy loop staying in VMEM.
 """
 from __future__ import annotations
 
@@ -53,3 +58,36 @@ def greedy_diversify_pallas(scores: jnp.ndarray, adj: jnp.ndarray, k: int,
         interpret=interpret,
     )(s_p, a_p)
     return sel[0, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def greedy_diversify_batch_pallas(scores: jnp.ndarray, adj: jnp.ndarray,
+                                  k: int, interpret: bool = False) -> jnp.ndarray:
+    """Batched greedy selection: one grid program per request lane.
+
+    scores (B, K) f32 (-inf = invalid), adj (B, K, K). Returns sel
+    int32[B, k] local indices (-1 padded). Each program sees exactly the
+    (1, K) + (K, K) tiles of the single-query kernel, so the per-lane
+    semantics are identical to ``greedy_diversify_pallas``.
+    """
+    B, K = scores.shape
+    Kp = -(-K // 128) * 128
+    kp = -(-k // 128) * 128
+    s_p = jnp.full((B, Kp), -jnp.inf, jnp.float32).at[:, :K].set(
+        scores.astype(jnp.float32))
+    a_p = jnp.zeros((B, Kp, Kp), jnp.int8).at[:, :K, :K].set(
+        adj.astype(jnp.int8))
+    # flatten the lane axis into rows so each program's adj tile stays 2D
+    a_rows = a_p.reshape(B * Kp, Kp)
+    sel = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Kp), lambda b: (b, 0)),
+            pl.BlockSpec((Kp, Kp), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, kp), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, kp), jnp.int32),
+        interpret=interpret,
+    )(s_p, a_rows)
+    return sel[:, :k]

@@ -9,12 +9,15 @@ impl resolution:
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.batch_similarity import batch_similarity_many_pallas
-from repro.kernels.greedy_diversify import greedy_diversify_pallas
+from repro.kernels.greedy_diversify import (greedy_diversify_batch_pallas,
+                                            greedy_diversify_pallas)
 from repro.kernels.pairwise_adjacency import pairwise_adjacency_pallas
 from repro.kernels.topk_merge import topk_merge_pallas
 
@@ -101,3 +104,24 @@ def greedy_diversify(scores, adj, k: int, valid=None, impl: str | None = None):
     sel = greedy_diversify_pallas(s, adj, k,
                                   interpret=(impl == "interpret"))
     return sel, jnp.sum(sel >= 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _ref_greedy_diversify_batch(scores, adj, k):
+    return jax.vmap(lambda s, a: _ref.greedy_diversify(s, a, k))(scores, adj)
+
+
+def greedy_diversify_batch(scores, adj, k: int, valid=None,
+                           impl: str | None = None):
+    """Batched greedy selection over a request batch.
+
+    scores (B, K), adj (B, K, K), valid (B, K) or None.
+    Returns (sel int32[B, k] local idx -1-padded, count int32[B]).
+    """
+    impl = _resolve(impl)
+    s = scores if valid is None else jnp.where(valid, scores, -jnp.inf)
+    if impl == "ref":
+        return _ref_greedy_diversify_batch(s, adj, k)
+    sel = greedy_diversify_batch_pallas(s, adj, k,
+                                        interpret=(impl == "interpret"))
+    return sel, jnp.sum(sel >= 0, axis=1).astype(jnp.int32)

@@ -13,6 +13,7 @@ import argparse
 
 import jax
 
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.train.loop import train
 from repro.train.optimizer import AdamW, cosine_schedule
@@ -35,8 +36,7 @@ def main():
         cfg = cfg.reduced()
     n = len(jax.devices())
     model_ax = 1
-    mesh = jax.make_mesh((n // model_ax, model_ax), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((n // model_ax, model_ax), ("data", "model"))
     rep = train(cfg, mesh, steps=args.steps, global_batch=args.batch,
                 seq_len=args.seq, ckpt_dir=args.ckpt,
                 ckpt_every=args.ckpt_every,

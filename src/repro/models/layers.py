@@ -7,7 +7,6 @@ the KV cache. All matmuls accumulate in f32 via preferred_element_type.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any
 

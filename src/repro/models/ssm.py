@@ -112,7 +112,6 @@ def mamba2_block(params, x, *, headdim: int, d_state: int, chunk: int = 128,
 
     if decode_state is not None:
         conv_buf, h0 = decode_state
-        k = params["conv_w"].shape[0]
         conv_buf = jnp.concatenate([conv_buf[:, 1:], xbc], axis=1)
         xbc_conv = jnp.einsum("bkc,kc->bc", conv_buf.astype(F32),
                               params["conv_w"].astype(F32))

@@ -13,7 +13,6 @@ Structure notes (DESIGN.md §3):
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any
 

@@ -7,9 +7,12 @@ the two halves of the framework together:
     pipeline = RagPipeline(cfg, params, graph, k=5, eps=0.8)
     texts = pipeline.generate(query_embeds, prompt_tokens, steps=32)
 
-Retrieval uses the batched TPU path (``core.batch``) with the Theorem-2
-certificate; uncertified lanes fall back to the per-query progressive
-driver (PSS) — the hybrid the paper's §III implies for production.
+Retrieval defaults to the batched progressive engine
+(``core.batch_progressive``): the whole request batch runs the paper's
+pause/inspect/resume loop in lockstep device bursts, each lane growing its
+own candidate set until its Theorem-2 certificate fires — no per-query
+repair loop needed. ``engine="fixed_k"`` keeps the previous hybrid (static-K
+batched div-A* + per-query PSS repair of uncertified lanes) for comparison.
 """
 from __future__ import annotations
 
@@ -21,6 +24,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.batch import batch_optimal_diverse
+from repro.core.batch_progressive import batch_pss
 from repro.core.graph import FlatGraph
 from repro.core.pss import pss
 from repro.models import model as M
@@ -35,10 +39,15 @@ class RagPipeline:
     eps: float = 0.8
     K_budget: int = 64
     ef: int = 8
+    engine: str = "progressive"   # "progressive" | "fixed_k"
 
     def retrieve(self, query_embeds) -> tuple[np.ndarray, np.ndarray]:
-        """Diverse document ids per query: batched fast path + PSS repair."""
+        """Diverse document ids per query + per-lane certificate flags."""
         qs = jnp.asarray(query_embeds, jnp.float32)
+        if self.engine == "progressive":
+            res = batch_pss(self.graph, qs, self.k, self.eps, ef=self.ef)
+            return res.ids.copy(), res.stats.certified.copy()
+        # legacy hybrid: static-K batched div-A* + per-query PSS repair
         ids, scores, total, certified = batch_optimal_diverse(
             self.graph, qs, self.k, self.eps, self.K_budget, self.ef)
         ids = np.array(ids)  # writable copy for PSS repair

@@ -2,5 +2,6 @@ from repro.sharded_search.search import (  # noqa: F401
     ShardedIndex,
     build_sharded_index,
     sharded_diverse_search,
+    sharded_progressive_diverse,
     sharded_topk,
 )

@@ -16,16 +16,16 @@ baseline/optimized comparison.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import beam_search as bs
 from repro.core import div_astar as da
-from repro.core.graph import FlatGraph, make_flat_graph
+from repro.core.graph import make_flat_graph
 from repro.core.theorems import theorem2_min_value
 from repro.kernels import ops as kops
 
@@ -101,14 +101,11 @@ def _tournament_merge(ids, scores, axis: str, p: int):
     rounds = p.bit_length() - 1
     for r in range(rounds):
         stride = 1 << r
-        me = jax.lax.axis_index(axis)
-        partner = me ^ stride
         perm = [(i, i ^ stride) for i in range(p)]
         other_ids = jax.lax.ppermute(ids, axis, perm)
         other_scores = jax.lax.ppermute(scores, axis, perm)
         merged = jax.vmap(kops.topk_merge)(ids, scores, other_ids, other_scores)
         ids, scores = merged
-        del me, partner
     return ids, scores
 
 
@@ -142,11 +139,10 @@ def sharded_topk(index: ShardedIndex, qs: jnp.ndarray, k: int, L: int,
         return ids, scores
 
     shard_spec = P(axis)
-    fn = jax.shard_map(
-        shard_fn, mesh=mesh,
+    fn = shard_map(
+        shard_fn, mesh,
         in_specs=(shard_spec, shard_spec, shard_spec, shard_spec, P()),
         out_specs=(P(), P()),
-        check_vma=False,
     )
     return fn(index.vectors, index.neighbors, index.entries, index.bases, qs)
 
@@ -184,3 +180,35 @@ def sharded_diverse_search(index: ShardedIndex, all_vectors: jnp.ndarray,
         return out_ids, out_sc, certified
 
     return jax.vmap(diversify)(ids, scores)
+
+
+def sharded_progressive_diverse(index: ShardedIndex, all_vectors: jnp.ndarray,
+                                qs: jnp.ndarray, k: int, eps,
+                                mesh: Mesh, axis: str = "data",
+                                K0: int = 32, L_factor: int = 4,
+                                merge: str = "tournament",
+                                max_expansions: int = 100_000,
+                                max_rounds: int = 8):
+    """Progressive distributed diverse search (the paper's loop at mesh scale).
+
+    The fixed-budget ``sharded_diverse_search`` can return uncertified lanes
+    (Theorem-2 check fails: the optimal diverse set may extend past the K
+    merged candidates). This entry point wraps it in the progressive
+    pause/inspect/resume structure: start from a small K, inspect the
+    per-lane certificates on the host, and resume with a doubled candidate
+    budget while any lane is uncertified — the sharded analogue of the
+    batched progressive engine's growth loop (rounds are lockstep across the
+    mesh, so certified lanes ride along; the standard batching trade-off).
+
+    Returns (ids[B, k], scores[B, k], certified[B], K_final).
+    """
+    n_total = index.num_shards * index.shard_size
+    K = min(max(K0, 2 * k), n_total)
+    for round_ in range(max_rounds):
+        ids, scores, cert = sharded_diverse_search(
+            index, all_vectors, qs, k, eps, K, mesh, axis, L_factor, merge,
+            "div_astar", max_expansions)
+        if bool(np.asarray(cert).all()) or K >= n_total:
+            break
+        K = min(K * 2, n_total)
+    return ids, scores, cert, K

@@ -1,0 +1,113 @@
+"""Minimal stand-in for ``hypothesis`` when the real package is absent.
+
+CI installs real hypothesis via the ``dev`` extra; hermetic containers
+without it still need the property tests to *collect and run*. This module
+implements exactly the subset of the API the test-suite uses — ``given``,
+``settings``, and the ``integers/floats/lists/tuples/composite`` strategies —
+driving each test with a fixed number of deterministic pseudo-random examples
+(seeded per test name, so runs are reproducible and failures re-fire).
+
+No shrinking, no example database, no edge-case bias: this is a smoke-grade
+fallback, not a hypothesis replacement. ``install()`` registers the shim in
+``sys.modules`` under the real names; it must run before the test modules
+import ``hypothesis`` (the repo's ``tests/conftest.py`` does this).
+"""
+from __future__ import annotations
+
+import functools
+import sys
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    """A strategy is just a deterministic sampler: rng -> value."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, allow_nan: bool = False,
+           allow_infinity: bool = False) -> Strategy:
+    del allow_nan, allow_infinity  # bounded draws are always finite
+    return Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def sample(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(size)]
+    return Strategy(sample)
+
+
+def tuples(*elements: Strategy) -> Strategy:
+    return Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+
+def composite(fn):
+    """``@st.composite`` — fn(draw, *args) becomes a strategy factory."""
+    @functools.wraps(fn)
+    def factory(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda strat: strat.example(rng), *args, **kwargs)
+        return Strategy(sample)
+    return factory
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def apply(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return apply
+
+
+def given(*strategies: Strategy):
+    def decorate(fn):
+        # per-test deterministic seed: stable across runs and processes
+        seed = zlib.crc32(fn.__qualname__.encode())
+
+        @functools.wraps(fn)
+        def runner():
+            # read at call time from the runner itself, so @settings works
+            # both above and below @given (functools.wraps copies the attr
+            # from fn; settings applied above sets it on runner directly)
+            max_examples = getattr(runner, "_fallback_max_examples",
+                                   DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(seed)
+            for _ in range(max_examples):
+                fn(*(s.example(rng) for s in strategies))
+
+        # hide the original argument list from pytest's fixture resolution
+        runner.__wrapped__ = None
+        del runner.__wrapped__
+        return runner
+    return decorate
+
+
+def install() -> None:
+    """Register this shim as ``hypothesis`` + ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:
+        return
+    root = types.ModuleType("hypothesis")
+    root.given = given
+    root.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "tuples", "composite"):
+        setattr(strategies, name, globals()[name])
+    strategies.Strategy = Strategy
+    root.strategies = strategies
+    root.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = root
+    sys.modules["hypothesis.strategies"] = strategies

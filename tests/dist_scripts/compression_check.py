@@ -1,10 +1,11 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh, shard_map
 from jax.sharding import PartitionSpec as P
 from repro.distributed.compression import compressed_psum
 
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("data",))
 rng = np.random.default_rng(0)
 g = jnp.asarray(rng.normal(size=(4, 512)), jnp.float32)  # per-device rows
 
@@ -12,7 +13,7 @@ def f(g):
     out, ef = compressed_psum(g[0], "data", None)
     return out[None], ef[None]
 
-fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P("data")), check_vma=False))
+fn = jax.jit(shard_map(f, mesh, in_specs=P("data"), out_specs=(P("data"), P("data"))))
 mean, ef = fn(g)
 true_mean = np.asarray(g).mean(axis=0)
 got = np.asarray(mean)[0]

@@ -1,6 +1,7 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np, jax
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.models import model as M
 from repro.distributed import sharding as sh
@@ -9,8 +10,8 @@ from repro.train import checkpoint as ckpt
 import tempfile
 
 cfg = get_config("qwen2-1.5b").reduced()
-mesh8 = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
-mesh4 = jax.make_mesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh8 = make_mesh((4, 2), ("data", "model"))
+mesh4 = make_mesh((2, 2), ("data", "model"))
 params = M.init_params(cfg, jax.random.key(0))
 p8 = reshard_tree(params, cfg, mesh8)
 with tempfile.TemporaryDirectory() as d:

@@ -1,7 +1,10 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-import numpy as np, jax, jax.numpy as jnp
-from repro.sharded_search import build_sharded_index, sharded_topk, sharded_diverse_search
+import numpy as np, jax.numpy as jnp
+from repro.compat import make_mesh
+from repro.sharded_search import (build_sharded_index, sharded_topk,
+                                  sharded_diverse_search,
+                                  sharded_progressive_diverse)
 from repro.index.flat import exact_topk
 from repro.core.similarity import pairwise_sim
 
@@ -9,7 +12,7 @@ rng = np.random.default_rng(0)
 N, d = 2048, 16
 X = rng.normal(size=(N, d)).astype(np.float32)
 idx = build_sharded_index(X, 4, "ip", M=8)
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("data",))
 qs = jnp.asarray(rng.normal(size=(8, d)), jnp.float32)
 ids, scores = sharded_topk(idx, qs, k=10, L=64, mesh=mesh)
 gt_ids, _ = exact_topk(np.asarray(qs), X, 10, "ip")
@@ -21,6 +24,17 @@ dids, dsc, cert = sharded_diverse_search(idx, jnp.asarray(X), qs, k=5, eps=4.0, 
 dids = np.asarray(dids)
 for i in range(8):
     sel = dids[i][dids[i] >= 0]
+    assert len(sel) == 5, (i, sel)
+    sims = np.asarray(pairwise_sim(jnp.asarray(X[sel]), jnp.asarray(X[sel]), "ip"))
+    off = sims[~np.eye(len(sel), dtype=bool)]
+    assert np.all(off < 4.0 + 1e-4)
+# progressive entry point: budget grows until every lane certifies
+pids, psc, pcert, K_final = sharded_progressive_diverse(
+    idx, jnp.asarray(X), qs, k=5, eps=4.0, mesh=mesh, K0=16)
+pids = np.asarray(pids)
+assert K_final >= 16
+for i in range(8):
+    sel = pids[i][pids[i] >= 0]
     assert len(sel) == 5, (i, sel)
     sims = np.asarray(pairwise_sim(jnp.asarray(X[sel]), jnp.asarray(X[sel]), "ip"))
     off = sims[~np.eye(len(sel), dtype=bool)]

@@ -1,11 +1,11 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax
+from repro.compat import make_mesh
 from repro.configs import get_config, ShapeCard
 from repro.launch.steps import build_train_step, build_serve_step, input_specs
 from repro.launch.hlo_analysis import analyze
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 for arch in ("qwen2-1.5b", "moonshot-v1-16b-a3b", "mamba2-370m", "whisper-small"):
     cfg = get_config(arch).reduced()
     shape = ShapeCard("t", 32, 8, "train")

@@ -1,0 +1,141 @@
+"""Batched progressive engine: exact per-lane parity with the per-query
+drivers, bucketed capacity growth, and certificate behavior."""
+import numpy as np
+import pytest
+
+from repro.core.batch_progressive import (BatchProgressiveDriver, batch_pgs,
+                                          batch_pss)
+from repro.core.pgs import pgs
+from repro.core.progressive import ProgressiveDriver
+from repro.core.pss import pss
+from repro.index.flat import build_knn_graph
+
+
+def _normalize(v):
+    return (v / np.maximum(np.linalg.norm(v, axis=-1, keepdims=True),
+                           1e-9)).astype(np.float32)
+
+
+def _queries(x, num, seed=3, noise=0.05, unit=False):
+    rng = np.random.default_rng(seed)
+    qs = (x[rng.integers(0, x.shape[0], num)]
+          + rng.normal(size=(num, x.shape[1])).astype(np.float32) * noise)
+    return _normalize(qs) if unit else qs.astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def big_graph():
+    """~10k-point cosine-space graph with mild clustering."""
+    rng = np.random.default_rng(5)
+    n, d = 10_000, 32
+    centers = rng.normal(size=(64, d)) * 0.25
+    x = _normalize(centers[rng.integers(0, 64, n)]
+                   + rng.normal(size=(n, d)).astype(np.float32))
+    return build_knn_graph(x, metric="cos", M=8), x
+
+
+def _assert_lane_matches(r, bres, i):
+    np.testing.assert_array_equal(np.asarray(r.ids), bres.ids[i])
+    np.testing.assert_array_equal(np.asarray(r.scores), bres.scores[i])
+    assert r.stats.certified == bool(bres.stats.certified[i])
+    assert r.stats.exhausted == bool(bres.stats.exhausted[i])
+    assert r.stats.K_final == int(bres.stats.K_final[i])
+    assert r.stats.growths == int(bres.stats.growths[i])
+
+
+# ------------------------------------------------------- 10k parity (slow) --
+
+@pytest.mark.slow
+@pytest.mark.parametrize("eps", [0.5, 0.8])
+@pytest.mark.parametrize("k", [5, 10])
+def test_batch_pss_matches_per_query_10k(big_graph, eps, k):
+    graph, x = big_graph
+    qs = _queries(x, 6, unit=True)
+    bres = batch_pss(graph, qs, k, eps, ef=10)
+    for i in range(qs.shape[0]):
+        _assert_lane_matches(pss(graph, qs[i], k, eps, ef=10), bres, i)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("eps", [0.5, 0.8])
+def test_batch_pgs_matches_per_query_10k(big_graph, eps):
+    graph, x = big_graph
+    qs = _queries(x, 6, unit=True)
+    bres, _, K = batch_pgs(graph, qs, 5, eps, ef=10)
+    for i in range(qs.shape[0]):
+        r, _, K_i = pgs(graph, qs[i], 5, eps, ef=10)
+        np.testing.assert_array_equal(np.asarray(r.ids), bres.ids[i])
+        np.testing.assert_array_equal(np.asarray(r.scores), bres.scores[i])
+        assert K_i == int(K[i])
+
+
+# ------------------------------------------------ small-graph parity (fast) --
+
+@pytest.fixture(scope="module")
+def small_graph_l2():
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(12, 24)) * 2.0
+    x = (centers[rng.integers(0, 12, 600)]
+         + rng.normal(size=(600, 24)) * 0.3).astype(np.float32)
+    return build_knn_graph(x, metric="l2", M=8), x
+
+
+def test_batch_pss_small_parity(small_graph_l2):
+    graph, x = small_graph_l2
+    qs = _queries(x, 6)
+    bres = batch_pss(graph, qs, 5, 0.0, ef=10)
+    for i in range(qs.shape[0]):
+        _assert_lane_matches(pss(graph, qs[i], 5, 0.0, ef=10), bres, i)
+
+
+def test_batch_pss_certificates_fire(small_graph_l2):
+    graph, x = small_graph_l2
+    qs = _queries(x, 4)
+    bres = batch_pss(graph, qs, 3, -3.0, ef=10)
+    assert bres.stats.certified.all()
+    assert (bres.ids >= 0).all()
+
+
+# --------------------------------------------------------- growth coverage --
+
+def test_bucketed_growth_exact_rebuild(small_graph_l2):
+    """Lanes growing to different targets are rebuilt per power-of-two
+    bucket; each lane's queue must equal a solo driver grown the same way."""
+    graph, x = small_graph_l2
+    qs = _queries(x, 3)
+    driver = BatchProgressiveDriver(graph, qs, ef=10, k=5, capacity0=64)
+    driver.ensure_stable(np.full(3, 40))
+    driver._grow_lanes(np.array([100, 300, 700]), np.ones(3, bool))
+    assert driver.caps.tolist() == [128, 512, 1024]
+    assert (driver.stats.growths == 1).all()
+    for i, tgt in enumerate([100, 300, 700]):
+        solo = ProgressiveDriver(graph, qs[i], 10, 5, capacity0=64)
+        solo.ensure_stable(40)
+        solo._grow_to(tgt)
+        assert solo.capacity == driver.caps[i]
+        np.testing.assert_array_equal(
+            np.asarray(driver.state.queue.ids[i][:solo.capacity]),
+            np.asarray(solo.state.queue.ids))
+        np.testing.assert_array_equal(
+            np.asarray(driver.state.queue.scores[i][:solo.capacity]),
+            np.asarray(solo.state.queue.scores))
+        np.testing.assert_array_equal(
+            np.asarray(driver.state.queue.stable[i][:solo.capacity]),
+            np.asarray(solo.state.queue.stable))
+
+
+def test_growth_path_parity(small_graph_l2):
+    """A small initial capacity forces at least one rebuild inside the
+    engine loop; results must still match solo drivers started the same."""
+    graph, x = small_graph_l2
+    qs = _queries(x, 4, seed=11)
+    bdriver = BatchProgressiveDriver(graph, qs, ef=10, k=5, capacity0=32)
+    bres, bdriver, K = batch_pgs(graph, qs, 5, 0.0, ef=10, driver=bdriver)
+    assert (bdriver.stats.growths >= 1).all()
+    for i in range(qs.shape[0]):
+        solo = ProgressiveDriver(graph, qs[i], 10, 5, capacity0=32)
+        r, solo, K_i = pgs(graph, qs[i], 5, 0.0, ef=10, driver=solo)
+        np.testing.assert_array_equal(np.asarray(r.ids), bres.ids[i])
+        np.testing.assert_array_equal(np.asarray(r.scores), bres.scores[i])
+        assert solo.stats.growths == int(bdriver.stats.growths[i])
+        assert K_i == int(K[i])

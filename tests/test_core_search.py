@@ -1,12 +1,10 @@
 """Beam search, progressive search, queue invariants, theorems."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import beam_search as bs
 from repro.core import queue as qmod
-from repro.core.graph import FlatGraph
 from repro.core.theorems import theorem1_K, theorem2_min_value, theorem3_recall_bound
 from repro.index.flat import exact_topk
 

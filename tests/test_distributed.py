@@ -5,6 +5,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # compile-heavy; CI runs these in the slow job
+
 SCRIPTS = os.path.join(os.path.dirname(__file__), "dist_scripts")
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

@@ -1,7 +1,6 @@
 """div-A* exactness: python oracle vs brute force vs JAX implementation."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.div_astar import div_astar

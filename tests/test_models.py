@@ -8,6 +8,8 @@ import pytest
 from repro.configs import ARCH_NAMES, get_config
 from repro.models import model as M
 
+pytestmark = pytest.mark.slow  # compile-heavy; CI runs these in the slow job
+
 RNG = jax.random.key(0)
 
 

@@ -11,10 +11,12 @@ from repro.train import checkpoint as ckpt
 from repro.train.data import Prefetcher, SyntheticLM
 from repro.train.optimizer import AdamW, cosine_schedule
 
+pytestmark = pytest.mark.slow  # compile-heavy; CI runs these in the slow job
+
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_synthetic_data_deterministic_and_disjoint():
