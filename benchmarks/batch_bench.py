@@ -1,21 +1,45 @@
-"""Serving-path benchmark: the batched progressive engine vs the per-query
-progressive driver loop, plus the legacy fixed-K batched baselines.
+"""Serving-path benchmark: engine vs per-query loop, and continuous vs
+lockstep admission on skewed workloads.
 
-The headline comparison (EXPERIMENTS.md §Perf): at serving batch sizes the
-per-query pause/inspect/resume loop pays its host round-trips and device
-dispatches per *query*, while ``core.batch_progressive`` pays them per
-*round* for the whole batch — same per-lane semantics (exact parity with
-``pss``), ~B-fold fewer dispatches."""
+Two modes:
+
+* ``--mode engine`` (default) — PR 1's headline comparison: at serving batch
+  sizes the per-query pause/inspect/resume loop pays its host round-trips
+  and device dispatches per *query*, while the batched engine pays them per
+  *round* for the whole batch — same per-lane semantics (exact parity with
+  ``pss``), ~B-fold fewer dispatches.
+
+* ``--mode skewed`` — the continuous-batching comparison: a heavy-tailed
+  request mix (mixed ``k`` in {5, 10}, mostly light-diversification queries
+  with a heavy tail of dense-G^eps ones whose div-A* trip counts explode)
+  served by the *same* lane scheduler under two admission policies.
+  Lockstep admission refills lanes only when the whole wave finished (every
+  wave waits for its straggler); continuous admission recycles each
+  certified lane immediately. Both policies return bit-identical per-request
+  results (verified against the per-query ``pss`` driver — a parity
+  violation exits nonzero, which is what the CI smoke job checks); the
+  difference is purely p50/p99 latency and throughput. ``--tiny`` shrinks
+  everything for the CI smoke job.
+"""
 from __future__ import annotations
+
+import argparse
+import os
+import sys
 
 import jax.numpy as jnp
 import numpy as np
+
+if __package__ in (None, ""):   # `python benchmarks/batch_bench.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
 
 from benchmarks import datasets as D
 from benchmarks.common import emit, timed
 from repro.core.api import diverse_search
 from repro.core.batch import batch_greedy_diverse, batch_optimal_diverse
 from repro.core.batch_progressive import batch_pss
+from repro.serve.scheduler import LaneScheduler
 
 
 def run(n: int = D.N_DEFAULT, batch: int = 64, k: int = 10, ef: int = 10,
@@ -65,11 +89,127 @@ def run(n: int = D.N_DEFAULT, batch: int = 64, k: int = 10, ef: int = 10,
     return speedups
 
 
+# ------------------------------------------------------------ skewed mode ----
+
+def make_skewed_workload(x, metric, requests: int, seed: int = 7):
+    """Mixed (k, eps) request stream with a heavy diversification tail:
+    75% light (phi ~ low) queries, 25% dense-G^eps (phi ~ medium) ones,
+    k alternating in {5, 10}, order shuffled."""
+    rng = np.random.default_rng(seed)
+    queries = D.queries_for(x, requests)
+    eps_light = D.calibrate_eps(x, metric, D.PHI_TARGETS["low"])
+    eps_heavy = D.calibrate_eps(x, metric, D.PHI_TARGETS["medium"])
+    ks = np.where(np.arange(requests) % 2 == 0, 5, 10)
+    heavy = rng.permutation(requests) < requests // 4
+    epss = np.where(heavy, eps_heavy, eps_light)
+    perm = rng.permutation(requests)
+    return queries[perm], ks[perm], epss[perm], heavy[perm]
+
+
+def _serve(graph, queries, ks, epss, ef, lanes, admission, prewarm):
+    sched = LaneScheduler(graph, num_lanes=lanes, max_k=int(ks.max()),
+                          default_ef=ef, admission=admission,
+                          max_pending=len(queries), prewarm=prewarm)
+    results = sched.run(queries, ks, epss, efs=ef)
+    return sched, results
+
+
+def run_skewed(n: int = D.N_DEFAULT, requests: int = 64, lanes: int = 16,
+               ef: int = 10, parity: str = "sample", seed: int = 7) -> dict:
+    graph, x, metric = D.load_graph("deep-like", n=n)
+    queries, ks, epss, heavy = make_skewed_workload(x, metric, requests, seed)
+    print(f"# skewed workload: {requests} requests, {lanes} lanes, n={n}, "
+          f"heavy_frac={heavy.mean():.2f}, ks={sorted(set(ks.tolist()))}",
+          flush=True)
+
+    # warmup: compiles the capacity ladder + every diversify signature the
+    # workload reaches (jit caches are module-global, so both timed passes
+    # below run fully warm)
+    _serve(graph, queries, ks, epss, ef, lanes, "continuous", prewarm=True)
+
+    out = {}
+    for admission in ("lockstep", "continuous"):
+        sched, results = _serve(graph, queries, ks, epss, ef, lanes,
+                                admission, prewarm=False)
+        stats = sched.latency_stats()
+        out[admission] = (stats, results)
+        emit(f"skewed/{admission}/p50_latency", stats["p50_latency"] * 1e6,
+             "per-request us")
+        emit(f"skewed/{admission}/p99_latency", stats["p99_latency"] * 1e6,
+             f"fairness={stats['fairness']:.3f}")
+        emit(f"skewed/{admission}/throughput", stats["throughput"],
+             f"req_per_s;certified_frac={stats['certified_frac']:.2f};"
+             f"signatures={stats['signatures']}")
+
+    ls, cs = out["lockstep"][0], out["continuous"][0]
+    p99_win = cs["p99_latency"] < ls["p99_latency"]
+    tput_win = cs["throughput"] > ls["throughput"]
+    print(f"# continuous vs lockstep: p99 "
+          f"{ls['p99_latency']:.3f}s -> {cs['p99_latency']:.3f}s "
+          f"({'better' if p99_win else 'WORSE'}), throughput "
+          f"{ls['throughput']:.2f} -> {cs['throughput']:.2f} req/s "
+          f"({'better' if tput_win else 'WORSE'})", flush=True)
+
+    # parity: scheduler results (either admission — they are identical by
+    # construction, assert that too) vs the per-query PSS driver
+    violations = 0
+    lock_res, cont_res = out["lockstep"][1], out["continuous"][1]
+    for i in range(requests):
+        if not (np.array_equal(lock_res[i].ids, cont_res[i].ids)
+                and np.array_equal(lock_res[i].scores, cont_res[i].scores)):
+            print(f"# PARITY VIOLATION lockstep!=continuous at request {i}")
+            violations += 1
+    if parity != "off":
+        sample = (range(requests) if parity == "full" else
+                  np.random.default_rng(0).choice(requests,
+                                                  min(8, requests),
+                                                  replace=False))
+        for i in sample:
+            solo = diverse_search(graph, queries[i], k=int(ks[i]),
+                                  eps=float(epss[i]), method="pss", ef=ef)
+            r = cont_res[i]
+            if not (np.array_equal(np.asarray(solo.ids), r.ids)
+                    and np.array_equal(np.asarray(solo.scores), r.scores)
+                    and solo.stats.certified == r.stats.certified):
+                print(f"# PARITY VIOLATION scheduler!=solo pss at request {i}")
+                violations += 1
+    print(f"# parity check: {violations} violations", flush=True)
+    return dict(lockstep=ls, continuous=cs, p99_win=p99_win,
+                tput_win=tput_win, parity_violations=violations)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="engine", choices=["engine", "skewed"])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke sizes (small n, few requests)")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="request count (both modes)")
+    ap.add_argument("--lanes", type=int, default=None)
+    ap.add_argument("--ef", type=int, default=10)
+    ap.add_argument("--parity", default=None,
+                    choices=["full", "sample", "off"])
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args(argv)
+    if args.mode == "engine":
+        kwargs = {}
+        if args.n:
+            kwargs["n"] = args.n
+        if args.batch:
+            kwargs["batch"] = args.batch
+        run(**kwargs)
+        return 0
+    n = args.n or (2000 if args.tiny else D.N_DEFAULT)
+    requests = args.batch or (16 if args.tiny else 64)
+    lanes = args.lanes or (4 if args.tiny else 16)
+    parity = args.parity or ("full" if args.tiny else "sample")
+    res = run_skewed(n=n, requests=requests, lanes=lanes, ef=args.ef,
+                     parity=parity, seed=args.seed)
+    if res["parity_violations"]:
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
-    import sys
-    kwargs = {}
-    if len(sys.argv) > 1:
-        kwargs["n"] = int(sys.argv[1])
-    if len(sys.argv) > 2:
-        kwargs["batch"] = int(sys.argv[2])
-    run(**kwargs)
+    sys.exit(main())

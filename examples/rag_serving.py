@@ -1,5 +1,9 @@
 """End-to-end RAG: diverse retrieval (the paper) feeding LM decode.
 
+Retrieval goes through the continuous-batching lane scheduler: each request
+is submitted with its own (k, eps), lanes freed by certified queries are
+recycled, and per-request latency stats come back with the answer.
+
     PYTHONPATH=src python examples/rag_serving.py
 """
 import jax
@@ -16,7 +20,8 @@ graph = build_knn_graph(docs, metric="ip", M=8)
 
 cfg = get_config("qwen2-1.5b").reduced()
 params = M.init_params(cfg, jax.random.key(0))
-pipe = RagPipeline(cfg, params, graph, k=4, eps=3.0, K_budget=64, ef=4)
+pipe = RagPipeline(cfg, params, graph, k=4, eps=3.0, ef=4,
+                   engine="scheduler", num_lanes=3)
 
 queries = docs[rng.integers(0, 4000, 3)]
 tokens, ids, certified = pipe.generate(queries, np.ones((3, 4), np.int32),
@@ -24,3 +29,7 @@ tokens, ids, certified = pipe.generate(queries, np.ones((3, 4), np.int32),
 print("retrieved diverse doc ids per query:\n", ids)
 print("theorem-2 certified lanes:", certified)
 print("generated tokens:\n", tokens)
+stats = pipe.scheduler.latency_stats()
+print(f"scheduler: completed={stats['completed']} "
+      f"p99={stats['p99_latency'] * 1e3:.0f}ms "
+      f"signatures={stats['signatures']}")

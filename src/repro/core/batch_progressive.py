@@ -1,45 +1,63 @@
-"""Batched progressive serving engine (paper Alg. 2-4 over a request batch).
+"""Batched progressive engine (paper Alg. 2-4 over a lane batch).
 
-The per-query drivers (``pgs``/``pds``/``pss``) are faithful but serve one
-query at a time: every pause/inspect/resume cycle costs a host round-trip and
-a single-lane device dispatch. This module runs the *same* progressive
-framework over a whole batch at once:
+This is the middle layer of the serving stack's three-way split:
 
-* **One-dispatch device bursts** — a single ``lax.map`` dispatch advances
-  every lane's beam-search ``while_loop`` to that lane's own stop condition
-  (stable-prefix target reached, frontier below its Theorem-2 ``minValue``,
-  or step budget); lanes run lane-serial on device, paying exactly the sum
-  of per-lane work with none of the per-query dispatch overhead (see
-  ``_batched_search_loop`` for the lax.map-vs-vmap trade-off).
+* ``core.lane_state`` — pure fixed-shape per-lane state (queue/beam pytrees,
+  ``extract_lane`` / ``inject_lane`` / ``recycle_lane``).
+* this module — the **engine**: one-dispatch search bursts, bucketed exact
+  queue growth, batched diversify/verify kernels, and a per-lane state
+  machine (``ProgressiveEngine.step()``) that advances every occupied lane
+  one progressive round. Lanes are independent: each carries its own
+  ``(k, eps, ef)`` and its own method (PGS / PDS / PSS), and a certified
+  lane's slot can be recycled for a new query between steps.
+* ``serve.scheduler`` — continuous-batching admission on top of ``step()``:
+  a request queue feeds freed lanes so one heavy-tailed query never stalls
+  the batch (see that module for the latency story).
+
+Device-side structure (unchanged from the original engine):
+
+* **One-dispatch bursts** — a single ``lax.map`` dispatch advances every
+  lane's beam-search ``while_loop`` to that lane's own stop condition;
+  lanes run lane-serial on device, paying the sum of per-lane work with
+  none of the per-query dispatch overhead (see ``_batched_search_loop``).
 * **Per-lane logical capacity** — all lanes share one fixed-shape state at
-  the max bucket capacity, but each lane's queue is clamped to its own
+  the physical capacity, but each lane's queue is clamped to its own
   logical capacity after every insert, so per-lane semantics are *bit-exact*
   with a solo ``ProgressiveDriver`` at that capacity.
 * **Bucketed growth** — lanes whose candidate budget outgrows their capacity
-  are grouped by next-power-of-two target and rebuilt together with the
-  exact rebuild of ``beam_search.rebuild_for_growth`` (one vmapped rebuild
-  per bucket), preserving the unbounded-queue semantics of the paper.
-* **Batched diversify + verify** — adjacency builds and greedy selection
-  (the (B, K)-grid Pallas kernel) run vmapped across the batch, div-A*
-  lane-serial (its trip counts are heavy-tailed); Theorem-2 certificates
-  come back per lane and only uncertified lanes re-enter the progressive
-  loop.
+  are rebuilt together per power-of-two target with the exact rebuild of
+  ``beam_search.rebuild_for_growth`` (one vmapped rebuild per bucket).
+* **Batched diversify + verify** — adjacency builds, greedy selection (the
+  (B, K)-grid Pallas kernel), Theorem-1 degree schedules, and div-A* run
+  per (prefix width, k) group; Theorem-2 certificates come back per lane.
 
-Entry points: ``batch_pgs`` (Alg. 2), ``batch_pss`` (Alg. 4, the default
-serving path), both returning a ``BatchDiverseResult`` whose per-lane
-ids/scores match the per-query drivers exactly.
+Compile-signature discipline: every jitted call site is logged in a
+``SignatureLog`` keyed by its shape/static signature — ``(lane count,
+physical capacity)`` for bursts, ``(group size, prefix width[, k])`` for the
+diversify stages — and group sizes / widths / capacities are all padded to
+powers of two, so the number of distinct signatures is logarithmic in batch
+size and capacity. ``ProgressiveEngine.prewarm()`` compiles the capacity
+ladder up front (the scheduler calls it at start) and the log exposes any
+signature first seen after ``freeze()`` as *unplanned*.
+
+Entry points: ``batch_pgs`` (Alg. 2), ``batch_pds`` (Alg. 3), ``batch_pss``
+(Alg. 4, the default serving path) — lockstep wrappers that admit the whole
+batch and step the engine until every lane finishes, returning a
+``BatchDiverseResult`` whose per-lane ids/scores match the per-query drivers
+exactly.
 
 Parity scope: every per-lane decision replicates the per-query driver's
 formulas, queue-score computations are batch-invariant by construction
 (``query_sim``'s reduce form, the rank-merge insert, top_k rebuilds), and
 ``tests/test_batch_progressive.py`` enforces bit-equality on the CPU
-reference path. The one caveat is the adjacency build: ``sims > eps`` edges
-come from matmuls whose accumulation order XLA may vary across batch shapes
-and backends, so a pair landing within one rounding step of ``eps`` could in
-principle flip an edge relative to the solo driver (which additionally uses
-``extend_adjacency``'s different-shaped matmul). Measured bit-stable across
-vmap/widths on CPU; re-validate the parity suite before relying on
-bit-equality on a new backend.
+reference path — including for recycled lanes, which must match a fresh solo
+driver for the new query. The one caveat is the adjacency build: ``sims >
+eps`` edges come from matmuls whose accumulation order XLA may vary across
+batch shapes and backends, so a pair landing within one rounding step of
+``eps`` could in principle flip an edge relative to the solo driver (which
+additionally uses ``extend_adjacency``'s different-shaped matmul). Measured
+bit-stable across vmap/widths on CPU; re-validate the parity suite before
+relying on bit-equality on a new backend.
 """
 from __future__ import annotations
 
@@ -54,10 +72,13 @@ import numpy as np
 
 from repro.core import beam_search as bs
 from repro.core import div_astar as da
+from repro.core import lane_state
 from repro.core import queue as qmod
+from repro.core.diversity_graph import degrees as _degrees
 from repro.core.graph import FlatGraph
-from repro.core.progressive import _next_pow2
-from repro.core.theorems import theorem2_min_value
+from repro.core.pgs import DiverseResult
+from repro.core.progressive import SearchStats, _next_pow2
+from repro.core.theorems import theorem1_K, theorem2_min_value
 from repro.kernels import ops as kops
 
 
@@ -84,6 +105,19 @@ class BatchSearchStats:
                    exhausted=np.zeros(b, bool),
                    K_final=np.zeros(b, np.int64))
 
+    def reset_lane(self, lane: int) -> None:
+        for f in dataclasses.fields(self):
+            getattr(self, f.name)[lane] = 0
+
+    def lane_view(self, lane: int) -> SearchStats:
+        return SearchStats(expansions=int(self.expansions[lane]),
+                           growths=int(self.growths[lane]),
+                           search_calls=int(self.search_calls[lane]),
+                           div_calls=int(self.div_calls[lane]),
+                           certified=bool(self.certified[lane]),
+                           exhausted=bool(self.exhausted[lane]),
+                           K_final=int(self.K_final[lane]))
+
 
 class BatchDiverseResult(NamedTuple):
     ids: np.ndarray      # int32[B, k], -1 padded
@@ -92,26 +126,60 @@ class BatchDiverseResult(NamedTuple):
     stats: BatchSearchStats
 
 
+# ------------------------------------------------------ signature logging ----
+
+class SignatureBudgetExceeded(RuntimeError):
+    """The engine would compile more distinct signatures than allowed."""
+
+
+class SignatureLog:
+    """Registry of jit call signatures the engine has issued.
+
+    A *signature* is the (call site, shape/static args) tuple that determines
+    whether XLA reuses a compilation: e.g. ``("search", B, C)`` for the burst
+    loop or ``("div_astar", group, width, k)`` for verification. ``note``
+    raises ``SignatureBudgetExceeded`` once more than ``limit`` distinct
+    signatures exist — the compile-budget backstop. After ``freeze()``
+    (scheduler prewarm done), first-seen signatures are additionally recorded
+    in ``unplanned`` so tests can assert the ladder was fully pre-warmed.
+    """
+
+    def __init__(self, limit: int | None = 1024):
+        self.limit = limit
+        self.counts: dict[tuple, int] = {}
+        self.frozen = False
+        self.unplanned: list[tuple] = []
+
+    def note(self, kind: str, *shape) -> None:
+        sig = (kind, *(int(s) for s in shape))
+        if sig not in self.counts:
+            if self.limit is not None and len(self.counts) >= self.limit:
+                raise SignatureBudgetExceeded(
+                    f"signature {sig} would exceed the compile budget of "
+                    f"{self.limit} distinct signatures")
+            self.counts[sig] = 0
+            if self.frozen:
+                self.unplanned.append(sig)
+        self.counts[sig] += 1
+
+    def freeze(self) -> None:
+        self.frozen = True
+
+    def __len__(self) -> int:
+        return len(self.counts)
+
+
+def jit_cache_sizes() -> dict[str, int]:
+    """Tracing-cache sizes of the engine's jitted device functions (test
+    hook: a serving pass that recompiles shows up as a growing entry)."""
+    fns = dict(search=_batched_search_loop, rebuild=_rebuild_lanes,
+               prefix=_mask_prefix, adjacency=_batched_adjacency,
+               div_astar=_batched_div_astar, theorem1=_batched_theorem1)
+    return {name: int(f._cache_size()) for name, f in fns.items()
+            if hasattr(f, "_cache_size")}
+
+
 # ------------------------------------------------------- device functions ----
-
-@functools.partial(jax.jit, static_argnames=("capacity",))
-def _batched_init(graph: FlatGraph, qs: jnp.ndarray, capacity: int):
-    return jax.vmap(lambda q: bs.init_state(graph, q, capacity))(qs)
-
-
-def _pad_queue(queue: qmod.Queue, pad: int) -> qmod.Queue:
-    """Extend a queue's last axis with empty-slot sentinels (id=-1,
-    score=-inf, stable=True) — the one place the sentinel convention for
-    padding lives in this module."""
-    if pad == 0:
-        return queue
-    spec = [(0, 0)] * (queue.ids.ndim - 1) + [(0, pad)]
-    return qmod.Queue(
-        ids=jnp.pad(queue.ids, spec, constant_values=-1),
-        scores=jnp.pad(queue.scores, spec, constant_values=-np.inf),
-        stable=jnp.pad(queue.stable, spec, constant_values=True),
-    )
-
 
 def _merge_insert(queue: qmod.Queue, new_ids: jnp.ndarray,
                   new_scores: jnp.ndarray, new_mask: jnp.ndarray) -> qmod.Queue:
@@ -239,23 +307,32 @@ def _rebuild_lanes(graph: FlatGraph, qs, state, new_capacity: int):
     rule is exactly the queue's (score desc, id asc) order, so the result
     is bit-identical at a fraction of the cost. Bit-parity of the rescoring
     itself holds because ``query_sim`` uses a batch-invariant reduce (see
-    ``similarity.query_sim``)."""
+    ``similarity.query_sim``).
+
+    The caller slices the input queue to ``new_capacity`` (entries past a
+    lane's logical capacity are padding sentinels), so the compile signature
+    depends only on (group size, target capacity), not on the batch's
+    physical capacity.
+    """
     n = graph.size
     k0 = min(new_capacity, n)
     pad = new_capacity - k0
 
     def one(q, st):
         vis_scores = kops.batch_similarity(q, graph.vectors, graph.metric)
-        in_queue = jnp.zeros((n,), jnp.bool_).at[
-            jnp.maximum(st.queue.ids, 0)].set(st.queue.ids >= 0)
-        frontier_unstable = jnp.zeros((n,), jnp.bool_).at[
-            jnp.maximum(st.queue.ids, 0)].set(
-            (st.queue.ids >= 0) & ~st.queue.stable)
+        safe = jnp.maximum(st.queue.ids, 0)
+        # membership via add-scatter: duplicate target slots (several empty
+        # sentinels all map to node 0) accumulate instead of racing, which
+        # .set would leave order-undefined
+        in_queue = jnp.zeros((n,), jnp.int32).at[safe].add(
+            (st.queue.ids >= 0).astype(jnp.int32)) > 0
+        frontier_unstable = jnp.zeros((n,), jnp.int32).at[safe].add(
+            ((st.queue.ids >= 0) & ~st.queue.stable).astype(jnp.int32)) > 0
         member = st.visited | in_queue
         scores = jnp.where(member, vis_scores, qmod.NEG_INF)
         top_scores, sel = jax.lax.top_k(scores, k0)
         valid = top_scores > qmod.NEG_INF  # similarities are always finite
-        queue = _pad_queue(qmod.Queue(
+        queue = lane_state.pad_queue(qmod.Queue(
             ids=jnp.where(valid, sel.astype(jnp.int32), -1),
             scores=jnp.where(valid, top_scores, qmod.NEG_INF),
             stable=jnp.where(valid, ~frontier_unstable[sel], True)), pad)
@@ -269,10 +346,13 @@ _batched_stable_count = jax.jit(jax.vmap(qmod.stable_count))
 
 @functools.partial(jax.jit, static_argnames=("metric",))
 def _batched_adjacency(vectors, ids, eps, metric: str):
+    """Per-lane G^eps adjacency; ``eps`` is a per-lane f32 vector so lanes
+    with different diversification levels share one compilation."""
     vecs = vectors[jnp.maximum(ids, 0)]
     valid = ids >= 0
     return jax.vmap(
-        lambda v, m: kops.pairwise_adjacency(v, eps, metric, m))(vecs, valid)
+        lambda v, m, e: kops.pairwise_adjacency(v, e, metric, m)
+    )(vecs, valid, eps)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "max_expansions"))
@@ -291,11 +371,16 @@ def _batched_div_astar(scores, adj, k: int, max_expansions: int):
     return jax.lax.map(lambda args: one(*args), (scores, adj))
 
 
-@functools.partial(jax.jit, static_argnames=("width",))
-def _batched_prefix(queue_ids, queue_scores, Ks, width: int):
-    ids = queue_ids[:, :width]
-    scores = queue_scores[:, :width]
-    keep = jnp.arange(width)[None, :] < Ks[:, None]
+@functools.partial(jax.jit, static_argnames=("k",))
+def _batched_theorem1(adj, valid, k: int):
+    """Theorem-1 sufficient candidate count per lane (PDS degree schedule)."""
+    deg = jax.vmap(_degrees)(adj, valid)
+    return jax.vmap(lambda d: theorem1_K(d, k))(deg)
+
+
+@jax.jit
+def _mask_prefix(ids, scores, Ks):
+    keep = jnp.arange(ids.shape[-1])[None, :] < Ks[:, None]
     return (jnp.where(keep, ids, -1),
             jnp.where(keep, scores, -jnp.inf))
 
@@ -303,17 +388,20 @@ def _batched_prefix(queue_ids, queue_scores, Ks, width: int):
 # ----------------------------------------------------------------- driver ----
 
 class BatchProgressiveDriver:
-    """Owns a whole batch's progressive search state across pause/resume.
+    """Owns a whole batch's lane state across pause/resume (lower engine half).
 
     Mirrors ``progressive.ProgressiveDriver`` lane-for-lane: the same
     capacity policy, growth thresholds, and stop conditions are applied to
     every lane individually (as host-side numpy vectors), so each lane's
-    trajectory is identical to a solo driver on the same query.
+    trajectory is identical to a solo driver on the same query. State lives
+    in ``core.lane_state`` pytrees; ``recycle`` re-initializes one lane slot
+    for a new query without disturbing siblings.
     """
 
     def __init__(self, graph: FlatGraph, qs, ef: int, k: int,
                  capacity0: int | None = None,
-                 max_capacity: int | None = None):
+                 max_capacity: int | None = None,
+                 max_signatures: int | None = 1024):
         self.graph = graph
         self.qs = jnp.asarray(qs, jnp.float32)
         self.B = int(self.qs.shape[0])
@@ -324,27 +412,36 @@ class BatchProgressiveDriver:
             capacity0 = min(_next_pow2(max(2 * k * ef, 256)), _next_pow2(n))
         self.max_capacity = max_capacity or _next_pow2(n)
         self.caps = np.full(self.B, capacity0, np.int64)
-        self.state = _batched_init(graph, self.qs, capacity0)
+        self.signatures = SignatureLog(max_signatures)
+        self.signatures.note("init", self.B, capacity0)
+        self.state = lane_state.init_lanes(graph, self.qs, capacity0)
         self.stats = BatchSearchStats.zeros(self.B)
 
     # -- capacity management ------------------------------------------------
     @property
     def physical_capacity(self) -> int:
-        return int(self.state.queue.ids.shape[-1])
+        return lane_state.physical_capacity(self.state)
 
     def _ensure_physical(self, cap: int) -> None:
-        C = self.physical_capacity
-        if cap <= C:
-            return
-        queue = _pad_queue(self.state.queue, cap - C)
-        self.state = bs.SearchState(queue, self.state.visited, self.state.steps)
+        self.state = lane_state.pad_lanes(self.state, cap)
+
+    def recycle(self, lane: int, q, capacity0: int) -> None:
+        """Hand lane ``lane`` to a new query: fresh solo-equivalent state at
+        logical capacity ``capacity0``, stats zeroed, siblings untouched."""
+        self._ensure_physical(capacity0)
+        self.signatures.note("recycle", self.B, self.physical_capacity)
+        self.state = lane_state.recycle_lane(self.graph, self.state, lane, q)
+        self.qs = self.qs.at[lane].set(jnp.asarray(q, jnp.float32))
+        self.caps[lane] = capacity0
+        self.stats.reset_lane(lane)
 
     def _grow_lanes(self, req: np.ndarray, mask: np.ndarray) -> None:
         """Grow each masked lane to next_pow2(req) (clamped), per-bucket.
 
         Same policy as ``ProgressiveDriver._grow_to`` per lane; lanes landing
         on the same power-of-two bucket are rebuilt together in one vmapped
-        exact rebuild.
+        exact rebuild, with the bucket padded to a power-of-two lane count so
+        rebuild signatures stay logarithmic in batch size.
         """
         targets = np.array([min(_next_pow2(int(r)), self.max_capacity)
                             for r in req])
@@ -355,15 +452,20 @@ class BatchProgressiveDriver:
         C = self.physical_capacity
         for cap in sorted(set(int(c) for c in targets[grow])):
             idx = np.flatnonzero(grow & (targets == cap))
-            jidx = jnp.asarray(idx)
-            sub = jax.tree_util.tree_map(lambda a: a[jidx], self.state)
+            m = len(idx)
+            g = _next_pow2(m)
+            jidx = jnp.asarray(np.concatenate([idx, np.full(g - m, idx[0])]))
+            sub = lane_state.select_lanes(self.state, jidx)
+            sub = lane_state.slice_queue_capacity(sub, cap)
+            self.signatures.note("rebuild", g, cap)
             rebuilt = _rebuild_lanes(self.graph, self.qs[jidx], sub, cap)
-            q = _pad_queue(rebuilt.queue, C - cap)
+            q = lane_state.pad_queue(rebuilt.queue, C - cap)
+            ridx = jnp.asarray(idx)
             bq = self.state.queue
             self.state = bs.SearchState(
-                qmod.Queue(bq.ids.at[jidx].set(q.ids),
-                           bq.scores.at[jidx].set(q.scores),
-                           bq.stable.at[jidx].set(q.stable)),
+                qmod.Queue(bq.ids.at[ridx].set(q.ids[:m]),
+                           bq.scores.at[ridx].set(q.scores[:m]),
+                           bq.stable.at[ridx].set(q.stable[:m])),
                 self.state.visited, self.state.steps)
             self.caps[idx] = cap
             self.stats.growths[idx] += 1
@@ -378,6 +480,8 @@ class BatchProgressiveDriver:
         n = self.graph.size
         if active is None:
             active = np.ones(self.B, bool)
+        if not active.any():
+            return self.stable_prefix_len()
         targets = np.minimum(np.asarray(targets, np.int64), n)
         need = active & (targets + 8 > self.caps)
         self._grow_lanes((targets * 1.5).astype(np.int64) + 64, need)
@@ -385,6 +489,7 @@ class BatchProgressiveDriver:
             min_values = np.full(self.B, -np.inf, np.float32)
         sl = np.where(active, np.minimum(targets, self.caps), 0)
         ms = 4 * self.caps + 64
+        self.signatures.note("search", self.B, self.physical_capacity)
         self.state = _batched_search_loop(
             self.graph.vectors, self.graph.neighbors, self.qs, self.state,
             jnp.asarray(self.caps, jnp.int32), jnp.asarray(sl, jnp.int32),
@@ -419,30 +524,467 @@ class BatchProgressiveDriver:
             np.maximum(64, np.array([_next_pow2(int(K)) for K in Ks])),
             self.caps)
 
-    def prefix_groups(self, Ks: np.ndarray, active: np.ndarray):
-        """Yield (lane_indices, ids, scores) per power-of-two shape bucket.
+    def prefix_groups(self, Ks: np.ndarray, active: np.ndarray, ks=None):
+        """Yield (lane_indices, ids, scores) per (width bucket[, k]) group.
 
         The diversify/verify stages consume prefixes through this: lanes
-        whose prefix lands in the same bucket are processed together at
-        exactly that width. Width changes div-A*'s cursor-step accounting
-        (padding slots consume budget), so running each lane at its own
-        per-query bucket width — not the batch max — is what keeps div-A*
-        results identical to the per-query driver."""
+        whose prefix lands in the same power-of-two bucket (and, when ``ks``
+        is given, share the same ``k``) are processed together at exactly
+        that width. Width changes div-A*'s cursor-step accounting (padding
+        slots consume budget), so running each lane at its own per-query
+        bucket width — not the batch max — is what keeps div-A* results
+        identical to the per-query driver. Groups are padded to a
+        power-of-two lane count with empty-sentinel rows (id=-1, -inf) so
+        compile signatures stay bounded; only the first ``len(lane_indices)``
+        rows are real.
+        """
         Ks = np.minimum(np.asarray(Ks, np.int64), self.caps)
         buckets = self._buckets(Ks)
-        groups: dict[int, list[int]] = {}
+        groups: dict[tuple, list[int]] = {}
         for i in np.flatnonzero(active):
-            groups.setdefault(int(buckets[i]), []).append(i)
-        for width, idx in sorted(groups.items()):
+            key = (int(buckets[i]), -1 if ks is None else int(ks[i]))
+            groups.setdefault(key, []).append(i)
+        for (width, _k), idx in sorted(groups.items()):
             idx = np.asarray(idx)
-            jidx = jnp.asarray(idx)
-            ids, scores = _batched_prefix(
-                self.state.queue.ids[jidx], self.state.queue.scores[jidx],
-                jnp.asarray(Ks[idx], jnp.int32), width)
+            m = len(idx)
+            g = _next_pow2(m)
+            jidx = jnp.asarray(np.concatenate([idx, np.full(g - m, idx[0])]))
+            Ks_pad = np.zeros(g, np.int64)
+            Ks_pad[:m] = Ks[idx]     # pad rows keep K=0 -> all-sentinel
+            self.signatures.note("prefix", g, width)
+            ids, scores = _mask_prefix(
+                self.state.queue.ids[jidx, :width],
+                self.state.queue.scores[jidx, :width],
+                jnp.asarray(Ks_pad, jnp.int32))
             yield idx, ids, scores
 
 
-# ---------------------------------------------------------------- batch PGS --
+# ----------------------------------------------------------------- engine ----
+
+LANE_FREE, LANE_PGS, LANE_PSS, LANE_PDS, LANE_PDS_FIN, LANE_DONE = range(6)
+
+_METHOD_STATUS = {"pss": LANE_PGS, "pgs": LANE_PGS, "pds": LANE_PDS}
+
+
+class ProgressiveEngine:
+    """Per-lane progressive state machine over a ``BatchProgressiveDriver``.
+
+    Each lane independently runs one of the paper's methods with its own
+    ``(k, eps, ef)``:
+
+    * ``pgs``  — Alg. 2 rounds: stabilize K*ef, greedy-diversify, grow K.
+    * ``pss``  — Alg. 4: the PGS warm start, then div-A* + Theorem-2
+      certificate rounds with ProgressiveBeamSearch* resumption.
+    * ``pds``  — Alg. 3: Theorem-1 degree schedule rounds, then one
+      certified div-A*.
+
+    ``step()`` advances every occupied lane one round (search bursts batched
+    across lanes in one dispatch, diversify/verify batched per (width, k)
+    group) and returns the lanes that finished. Finished lanes can be
+    re-admitted with a **new query** via ``admit`` (lane recycling) — the
+    continuous-batching hook the serving scheduler drives. Per-lane results
+    are bit-identical to the per-query drivers regardless of admission
+    order, because every device op is lane-separable and batch-invariant.
+    """
+
+    def __init__(self, graph: FlatGraph, num_lanes: int | None = None, *,
+                 driver: BatchProgressiveDriver | None = None,
+                 max_k: int = 16, default_ef: int = 40,
+                 capacity0: int | None = None,
+                 max_capacity: int | None = None,
+                 max_iters: int = 64, max_expansions: int = 400_000,
+                 max_signatures: int | None = 1024):
+        self.graph = graph
+        if driver is None:
+            if num_lanes is None:
+                raise ValueError("need num_lanes or driver")
+            d = int(graph.vectors.shape[1])
+            base_cap = capacity0 or min(256, _next_pow2(graph.size))
+            driver = BatchProgressiveDriver(
+                graph, jnp.zeros((num_lanes, d), jnp.float32),
+                ef=default_ef, k=1, capacity0=base_cap,
+                max_capacity=max_capacity, max_signatures=max_signatures)
+        self.driver = driver
+        self.B = driver.B
+        self.max_k = max_k
+        self.default_ef = default_ef
+        self._capacity0 = capacity0
+        self.max_iters = max_iters
+        self.max_expansions = max_expansions
+        self.status = np.full(self.B, LANE_FREE, np.int8)
+        self.to_pss = np.zeros(self.B, bool)
+        self.ks = np.full(self.B, 1, np.int64)
+        self.epss = np.zeros(self.B, np.float64)
+        self.efs = np.full(self.B, default_ef, np.int64)
+        self.K = np.zeros(self.B, np.int64)
+        self.iters = np.zeros(self.B, np.int64)
+        self.maxK = np.full(self.B, graph.size, np.int64)
+        self.out_ids = np.full((self.B, max_k), -1, np.int32)
+        self.out_sc = np.zeros((self.B, max_k), np.float32)
+
+    # -- admission ----------------------------------------------------------
+    @property
+    def signatures(self) -> SignatureLog:
+        return self.driver.signatures
+
+    def free_lanes(self) -> np.ndarray:
+        return np.flatnonzero((self.status == LANE_FREE)
+                              | (self.status == LANE_DONE))
+
+    def active_count(self) -> int:
+        return int(((self.status != LANE_FREE)
+                    & (self.status != LANE_DONE)).sum())
+
+    def _set_lane(self, lane: int, k: int, eps: float, ef: int, method: str,
+                  max_K: int | None) -> None:
+        if method not in _METHOD_STATUS:
+            raise ValueError(f"unknown progressive method {method!r}")
+        if k > self.max_k:
+            raise ValueError(f"k={k} exceeds engine max_k={self.max_k}")
+        self.ks[lane] = k
+        self.epss[lane] = eps
+        self.efs[lane] = ef
+        self.K[lane] = k
+        self.iters[lane] = 0
+        self.maxK[lane] = max_K or self.graph.size
+        self.out_ids[lane] = -1
+        self.out_sc[lane] = 0.0
+        self.to_pss[lane] = method == "pss"
+        self.status[lane] = _METHOD_STATUS[method]
+
+    def admit(self, lane: int, q, *, k: int, eps: float, ef: int | None = None,
+              method: str = "pss", max_K: int | None = None) -> None:
+        """Recycle lane ``lane`` for a new request (fresh solo-equivalent
+        state; bit-identical trajectory to a fresh per-query driver)."""
+        if self.status[lane] not in (LANE_FREE, LANE_DONE):
+            raise RuntimeError(f"lane {lane} is still occupied")
+        ef = int(ef or self.default_ef)
+        n = self.graph.size
+        cap0 = self._capacity0 or min(_next_pow2(max(2 * k * ef, 256)),
+                                      _next_pow2(n))
+        self.driver.recycle(lane, q, cap0)
+        self._set_lane(lane, k, eps, ef, method, max_K)
+
+    def admit_in_place(self, lane: int, *, k: int, eps: float, ef: int,
+                       method: str = "pss", max_K: int | None = None) -> None:
+        """Admit a lane whose state the driver already initialized (lockstep
+        wrappers: the driver was constructed over the real query batch)."""
+        self._set_lane(lane, k, eps, ef, method, max_K)
+
+    # -- results ------------------------------------------------------------
+    def result(self, lane: int) -> DiverseResult:
+        """Solo-driver-compatible result for a finished lane."""
+        k = int(self.ks[lane])
+        ids = self.out_ids[lane, :k].copy()
+        sc = self.out_sc[lane, :k].copy()
+        return DiverseResult(ids.astype(np.int32), sc.astype(np.float32),
+                             float(sc.sum()), self.driver.stats.lane_view(lane))
+
+    def gather(self, k: int) -> BatchDiverseResult:
+        """All-lane result at a uniform ``k`` (lockstep wrappers)."""
+        ids = self.out_ids[:, :k].copy()
+        sc = self.out_sc[:, :k].copy()
+        return BatchDiverseResult(ids, sc, sc.sum(axis=1), self.driver.stats)
+
+    # -- the state machine --------------------------------------------------
+    def step(self) -> list[int]:
+        """Advance every occupied lane one progressive round.
+
+        Stage order (each stage batched over the lanes in that phase, masks
+        recomputed between stages so same-step transitions flow downward —
+        matching the solo drivers, which run e.g. the first PSS verification
+        immediately after the PGS warm start with no search in between):
+
+        1. search burst — PGS/PDS lanes stabilize their first K*ef.
+        2. PGS round    — greedy diversify; grow K / warm-start PSS / finish.
+        3. PDS round    — Theorem-1 degree schedule; update K / go final.
+        4. PDS final    — one certified div-A*.
+        5. PSS round    — div-A* + Theorem-2 certificate; uncertified lanes
+           resume ProgressiveBeamSearch* below their minValue.
+
+        Returns the lane indices that finished during this step.
+        """
+        finished: list[int] = []
+        smask = (self.status == LANE_PGS) | (self.status == LANE_PDS)
+        stable = np.zeros(self.B, np.int64)
+        if smask.any():
+            targets = np.where(smask, self.K * self.efs, 0)
+            stable = self.driver.ensure_stable(targets, active=smask)
+        gmask = self.status == LANE_PGS
+        if gmask.any():
+            self._pgs_round(gmask, stable, finished)
+        pmask = self.status == LANE_PDS
+        if pmask.any():
+            self._pds_round(pmask, stable)
+        fmask = self.status == LANE_PDS_FIN
+        if fmask.any():
+            self._pds_final(fmask, finished)
+        vmask = self.status == LANE_PSS
+        if vmask.any():
+            self._pss_round(vmask, finished)
+        return finished
+
+    def run_to_completion(self) -> None:
+        while self.active_count():
+            self.step()
+
+    def _group_eps(self, idx: np.ndarray, g: int) -> jnp.ndarray:
+        e = np.zeros(g, np.float32)
+        e[:len(idx)] = self.epss[idx]
+        return jnp.asarray(e)
+
+    def _finish(self, lane: int, finished: list[int]) -> None:
+        self.driver.stats.K_final[lane] = self.K[lane]
+        self.status[lane] = LANE_DONE
+        finished.append(int(lane))
+
+    # Alg. 2 round: greedy diversification over the stabilized prefix.
+    def _pgs_round(self, gmask, stable, finished) -> None:
+        d, n = self.driver, self.graph.size
+        exhausted = gmask & (stable < np.minimum(self.K * self.efs, n))
+        self.K = np.where(exhausted, np.maximum(self.K, stable), self.K)
+        count = np.zeros(self.B, np.int64)
+        for idx, ids, scores in d.prefix_groups(self.K, gmask, ks=self.ks):
+            k_g = int(self.ks[idx[0]])
+            g, width = ids.shape
+            d.signatures.note("adjacency", g, width)
+            adj = _batched_adjacency(self.graph.vectors, ids,
+                                     self._group_eps(idx, g),
+                                     self.graph.metric)
+            d.signatures.note("greedy", g, width, k_g)
+            sel, cnt = kops.greedy_diversify_batch(scores, adj, k_g,
+                                                   valid=ids >= 0)
+            cnt_np, sel_np = np.asarray(cnt), np.asarray(sel)
+            ids_np, sc_np = np.asarray(ids), np.asarray(scores)
+            for gi, lane in enumerate(idx):
+                count[lane] = cnt_np[gi]
+                s = sel_np[gi]
+                self.out_ids[lane, :k_g] = np.where(
+                    s >= 0, ids_np[gi][np.maximum(s, 0)], -1)
+                self.out_sc[lane, :k_g] = np.where(
+                    s >= 0, sc_np[gi][np.maximum(s, 0)], 0.0)
+        d.stats.div_calls[gmask] += 1
+        success = gmask & (count >= self.ks)
+        ex_term = gmask & ~success & exhausted
+        d.stats.exhausted |= ex_term
+        cont = gmask & ~success & ~ex_term
+        self.K = np.where(cont, self.K + self.ks, self.K)
+        self.iters[cont] += 1
+        iter_term = cont & (self.iters >= self.max_iters)
+        for lane in np.flatnonzero(success | ex_term | iter_term):
+            if self.to_pss[lane]:
+                d.stats.K_final[lane] = self.K[lane]
+                self.status[lane] = LANE_PSS
+                self.iters[lane] = 0
+            else:
+                self._finish(lane, finished)
+
+    # Alg. 3 round: Theorem-1 degree schedule for the next K.
+    def _pds_round(self, pmask, stable) -> None:
+        d, n = self.driver, self.graph.size
+        K_new = np.zeros(self.B, np.int64)
+        for idx, ids, scores in d.prefix_groups(self.K, pmask, ks=self.ks):
+            k_g = int(self.ks[idx[0]])
+            g, width = ids.shape
+            d.signatures.note("adjacency", g, width)
+            adj = _batched_adjacency(self.graph.vectors, ids,
+                                     self._group_eps(idx, g),
+                                     self.graph.metric)
+            d.signatures.note("theorem1", g, width, k_g)
+            kn = np.asarray(_batched_theorem1(adj, ids >= 0, k_g))
+            K_new[idx] = kn[:len(idx)]
+        K_new = np.minimum(K_new, n)
+        ex = pmask & (K_new > self.maxK)
+        d.stats.exhausted |= ex
+        fin_stable = pmask & ~ex & (stable >= np.minimum(K_new * self.efs, n))
+        cont = pmask & ~ex & ~fin_stable
+        self.K = np.where(fin_stable | cont, K_new, self.K)
+        # (the per-query driver's third break — stable < min(K*ef, n) while
+        # stable >= n — is vacuous and intentionally not replicated)
+        self.iters[cont] += 1
+        iter_term = cont & (self.iters >= self.max_iters)
+        self.status[ex | fin_stable | iter_term] = LANE_PDS_FIN
+
+    # Alg. 3 final: one certified div-A* over the scheduled prefix.
+    def _pds_final(self, fmask, finished) -> None:
+        d = self.driver
+        for idx, ids, scores in d.prefix_groups(self.K, fmask, ks=self.ks):
+            k_g = int(self.ks[idx[0]])
+            g, width = ids.shape
+            d.signatures.note("adjacency", g, width)
+            adj = _batched_adjacency(self.graph.vectors, ids,
+                                     self._group_eps(idx, g),
+                                     self.graph.metric)
+            d.signatures.note("div_astar", g, width, k_g)
+            masked = jnp.where(ids >= 0, scores, -jnp.inf)
+            res, _ = _batched_div_astar(masked, adj, k_g, self.max_expansions)
+            sets_np = np.asarray(res.best_sets)
+            complete_np = np.asarray(res.complete)
+            ids_np, sc_np = np.asarray(ids), np.asarray(scores)
+            for gi, lane in enumerate(idx):
+                s = sets_np[gi, k_g - 1]
+                self.out_ids[lane, :k_g] = np.where(
+                    s >= 0, ids_np[gi][np.maximum(s, 0)], -1)
+                self.out_sc[lane, :k_g] = np.where(
+                    s >= 0, sc_np[gi][np.maximum(s, 0)], 0.0)
+                d.stats.certified[lane] = (bool(complete_np[gi])
+                                           and not bool(d.stats.exhausted[lane]))
+        d.stats.div_calls[fmask] += 1
+        for lane in np.flatnonzero(fmask):
+            self._finish(lane, finished)
+
+    # Alg. 4 round: div-A* + Theorem-2 certificate, then resumption.
+    def _pss_round(self, vmask, finished) -> None:
+        d, n = self.driver, self.graph.size
+        over = vmask & (self.iters >= self.max_iters)
+        for lane in np.flatnonzero(over):
+            self._finish(lane, finished)
+        mask = vmask & ~over
+        if not mask.any():
+            return
+        self.iters[mask] += 1
+        self.K = np.where(mask, np.maximum(self.ks, np.minimum(self.K, n)),
+                          self.K)
+        min_values = np.full(self.B, -np.inf)
+        s_K = np.full(self.B, -np.inf)
+        complete = np.zeros(self.B, bool)
+        for idx, ids, scores in d.prefix_groups(self.K, mask, ks=self.ks):
+            k_g = int(self.ks[idx[0]])
+            g, width = ids.shape
+            d.signatures.note("adjacency", g, width)
+            adj = _batched_adjacency(self.graph.vectors, ids,
+                                     self._group_eps(idx, g),
+                                     self.graph.metric)
+            d.signatures.note("div_astar", g, width, k_g)
+            masked = jnp.where(ids >= 0, scores, -jnp.inf)
+            res, mv = _batched_div_astar(masked, adj, k_g, self.max_expansions)
+            best_scores_np = np.asarray(res.best_scores)
+            sets_np = np.asarray(res.best_sets)
+            complete_np = np.asarray(res.complete)
+            mv_np = np.asarray(mv, np.float64)
+            ids_np, sc_np = np.asarray(ids), np.asarray(scores)
+            for gi, lane in enumerate(idx):
+                complete[lane] = complete_np[gi]
+                min_values[lane] = mv_np[gi]
+                if np.isfinite(best_scores_np[gi, k_g - 1]):
+                    s = sets_np[gi, k_g - 1]
+                    self.out_ids[lane, :k_g] = np.where(
+                        s >= 0, ids_np[gi][np.maximum(s, 0)], -1)
+                    self.out_sc[lane, :k_g] = np.where(
+                        s >= 0, sc_np[gi][np.maximum(s, 0)], 0.0)
+                s_K[lane] = (sc_np[gi, self.K[lane] - 1]
+                             if self.K[lane] <= width else -np.inf)
+        d.stats.div_calls[mask] += 1
+        certified = mask & (min_values > s_K)
+        d.stats.certified |= certified & complete
+        stop = mask & ~certified & (d.stats.exhausted | (self.K >= n))
+        for lane in np.flatnonzero(certified | stop):
+            self._finish(lane, finished)
+        rem = mask & ~certified & ~stop
+        if not rem.any():
+            return
+        stable_before = d.stable_prefix_len()
+        stable = d.expand_until_below(np.asarray(min_values, np.float32), rem)
+        no_prog = rem & (stable <= stable_before)
+        d.stats.exhausted |= no_prog
+        hard = no_prog & ((stable >= n) | (d.caps >= d.max_capacity))
+        self.K = np.where(rem & hard, np.minimum(stable, n), self.K)
+        self.K = np.where(rem & ~hard,
+                          np.maximum(self.ks, stable // self.efs), self.K)
+
+    # -- prewarm ------------------------------------------------------------
+    def prewarm(self, *, max_capacity: int | None = None,
+                ks: tuple = (), widths: tuple = ()) -> list[tuple]:
+        """Compile the capacity ladder ahead of serving.
+
+        Walks the power-of-two physical capacities from the current one up to
+        ``max_capacity`` (default: the driver's max) and compiles the search
+        burst, lane recycle, and every power-of-two growth-bucket rebuild at
+        each rung, using throwaway states (the live lane state is untouched
+        and the physical capacity is NOT grown — growth stays on-demand; this
+        only fills XLA's compile cache so mid-serving growth never pays a
+        trace). Optionally pre-compiles the diversify/verify stages for the
+        given ``ks`` x ``widths`` grids. Returns the signatures warmed.
+        """
+        d = self.driver
+        top = min(max_capacity or d.max_capacity, d.max_capacity)
+        dim = int(self.graph.vectors.shape[1])
+        qs0 = jnp.zeros((self.B, dim), jnp.float32)
+        caps_ladder = []
+        c = d.physical_capacity
+        while True:
+            caps_ladder.append(c)
+            if c >= top:
+                break
+            c *= 2
+        group_sizes = [1 << i for i in range(_next_pow2(self.B).bit_length())
+                       if (1 << i) <= _next_pow2(self.B)]
+        warmed: list[tuple] = []
+
+        def note(kind, *shape):
+            d.signatures.note(kind, *shape)
+            warmed.append((kind, *shape))
+
+        zeros_b = jnp.zeros(self.B, jnp.int32)
+        for cap in caps_ladder:
+            state = lane_state.init_lanes(self.graph, qs0, cap)
+            note("init", self.B, cap)
+            # zero step budget: compiles the burst, executes nothing
+            _batched_search_loop(
+                self.graph.vectors, self.graph.neighbors, qs0, state,
+                jnp.full(self.B, cap, jnp.int32), zeros_b,
+                jnp.zeros(self.B, jnp.float32), zeros_b, self.graph.metric
+            ).queue.ids.block_until_ready()
+            note("search", self.B, cap)
+            lane_state.recycle_lane(self.graph, state, 0,
+                                    np.zeros(dim, np.float32))
+            note("recycle", self.B, cap)
+            for g in group_sizes:
+                sub = lane_state.select_lanes(state,
+                                              jnp.zeros(g, jnp.int32))
+                sub = lane_state.slice_queue_capacity(sub, cap)
+                _rebuild_lanes(self.graph, jnp.zeros((g, dim), jnp.float32),
+                               sub, cap)
+                note("rebuild", g, cap)
+        for k in ks:
+            for width in widths:
+                for g in group_sizes:
+                    ids = jnp.full((g, width), -1, jnp.int32)
+                    sc = jnp.full((g, width), -jnp.inf, jnp.float32)
+                    note("prefix", g, width)
+                    _mask_prefix(ids, sc, jnp.zeros(g, jnp.int32))
+                    note("adjacency", g, width)
+                    adj = _batched_adjacency(self.graph.vectors, ids,
+                                             jnp.zeros(g, jnp.float32),
+                                             self.graph.metric)
+                    note("greedy", g, width, k)
+                    kops.greedy_diversify_batch(sc, adj, k, valid=ids >= 0)
+                    note("theorem1", g, width, k)
+                    _batched_theorem1(adj, ids >= 0, k)
+                    note("div_astar", g, width, k)
+                    _batched_div_astar(sc, adj, k, self.max_expansions)
+        return warmed
+
+
+# ------------------------------------------------------- lockstep wrappers --
+
+def _run_lockstep(graph: FlatGraph, qs, k: int, eps: float, ef: int,
+                  method: str, max_iters: int, max_expansions: int,
+                  driver: BatchProgressiveDriver | None = None,
+                  max_K: int | None = None
+                  ) -> tuple[BatchDiverseResult, ProgressiveEngine]:
+    qs = jnp.asarray(qs, jnp.float32)
+    if driver is None:
+        driver = BatchProgressiveDriver(graph, qs, ef, k)
+    engine = ProgressiveEngine(graph, driver=driver, max_k=k, default_ef=ef,
+                               max_iters=max_iters,
+                               max_expansions=max_expansions)
+    for lane in range(driver.B):
+        engine.admit_in_place(lane, k=k, eps=eps, ef=ef, method=method,
+                              max_K=max_K)
+    engine.run_to_completion()
+    return engine.gather(k), engine
+
 
 def batch_pgs(graph: FlatGraph, qs, k: int, eps: float, ef: int = 40,
               driver: BatchProgressiveDriver | None = None,
@@ -450,44 +992,20 @@ def batch_pgs(graph: FlatGraph, qs, k: int, eps: float, ef: int = 40,
               ) -> tuple[BatchDiverseResult, BatchProgressiveDriver, np.ndarray]:
     """Batched Alg. 2: returns (result, driver, K_final) — batch_pss reuses
     the driver and per-lane K exactly like the per-query pgs/pss pair."""
-    if driver is None:
-        driver = BatchProgressiveDriver(graph, qs, ef, k)
-    B, n = driver.B, graph.size
-    K = np.full(B, k, np.int64)
-    active = np.ones(B, bool)
-    out_ids = np.full((B, k), -1, np.int32)
-    out_sc = np.zeros((B, k), np.float32)
-    for _ in range(max_iters):
-        if not active.any():
-            break
-        stable = driver.ensure_stable(K * ef, active=active)
-        exhausted = stable < np.minimum(K * ef, n)
-        K = np.where(active & exhausted, np.maximum(K, stable), K)
-        count = np.zeros(B, np.int64)
-        for idx, ids, scores in driver.prefix_groups(K, active):
-            adj = _batched_adjacency(graph.vectors, ids, eps, graph.metric)
-            sel, cnt = kops.greedy_diversify_batch(scores, adj, k,
-                                                   valid=ids >= 0)
-            count[idx] = np.asarray(cnt)
-            sel_np = np.asarray(sel)
-            ids_np = np.asarray(ids)
-            sc_np = np.asarray(scores)
-            for g, i in enumerate(idx):
-                s = sel_np[g]
-                out_ids[i] = np.where(s >= 0, ids_np[g][np.maximum(s, 0)], -1)
-                out_sc[i] = np.where(s >= 0, sc_np[g][np.maximum(s, 0)], 0.0)
-        driver.stats.div_calls[active] += 1
-        done = active & ((count >= k) | exhausted)
-        driver.stats.exhausted |= active & exhausted & (count < k)
-        K = np.where(active & ~done, K + k, K)
-        active = active & ~done
-    driver.stats.K_final = K.copy()
-    res = BatchDiverseResult(out_ids, out_sc, out_sc.sum(axis=1),
-                             driver.stats)
-    return res, driver, K
+    res, engine = _run_lockstep(graph, qs, k, eps, ef, "pgs", max_iters,
+                                400_000, driver=driver)
+    return res, engine.driver, engine.K.copy()
 
 
-# ---------------------------------------------------------------- batch PSS --
+def batch_pds(graph: FlatGraph, qs, k: int, eps: float, ef: int = 40,
+              max_K: int | None = None, max_iters: int = 64,
+              max_expansions: int = 400_000) -> BatchDiverseResult:
+    """Batched Alg. 3 (Theorem-1 degree schedule): per-lane results identical
+    to the per-query ``pds`` driver."""
+    res, _ = _run_lockstep(graph, qs, k, eps, ef, "pds", max_iters,
+                           max_expansions, max_K=max_K)
+    return res
+
 
 def _concat_results(parts: list[BatchDiverseResult]) -> BatchDiverseResult:
     stats = BatchSearchStats(*[
@@ -502,13 +1020,15 @@ def _concat_results(parts: list[BatchDiverseResult]) -> BatchDiverseResult:
 def batch_pss(graph: FlatGraph, qs, k: int, eps: float, ef: int = 40,
               max_iters: int = 64, max_expansions: int = 400_000,
               streams: int = 1) -> BatchDiverseResult:
-    """Batched Alg. 4 — the progressive serving engine's default path.
+    """Batched Alg. 4 — the lockstep engine entry point.
 
     Phase 1 runs batched PGS (warm start + a size-k diverse set exists among
     the candidates). Each round then builds every active lane's G^eps, runs
     batched div-A*, applies the Theorem-2 certificate per lane, and resumes
     ProgressiveBeamSearch* only for the uncertified lanes. Per-lane results
-    are identical to the per-query ``pss`` driver.
+    are identical to the per-query ``pss`` driver. (For continuous batching —
+    new queries admitted into lanes freed by certified ones — drive
+    ``ProgressiveEngine`` through ``serve.scheduler.LaneScheduler``.)
 
     ``streams > 1`` splits the batch into that many sub-batches driven from
     worker threads, overlapping host orchestration with device work (jax
@@ -524,58 +1044,9 @@ def batch_pss(graph: FlatGraph, qs, k: int, eps: float, ef: int = 40,
             futs = [ex.submit(batch_pss, graph, qs[jnp.asarray(c)], k, eps,
                               ef, max_iters, max_expansions) for c in parts]
             return _concat_results([f.result() for f in futs])
-    pgs_res, driver, K = batch_pgs(graph, qs, k, eps, ef)
-    B, n = driver.B, graph.size
-    best_ids = pgs_res.ids.copy()
-    best_sc = pgs_res.scores.copy()
-    active = np.ones(B, bool)
-    for _ in range(max_iters):
-        if not active.any():
-            break
-        K = np.maximum(k, np.minimum(K, n))
-        min_values = np.full(B, -np.inf)
-        s_K = np.full(B, -np.inf)
-        complete = np.zeros(B, bool)
-        for idx, ids, scores in driver.prefix_groups(K, active):
-            adj = _batched_adjacency(graph.vectors, ids, eps, graph.metric)
-            masked = jnp.where(ids >= 0, scores, -jnp.inf)
-            res, mv = _batched_div_astar(masked, adj, k, max_expansions)
-            best_scores_np = np.asarray(res.best_scores)
-            sets_np = np.asarray(res.best_sets)
-            complete[idx] = np.asarray(res.complete)
-            min_values[idx] = np.asarray(mv, np.float64)
-            ids_np = np.asarray(ids)
-            sc_np = np.asarray(scores)
-            width = ids_np.shape[1]
-            for g, i in enumerate(idx):
-                if np.isfinite(best_scores_np[g, k - 1]):
-                    s = sets_np[g, k - 1]
-                    best_ids[i] = np.where(
-                        s >= 0, ids_np[g][np.maximum(s, 0)], -1)
-                    best_sc[i] = np.where(
-                        s >= 0, sc_np[g][np.maximum(s, 0)], 0.0)
-                s_K[i] = sc_np[g, K[i] - 1] if K[i] <= width else -np.inf
-        driver.stats.div_calls[active] += 1
-        certified = active & (min_values > s_K)
-        driver.stats.certified |= certified & complete
-        active = active & ~certified
-        stop = active & (driver.stats.exhausted | (K >= n))
-        active = active & ~stop
-        if not active.any():
-            break
-        stable_before = driver.stable_prefix_len()
-        stable = driver.expand_until_below(
-            np.asarray(min_values, np.float32), active)
-        no_progress = active & (stable <= stable_before)
-        driver.stats.exhausted |= no_progress
-        hard_stop = no_progress & ((stable >= n)
-                                   | (driver.caps >= driver.max_capacity))
-        K = np.where(active & hard_stop, np.minimum(stable, n), K)
-        K = np.where(active & ~hard_stop,
-                     np.maximum(k, stable // driver.ef), K)
-    driver.stats.K_final = K.copy()
-    return BatchDiverseResult(best_ids, best_sc, best_sc.sum(axis=1),
-                              driver.stats)
+    res, _ = _run_lockstep(graph, qs, k, eps, ef, "pss", max_iters,
+                           max_expansions)
+    return res
 
 
 def batch_progressive_search(graph: FlatGraph, qs, k: int, eps: float,
@@ -584,6 +1055,8 @@ def batch_progressive_search(graph: FlatGraph, qs, k: int, eps: float,
     """One entry point for the batched progressive engine."""
     if method == "pss":
         return batch_pss(graph, qs, k, eps, ef, **kwargs)
+    if method == "pds":
+        return batch_pds(graph, qs, k, eps, ef, **kwargs)
     if method == "pgs":
         res, _, _ = batch_pgs(graph, qs, k, eps, ef, **kwargs)
         return res

@@ -127,12 +127,14 @@ def rebuild_for_growth(graph: FlatGraph, q: jnp.ndarray, state: SearchState,
     n = graph.size
     all_ids = jnp.arange(n, dtype=jnp.int32)
     vis_scores = kops.batch_similarity(q, graph.vectors, graph.metric)
-    # queue membership of every node (to keep 'unstable' flags of frontier)
-    in_queue = jnp.zeros((n,), jnp.bool_).at[jnp.maximum(state.queue.ids, 0)].set(
-        state.queue.ids >= 0)
-    frontier_unstable = jnp.zeros((n,), jnp.bool_).at[
-        jnp.maximum(state.queue.ids, 0)].set(
-        (state.queue.ids >= 0) & ~state.queue.stable)
+    # queue membership of every node (to keep 'unstable' flags of frontier);
+    # add-scatter because several empty sentinels all map to slot 0, and a
+    # .set scatter with duplicate indices has undefined winner order
+    safe = jnp.maximum(state.queue.ids, 0)
+    in_queue = jnp.zeros((n,), jnp.int32).at[safe].add(
+        (state.queue.ids >= 0).astype(jnp.int32)) > 0
+    frontier_unstable = jnp.zeros((n,), jnp.int32).at[safe].add(
+        ((state.queue.ids >= 0) & ~state.queue.stable).astype(jnp.int32)) > 0
     member = visited | in_queue
     ids = jnp.where(member, all_ids, -1)
     scores = jnp.where(member, vis_scores, qmod.NEG_INF)

@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
         --requests 4 --k 5 --eps 3.0
+
+Requests flow through the continuous-batching lane scheduler
+(``serve.scheduler.LaneScheduler``): per-request (k, eps), lane recycling on
+certification, pre-warmed compile ladder; per-request latency and fairness
+stats are printed after the run.
 """
 from __future__ import annotations
 
@@ -26,6 +31,11 @@ def main():
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--eps", type=float, default=3.0)
     ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--engine", default="scheduler",
+                    choices=["scheduler", "lockstep", "fixed_k"])
+    ap.add_argument("--prewarm", action="store_true",
+                    help="pre-compile the scheduler's capacity ladder")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -33,7 +43,9 @@ def main():
     graph = build_knn_graph(docs, metric="ip", M=8)
     cfg = get_config(args.arch).reduced()
     params = M.init_params(cfg, jax.random.key(0))
-    pipe = RagPipeline(cfg, params, graph, k=args.k, eps=args.eps)
+    pipe = RagPipeline(cfg, params, graph, k=args.k, eps=args.eps,
+                       engine=args.engine, num_lanes=args.lanes,
+                       prewarm=args.prewarm)
     qs = docs[rng.integers(0, args.corpus, args.requests)]
     t0 = time.time()
     tokens, ids, cert = pipe.generate(qs, np.ones((args.requests, 2),
@@ -43,6 +55,14 @@ def main():
     print(f"{args.requests} requests in {dt:.2f}s; "
           f"certified={cert.tolist()}")
     print("retrieved ids:\n", ids)
+    if args.engine == "scheduler":
+        stats = pipe.scheduler.latency_stats()
+        print("scheduler: "
+              f"p50={stats['p50_latency'] * 1e3:.1f}ms "
+              f"p99={stats['p99_latency'] * 1e3:.1f}ms "
+              f"fairness={stats['fairness']:.3f} "
+              f"throughput={stats['throughput']:.1f} req/s "
+              f"signatures={stats['signatures']}")
 
 
 if __name__ == "__main__":

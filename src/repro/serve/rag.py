@@ -7,12 +7,13 @@ the two halves of the framework together:
     pipeline = RagPipeline(cfg, params, graph, k=5, eps=0.8)
     texts = pipeline.generate(query_embeds, prompt_tokens, steps=32)
 
-Retrieval defaults to the batched progressive engine
-(``core.batch_progressive``): the whole request batch runs the paper's
-pause/inspect/resume loop in lockstep device bursts, each lane growing its
-own candidate set until its Theorem-2 certificate fires — no per-query
-repair loop needed. ``engine="fixed_k"`` keeps the previous hybrid (static-K
-batched div-A* + per-query PSS repair of uncertified lanes) for comparison.
+Retrieval defaults to the continuous-batching lane scheduler
+(``serve.scheduler.LaneScheduler``): requests are submitted with their own
+``(k, eps)``, lanes freed by Theorem-2-certified queries are recycled for
+queued requests, and each request's result is bit-identical to a fresh
+per-query PSS driver. ``engine="lockstep"`` runs the same engine with
+whole-batch admission (PR 1's regime); ``engine="fixed_k"`` keeps the older
+static-K hybrid (batched div-A* + per-query PSS repair) for comparison.
 """
 from __future__ import annotations
 
@@ -28,6 +29,7 @@ from repro.core.batch_progressive import batch_pss
 from repro.core.graph import FlatGraph
 from repro.core.pss import pss
 from repro.models import model as M
+from repro.serve.scheduler import LaneScheduler
 
 
 @dataclasses.dataclass
@@ -39,12 +41,46 @@ class RagPipeline:
     eps: float = 0.8
     K_budget: int = 64
     ef: int = 8
-    engine: str = "progressive"   # "progressive" | "fixed_k"
+    engine: str = "scheduler"   # "scheduler" | "lockstep" | "fixed_k"
+    num_lanes: int = 8
+    prewarm: bool = False
+    _scheduler: LaneScheduler | None = dataclasses.field(
+        default=None, repr=False)
 
-    def retrieve(self, query_embeds) -> tuple[np.ndarray, np.ndarray]:
-        """Diverse document ids per query + per-lane certificate flags."""
+    @property
+    def scheduler(self) -> LaneScheduler:
+        """The pipeline's lane scheduler (built lazily, reused across calls
+        so the engine's compile cache and lane state persist)."""
+        if self._scheduler is None:
+            self._scheduler = LaneScheduler(
+                self.graph, num_lanes=self.num_lanes,
+                max_k=max(self.k, 16), default_ef=self.ef,
+                prewarm=self.prewarm)
+        return self._scheduler
+
+    def retrieve(self, query_embeds, ks=None, epss=None
+                 ) -> tuple[np.ndarray, np.ndarray]:
+        """Diverse document ids per query + per-lane certificate flags.
+
+        ``ks``/``epss`` optionally override the pipeline defaults per
+        request (scheduler engine only) — the paper's query-owned
+        diversification level, end to end.
+        """
         qs = jnp.asarray(query_embeds, jnp.float32)
-        if self.engine == "progressive":
+        if self.engine == "scheduler":
+            results = self.scheduler.run(
+                np.asarray(qs), ks if ks is not None else self.k,
+                epss if epss is not None else self.eps, efs=self.ef)
+            k_max = int(np.max(np.broadcast_to(
+                np.asarray(ks if ks is not None else self.k),
+                (qs.shape[0],))))
+            ids = np.full((qs.shape[0], k_max), -1, np.int32)
+            cert = np.zeros(qs.shape[0], bool)
+            for i, r in enumerate(results):
+                ids[i, :r.ids.shape[0]] = r.ids
+                cert[i] = r.stats.certified
+            return ids, cert
+        if self.engine in ("lockstep", "progressive"):   # PR 1 name kept
             res = batch_pss(self.graph, qs, self.k, self.eps, ef=self.ef)
             return res.ids.copy(), res.stats.certified.copy()
         # legacy hybrid: static-K batched div-A* + per-query PSS repair

@@ -1,0 +1,264 @@
+"""Continuous-batching lane scheduler — the serving layer over the engine.
+
+Top layer of the lane-state / engine / scheduler split. The engine
+(``core.batch_progressive.ProgressiveEngine``) advances a fixed set of lanes
+one progressive round per ``step()``; this module decides *which request
+occupies which lane when*:
+
+* **Admission queue** — requests carry their own ``(k, eps, ef, method)``
+  (the paper's Definition 1: the query owns its diversification level; no
+  index rebuild). ``submit`` enqueues; a bounded queue gives backpressure
+  (``SchedulerSaturated``) so callers can shed or defer load.
+* **Continuous batching** — whenever a lane certifies (or exhausts), its
+  slot is recycled for the next queued request *between engine steps*,
+  while sibling lanes keep their in-flight state. Div-A* trip counts are
+  heavy-tailed by design, so under lockstep admission one hard query stalls
+  a whole batch; continuous admission keeps every lane busy and cuts p99
+  latency and raises throughput on skewed workloads
+  (``benchmarks/batch_bench.py --mode skewed`` measures both policies —
+  they share this scheduler, differing only in ``admission``).
+* **Compile-signature-aware startup** — the engine compiles per (lane
+  count, physical capacity) for bursts and per (group, width, k) for
+  diversify/verify; the scheduler pre-warms the power-of-two capacity
+  ladder at construction so mid-serving growth never pays an XLA trace,
+  and exposes the engine's ``SignatureLog`` for recompile auditing.
+* **Per-request stats** — wait (submit→admit), service (admit→done), and
+  total latency per request, with p50/p99 summaries and Jain's fairness
+  index over total latencies.
+
+Parity contract: a request's result is bit-identical to a fresh per-query
+driver (``pss``/``pgs``/``pds``) for that query on the CPU reference path —
+lane recycling starts from exactly ``beam_search.init_state`` and every
+engine op is lane-separable, so admission order cannot leak between
+requests. ``tests/test_scheduler.py`` enforces this.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.batch_progressive import ProgressiveEngine
+from repro.core.graph import FlatGraph
+from repro.core.pgs import DiverseResult
+
+
+class SchedulerSaturated(RuntimeError):
+    """Admission queue is full — shed load or pump the scheduler first."""
+
+
+@dataclasses.dataclass
+class Request:
+    """One diverse-search request with its own (k, eps) and timing trace."""
+    rid: int
+    q: np.ndarray
+    k: int
+    eps: float
+    ef: int
+    method: str = "pss"
+    max_K: int | None = None
+    t_submit: float = 0.0
+    t_admit: float | None = None
+    t_done: float | None = None
+    lane: int | None = None
+    result: DiverseResult | None = None
+
+    @property
+    def wait(self) -> float:
+        return (self.t_admit or 0.0) - self.t_submit
+
+    @property
+    def service(self) -> float:
+        return (self.t_done or 0.0) - (self.t_admit or 0.0)
+
+    @property
+    def latency(self) -> float:
+        return (self.t_done or 0.0) - self.t_submit
+
+
+def _pctl(xs: list[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
+
+
+def jain_fairness(latencies: list[float]) -> float:
+    """Jain's index over per-request latencies: 1.0 = perfectly even."""
+    x = np.asarray(latencies, np.float64)
+    if x.size == 0 or not np.any(x > 0):
+        return 1.0
+    return float((x.sum() ** 2) / (x.size * np.sum(x * x)))
+
+
+class LaneScheduler:
+    """Admission queue + lane recycling over a ``ProgressiveEngine``.
+
+    ``admission`` picks the batching policy:
+
+    * ``"continuous"`` (default) — refill any freed lane before every step;
+      a certified lane's slot goes to the next queued request immediately.
+    * ``"lockstep"`` — refill only when *every* lane is free: the classic
+      whole-batch regime (each wave waits for its straggler). Kept as the
+      controlled baseline for the skewed-workload benchmark; results are
+      identical either way, only latency/throughput differ.
+    """
+
+    def __init__(self, graph: FlatGraph, num_lanes: int = 8, *,
+                 max_k: int = 16, default_ef: int = 40,
+                 capacity0: int | None = None,
+                 max_capacity: int | None = None,
+                 max_pending: int | None = None,
+                 max_iters: int = 64, max_expansions: int = 400_000,
+                 max_signatures: int | None = 1024,
+                 admission: str = "continuous",
+                 prewarm: bool = True,
+                 prewarm_capacity: int | None = None,
+                 prewarm_ks: tuple = (), prewarm_widths: tuple = (),
+                 history: int = 4096,
+                 clock: Callable[[], float] = time.monotonic):
+        if admission not in ("continuous", "lockstep"):
+            raise ValueError(f"unknown admission policy {admission!r}")
+        self.engine = ProgressiveEngine(
+            graph, num_lanes, max_k=max_k, default_ef=default_ef,
+            capacity0=capacity0, max_capacity=max_capacity,
+            max_iters=max_iters, max_expansions=max_expansions,
+            max_signatures=max_signatures)
+        self.num_lanes = num_lanes
+        self.admission = admission
+        self.max_pending = (max_pending if max_pending is not None
+                            else 4 * num_lanes)
+        self.clock = clock
+        self.pending: collections.deque[Request] = collections.deque()
+        self.inflight: dict[int, Request] = {}
+        # bounded history: a long-running server must not grow without
+        # bound; stats percentiles cover the retained window, counters
+        # cover the lifetime
+        self.completed: collections.deque[Request] = collections.deque(
+            maxlen=history)
+        self.total_completed = 0
+        self._next_rid = 0
+        self.steps = 0
+        if prewarm:
+            self.engine.prewarm(max_capacity=prewarm_capacity,
+                                ks=prewarm_ks, widths=prewarm_widths)
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, q, k: int, eps: float, ef: int | None = None,
+               method: str = "pss", max_K: int | None = None) -> Request:
+        """Enqueue a request; raises ``SchedulerSaturated`` on backpressure
+        (``try_submit`` is the non-raising variant). Invalid parameters are
+        rejected here, not at admission — a bad request must never dequeue
+        and then abort serving mid-pump."""
+        if method not in ("pss", "pgs", "pds"):
+            raise ValueError(f"unknown progressive method {method!r}")
+        if not 1 <= k <= self.engine.max_k:
+            raise ValueError(
+                f"k={k} outside [1, {self.engine.max_k}] (engine max_k)")
+        if len(self.pending) >= self.max_pending:
+            raise SchedulerSaturated(
+                f"{len(self.pending)} pending >= max_pending="
+                f"{self.max_pending}; pump() or shed load")
+        req = Request(rid=self._next_rid, q=np.asarray(q, np.float32),
+                      k=k, eps=eps, ef=int(ef or self.engine.default_ef),
+                      method=method, max_K=max_K, t_submit=self.clock())
+        self._next_rid += 1
+        self.pending.append(req)
+        return req
+
+    def try_submit(self, q, k: int, eps: float, **kw) -> Request | None:
+        try:
+            return self.submit(q, k, eps, **kw)
+        except SchedulerSaturated:
+            return None
+
+    def _refill(self) -> None:
+        if self.admission == "lockstep" and self.inflight:
+            return  # whole-batch regime: wait for the wave's straggler
+        for lane in self.engine.free_lanes():
+            if not self.pending:
+                break
+            req = self.pending.popleft()
+            self.engine.admit(int(lane), req.q, k=req.k, eps=req.eps,
+                              ef=req.ef, method=req.method, max_K=req.max_K)
+            req.t_admit = self.clock()
+            req.lane = int(lane)
+            self.inflight[int(lane)] = req
+
+    # -- serving loop -------------------------------------------------------
+    def pump(self) -> list[Request]:
+        """Refill freed lanes and advance the engine one step; returns the
+        requests that completed during this pump."""
+        self._refill()
+        done: list[Request] = []
+        if self.engine.active_count():
+            self.steps += 1
+            for lane in self.engine.step():
+                req = self.inflight.pop(lane)
+                req.result = self.engine.result(lane)
+                req.t_done = self.clock()
+                self.completed.append(req)
+                self.total_completed += 1
+                done.append(req)
+        return done
+
+    def drain(self) -> list[Request]:
+        """Pump until the queue and all lanes are empty."""
+        out: list[Request] = []
+        while self.pending or self.inflight:
+            out.extend(self.pump())
+            self._refill()
+        return out
+
+    def run(self, qs, ks, epss, efs=None, method: str = "pss"
+            ) -> list[DiverseResult]:
+        """Serve a closed batch of requests; results in submission order.
+
+        Per-request parameters may be scalars or per-request sequences.
+        Oversubmission is handled by pumping whenever the queue saturates.
+        """
+        qs = np.asarray(qs, np.float32)
+        B = qs.shape[0]
+        ks = np.broadcast_to(np.asarray(ks), (B,))
+        epss = np.broadcast_to(np.asarray(epss, np.float64), (B,))
+        efs = np.broadcast_to(
+            np.asarray(efs if efs is not None else self.engine.default_ef),
+            (B,))
+        reqs: list[Request] = []
+        for i in range(B):
+            while True:
+                r = self.try_submit(qs[i], int(ks[i]), float(epss[i]),
+                                    ef=int(efs[i]), method=method)
+                if r is not None:
+                    reqs.append(r)
+                    break
+                self.pump()
+        self.drain()
+        return [r.result for r in reqs]
+
+    # -- reporting ----------------------------------------------------------
+    def latency_stats(self) -> dict:
+        """p50/p99 wait/service/total latency, Jain fairness, throughput
+        (percentiles/throughput over the retained ``history`` window;
+        ``completed`` counts the scheduler's lifetime)."""
+        reqs = list(self.completed)
+        lats = [r.latency for r in reqs]
+        waits = [r.wait for r in reqs]
+        svcs = [r.service for r in reqs]
+        span = (max(r.t_done for r in reqs) - min(r.t_submit for r in reqs)
+                if reqs else 0.0)
+        return dict(
+            completed=self.total_completed,
+            pending=len(self.pending),
+            inflight=len(self.inflight),
+            steps=self.steps,
+            p50_latency=_pctl(lats, 50), p99_latency=_pctl(lats, 99),
+            p50_wait=_pctl(waits, 50), p99_wait=_pctl(waits, 99),
+            p50_service=_pctl(svcs, 50), p99_service=_pctl(svcs, 99),
+            fairness=jain_fairness(lats),
+            throughput=len(reqs) / span if span > 0 else 0.0,
+            certified_frac=(float(np.mean([r.result.stats.certified
+                                           for r in reqs])) if reqs else 0.0),
+            signatures=len(self.engine.signatures),
+            unplanned_signatures=len(self.engine.signatures.unplanned),
+        )

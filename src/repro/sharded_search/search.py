@@ -25,6 +25,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import beam_search as bs
 from repro.core import div_astar as da
+from repro.core.progressive import _next_pow2
 from repro.core.graph import make_flat_graph
 from repro.core.theorems import theorem2_min_value
 from repro.kernels import ops as kops
@@ -193,22 +194,42 @@ def sharded_progressive_diverse(index: ShardedIndex, all_vectors: jnp.ndarray,
 
     The fixed-budget ``sharded_diverse_search`` can return uncertified lanes
     (Theorem-2 check fails: the optimal diverse set may extend past the K
-    merged candidates). This entry point wraps it in the progressive
-    pause/inspect/resume structure: start from a small K, inspect the
-    per-lane certificates on the host, and resume with a doubled candidate
-    budget while any lane is uncertified — the sharded analogue of the
-    batched progressive engine's growth loop (rounds are lockstep across the
-    mesh, so certified lanes ride along; the standard batching trade-off).
+    merged candidates). This entry point runs scheduler-managed lanes over
+    the mesh: every lane carries its *own* candidate budget, a certified
+    lane leaves the working set immediately (freeing its mesh slot instead
+    of riding along through further lockstep rounds, mirroring the serving
+    scheduler's continuous batching), and each round re-dispatches only the
+    uncertified lanes, bucketed by budget and padded to power-of-two
+    sub-batch sizes so compile signatures stay logarithmic.
 
-    Returns (ids[B, k], scores[B, k], certified[B], K_final).
+    Returns (ids[B, k], scores[B, k], certified[B], K_final[B]) with
+    ``K_final`` the per-lane budget at which each lane stopped.
     """
     n_total = index.num_shards * index.shard_size
-    K = min(max(K0, 2 * k), n_total)
-    for round_ in range(max_rounds):
-        ids, scores, cert = sharded_diverse_search(
-            index, all_vectors, qs, k, eps, K, mesh, axis, L_factor, merge,
-            "div_astar", max_expansions)
-        if bool(np.asarray(cert).all()) or K >= n_total:
+    B = int(qs.shape[0])
+    K = np.full(B, min(max(K0, 2 * k), n_total), np.int64)
+    out_ids = np.full((B, k), -1, np.int32)
+    out_sc = np.zeros((B, k), np.float32)
+    out_cert = np.zeros(B, bool)
+    active = np.ones(B, bool)
+    for _ in range(max_rounds):
+        if not active.any():
             break
-        K = min(K * 2, n_total)
-    return ids, scores, cert, K
+        buckets: dict[int, list[int]] = {}
+        for i in np.flatnonzero(active):
+            buckets.setdefault(int(K[i]), []).append(i)
+        for Kval, idx in sorted(buckets.items()):
+            idx = np.asarray(idx)
+            m = len(idx)
+            g = _next_pow2(m)
+            jidx = jnp.asarray(np.concatenate([idx, np.full(g - m, idx[0])]))
+            ids, scores, cert = sharded_diverse_search(
+                index, all_vectors, qs[jidx], k, eps, Kval, mesh, axis,
+                L_factor, merge, "div_astar", max_expansions)
+            out_ids[idx] = np.asarray(ids)[:m]
+            out_sc[idx] = np.asarray(scores)[:m]
+            out_cert[idx] = np.asarray(cert)[:m]
+        finished = active & (out_cert | (K >= n_total))
+        active = active & ~finished
+        K = np.where(active, np.minimum(K * 2, n_total), K)
+    return out_ids, out_sc, out_cert, K

@@ -28,11 +28,15 @@ for i in range(8):
     sims = np.asarray(pairwise_sim(jnp.asarray(X[sel]), jnp.asarray(X[sel]), "ip"))
     off = sims[~np.eye(len(sel), dtype=bool)]
     assert np.all(off < 4.0 + 1e-4)
-# progressive entry point: budget grows until every lane certifies
+# progressive entry point: per-lane budgets grow until each lane certifies
 pids, psc, pcert, K_final = sharded_progressive_diverse(
     idx, jnp.asarray(X), qs, k=5, eps=4.0, mesh=mesh, K0=16)
 pids = np.asarray(pids)
-assert K_final >= 16
+K_final = np.asarray(K_final)
+assert K_final.shape == (8,) and K_final.min() >= 16
+# per-lane budgets walk the doubling ladder from K0 (clamped to N)
+ladder = {min(16 << j, N) for j in range(20)}
+assert set(K_final.tolist()) <= ladder, K_final
 for i in range(8):
     sel = pids[i][pids[i] >= 0]
     assert len(sel) == 5, (i, sel)

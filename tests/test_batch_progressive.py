@@ -1,10 +1,13 @@
 """Batched progressive engine: exact per-lane parity with the per-query
-drivers, bucketed capacity growth, and certificate behavior."""
+drivers, bucketed capacity growth, lane recycling, and certificates."""
 import numpy as np
 import pytest
 
-from repro.core.batch_progressive import (BatchProgressiveDriver, batch_pgs,
-                                          batch_pss)
+from repro.core.batch_progressive import (BatchProgressiveDriver,
+                                          ProgressiveEngine,
+                                          SignatureBudgetExceeded, batch_pds,
+                                          batch_pgs, batch_pss)
+from repro.core.pds import pds
 from repro.core.pgs import pgs
 from repro.core.progressive import ProgressiveDriver
 from repro.core.pss import pss
@@ -69,6 +72,68 @@ def test_batch_pgs_matches_per_query_10k(big_graph, eps):
         assert K_i == int(K[i])
 
 
+@pytest.mark.slow
+@pytest.mark.parametrize("eps", [0.5, 0.8])
+def test_batch_pds_matches_per_query_10k(big_graph, eps):
+    graph, x = big_graph
+    qs = _queries(x, 6, unit=True)
+    # max_K bounds the Theorem-1 blow-up at high diversification (the paper's
+    # N/A cells) identically in both drivers, exercising the exhausted path
+    bres = batch_pds(graph, qs, 5, eps, ef=10, max_K=2000)
+    for i in range(qs.shape[0]):
+        r = pds(graph, qs[i], 5, eps, ef=10, max_K=2000)
+        np.testing.assert_array_equal(np.asarray(r.ids), bres.ids[i])
+        np.testing.assert_array_equal(np.asarray(r.scores), bres.scores[i])
+        assert r.stats.certified == bool(bres.stats.certified[i])
+        assert r.stats.exhausted == bool(bres.stats.exhausted[i])
+        assert r.stats.K_final == int(bres.stats.K_final[i])
+
+
+# ------------------------------------------------- lane recycling (slow) ----
+
+def _serve_continuously(graph, qs, ks, epss, num_lanes, ef=10, max_k=10):
+    """Drive the engine directly: admit whenever a lane frees (so later
+    queries land on recycled lanes), return per-query results."""
+    eng = ProgressiveEngine(graph, num_lanes=num_lanes, max_k=max_k)
+    pending = list(range(len(qs)))
+    inflight, results = {}, {}
+    while pending or inflight:
+        for lane in eng.free_lanes():
+            if not pending:
+                break
+            qi = pending.pop(0)
+            eng.admit(int(lane), qs[qi], k=int(ks[qi]), eps=float(epss[qi]),
+                      ef=ef)
+            inflight[int(lane)] = qi
+        for lane in eng.step():
+            results[inflight.pop(lane)] = eng.result(lane)
+    return [results[i] for i in range(len(qs))], eng
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("eps", [0.5, 0.8])
+@pytest.mark.parametrize("k", [5, 10])
+def test_lane_recycle_parity_10k(big_graph, eps, k):
+    """A certified lane re-admitted with a new query must be bit-identical
+    to a fresh solo driver for that query — 2 lanes serving 4 queries means
+    every later query runs on a recycled slot."""
+    graph, x = big_graph
+    qs = _queries(x, 4, unit=True)
+    results, eng = _serve_continuously(graph, qs, np.full(4, k),
+                                       np.full(4, eps), num_lanes=2)
+    assert eng.driver.B == 2  # queries 2..3 necessarily recycled a lane
+    for i, r in enumerate(results):
+        solo = pss(graph, qs[i], k, eps, ef=10)
+        np.testing.assert_array_equal(np.asarray(solo.ids), r.ids)
+        np.testing.assert_array_equal(np.asarray(solo.scores), r.scores)
+        assert solo.stats.certified == r.stats.certified
+        assert solo.stats.exhausted == r.stats.exhausted
+        assert solo.stats.K_final == r.stats.K_final
+        assert solo.stats.growths == r.stats.growths
+        assert solo.stats.search_calls == r.stats.search_calls
+        assert solo.stats.div_calls == r.stats.div_calls
+
+
 # ------------------------------------------------ small-graph parity (fast) --
 
 @pytest.fixture(scope="module")
@@ -86,6 +151,46 @@ def test_batch_pss_small_parity(small_graph_l2):
     bres = batch_pss(graph, qs, 5, 0.0, ef=10)
     for i in range(qs.shape[0]):
         _assert_lane_matches(pss(graph, qs[i], 5, 0.0, ef=10), bres, i)
+
+
+def test_batch_pds_small_parity(small_graph_l2):
+    graph, x = small_graph_l2
+    qs = _queries(x, 5)
+    bres = batch_pds(graph, qs, 5, 0.0, ef=10)
+    for i in range(qs.shape[0]):
+        r = pds(graph, qs[i], 5, 0.0, ef=10)
+        np.testing.assert_array_equal(np.asarray(r.ids), bres.ids[i])
+        np.testing.assert_array_equal(np.asarray(r.scores), bres.scores[i])
+        assert r.stats.certified == bool(bres.stats.certified[i])
+        assert r.stats.K_final == int(bres.stats.K_final[i])
+
+
+def test_lane_recycle_mixed_k_eps_parity(small_graph_l2):
+    """Continuous serving over 2 lanes with per-request (k, eps): every
+    recycled lane must reproduce a fresh solo pss driver bit-for-bit."""
+    graph, x = small_graph_l2
+    qs = _queries(x, 6, seed=7)
+    ks = np.array([5, 3, 4, 5, 3, 4])
+    epss = np.array([0.0, -0.5, 0.0, -0.5, 0.0, -0.5])
+    results, _ = _serve_continuously(graph, qs, ks, epss, num_lanes=2,
+                                     max_k=8)
+    for i, r in enumerate(results):
+        solo = pss(graph, qs[i], int(ks[i]), float(epss[i]), ef=10)
+        np.testing.assert_array_equal(np.asarray(solo.ids), r.ids)
+        np.testing.assert_array_equal(np.asarray(solo.scores), r.scores)
+        assert solo.stats.certified == r.stats.certified
+        assert solo.stats.K_final == r.stats.K_final
+        assert solo.stats.search_calls == r.stats.search_calls
+
+
+def test_signature_budget_cap(small_graph_l2):
+    graph, x = small_graph_l2
+    qs = _queries(x, 2)
+    driver = BatchProgressiveDriver(graph, qs, ef=10, k=5, capacity0=64,
+                                    max_signatures=2)
+    driver.ensure_stable(np.full(2, 40))   # "init" + "search" fill the budget
+    with pytest.raises(SignatureBudgetExceeded):
+        driver._grow_lanes(np.array([200, 200]), np.ones(2, bool))
 
 
 def test_batch_pss_certificates_fire(small_graph_l2):
