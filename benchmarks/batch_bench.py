@@ -1,7 +1,7 @@
-"""Serving-path benchmark: engine vs per-query loop, and continuous vs
-lockstep admission on skewed workloads.
+"""Serving-path benchmark: engine vs per-query loop, continuous vs lockstep
+admission on skewed workloads, and open-system (Poisson) load curves.
 
-Two modes:
+Three modes:
 
 * ``--mode engine`` (default) — PR 1's headline comparison: at serving batch
   sizes the per-query pause/inspect/resume loop pays its host round-trips
@@ -20,12 +20,25 @@ Two modes:
   violation exits nonzero, which is what the CI smoke job checks); the
   difference is purely p50/p99 latency and throughput. ``--tiny`` shrinks
   everything for the CI smoke job.
+
+* ``--mode open`` — the open-system load generator: requests arrive by a
+  Poisson process at ``--qps`` (comma-separated for a sweep) and are pushed
+  through the scheduler in real time, reporting p50/p99 wait/latency and
+  shed rate vs offered load. ``--backend engine`` (single-host
+  ``ProgressiveEngine``), ``--backend sharded`` (a ``ShardedEngine`` over an
+  in-process mesh of the available devices), or ``--backend both`` drive the
+  *same* ``LaneScheduler`` — the point of the LaneBackend protocol. An
+  optional latency SLO (``--slo`` seconds) installs the shed callback:
+  requests whose expected queue wait already exceeds the SLO are dropped at
+  submit. All summary math (percentiles, Jain fairness) comes from
+  ``repro.serve.scheduler`` so benchmark and scheduler stats cannot drift.
 """
 from __future__ import annotations
 
 import argparse
 import os
 import sys
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -39,7 +52,7 @@ from benchmarks.common import emit, timed
 from repro.core.api import diverse_search
 from repro.core.batch import batch_greedy_diverse, batch_optimal_diverse
 from repro.core.batch_progressive import batch_pss
-from repro.serve.scheduler import LaneScheduler
+from repro.serve.scheduler import LaneScheduler, jain_fairness, percentile
 
 
 def run(n: int = D.N_DEFAULT, batch: int = 64, k: int = 10, ef: int = 10,
@@ -178,18 +191,134 @@ def run_skewed(n: int = D.N_DEFAULT, requests: int = 64, lanes: int = 16,
                 tput_win=tput_win, parity_violations=violations)
 
 
+# ------------------------------------------------------------- open mode ----
+
+def _backend_scheduler_factory(kind: str, graph, x, metric, lanes: int,
+                               max_k: int, ef: int, max_pending: int,
+                               history: int):
+    """Returns ``make(shed) -> LaneScheduler`` for one backend kind — the
+    LaneBackend protocol in action: same scheduler, different engine. The
+    sharded index/mesh are built once here, not per load point (jit caches
+    are process-global, so later points also start warm)."""
+    if kind == "engine":
+        return lambda shed: LaneScheduler(
+            graph, num_lanes=lanes, max_k=max_k, default_ef=ef,
+            max_pending=max_pending, history=history, prewarm=False,
+            shed=shed)
+    import jax
+
+    from repro.compat import make_mesh
+    from repro.sharded_search import ShardedEngine, build_sharded_index
+
+    shards = 1 << (jax.device_count().bit_length() - 1)  # pow2 <= devices
+    n = (x.shape[0] // shards) * shards
+    index = build_sharded_index(np.asarray(x[:n]), shards, metric, M=12)
+    mesh = make_mesh((shards,), ("data",))
+    xs = x[:n]
+    return lambda shed: LaneScheduler(
+        backend=ShardedEngine(index, xs, mesh, num_lanes=lanes, max_k=max_k),
+        max_pending=max_pending, history=history, prewarm=False, shed=shed)
+
+
+def make_slo_shed(slo: float):
+    """Shed-at-submit policy: drop a request when the queue's expected wait
+    (pending backlog x recent mean service time / lanes) already exceeds the
+    SLO — the 'shed heavy load before it queues' half of SLO serving."""
+    def shed(req, sched) -> bool:
+        done = list(sched.completed)
+        if not done:
+            return False
+        mean_svc = float(np.mean([r.service for r in done[-64:]]))
+        expected_wait = len(sched.pending) * mean_svc / sched.num_lanes
+        return expected_wait > slo
+    return shed
+
+
+def run_open(n: int, requests: int, lanes: int, ef: int, qps_list,
+             backends=("engine",), slo: float | None = None,
+             seed: int = 7) -> dict:
+    if "engine" in backends:
+        graph, x, metric = D.load_graph("deep-like", n=n)
+    else:   # sharded-only: the single-host graph would be dead weight
+        graph, (x, metric) = None, D.make_dataset("deep-like", n=n)
+    queries, ks, epss, heavy = make_skewed_workload(x, metric, requests, seed)
+    max_k = int(ks.max())
+    warmup = min(lanes, requests)
+    out = {}
+    for kind in backends:
+        # history must retain this run's requests plus the warmup pass, or
+        # the served count below undercounts and trips a false violation
+        make_sched = _backend_scheduler_factory(
+            kind, graph, x, metric, lanes, max_k, ef, max_pending=requests,
+            history=requests + warmup)
+        for qps in qps_list:
+            sched = make_sched(make_slo_shed(slo) if slo else None)
+            # warm the compile caches outside the timed open-loop run so the
+            # first arrivals don't pay XLA traces
+            sched.run(queries[:warmup], ks[:warmup], epss[:warmup], efs=ef)
+            rng = np.random.default_rng(seed)
+            arrivals = np.cumsum(rng.exponential(1.0 / qps, requests))
+            t0 = time.monotonic()
+            i = 0
+            while i < requests or sched.pending or sched.inflight:
+                now = time.monotonic() - t0
+                while i < requests and arrivals[i] <= now:
+                    sched.try_submit(queries[i], int(ks[i]), float(epss[i]),
+                                     ef=ef)
+                    i += 1
+                if sched.pending or sched.inflight:
+                    sched.pump()
+                elif i < requests:
+                    time.sleep(min(max(arrivals[i] - now, 0.0), 0.01))
+            stats = sched.latency_stats()
+            # percentiles over *this run's* requests only (the warmup pass
+            # sits in the scheduler's history window too) — computed with
+            # the exact helpers the scheduler itself uses (both timestamps
+            # come from time.monotonic), so the two can never drift
+            open_reqs = [r for r in sched.completed if r.t_submit >= t0]
+            lats = [r.latency for r in open_reqs]
+            waits = [r.wait for r in open_reqs]
+            served = len(open_reqs)
+            shed_n = stats["shed"]
+            tag = f"open/{kind}/qps{qps:g}"
+            emit(f"{tag}/p50_latency", percentile(lats, 50) * 1e3, "ms")
+            emit(f"{tag}/p99_latency", percentile(lats, 99) * 1e3,
+                 f"ms;p99_wait_ms={percentile(waits, 99) * 1e3:.1f};"
+                 f"fairness={jain_fairness(lats):.3f}")
+            emit(f"{tag}/served", served,
+                 f"of {requests} offered;shed={shed_n}")
+            out[(kind, qps)] = dict(
+                p50=percentile(lats, 50), p99=percentile(lats, 99),
+                p99_wait=percentile(waits, 99), served=served, shed=shed_n)
+            if served + shed_n != requests:
+                print(f"# OPEN-LOOP ACCOUNTING VIOLATION {kind}@{qps}: "
+                      f"{served} served + {shed_n} shed != {requests}")
+                out[(kind, qps)]["violation"] = True
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="engine", choices=["engine", "skewed"])
+    ap.add_argument("--mode", default="engine",
+                    choices=["engine", "skewed", "open"])
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke sizes (small n, few requests)")
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--batch", type=int, default=None,
-                    help="request count (both modes)")
+                    help="request count (all modes)")
     ap.add_argument("--lanes", type=int, default=None)
     ap.add_argument("--ef", type=int, default=10)
     ap.add_argument("--parity", default=None,
                     choices=["full", "sample", "off"])
+    ap.add_argument("--qps", default=None,
+                    help="offered load for --mode open (comma-separated "
+                         "sweep, e.g. 2,8,32)")
+    ap.add_argument("--backend", default="engine",
+                    choices=["engine", "sharded", "both"],
+                    help="LaneBackend(s) for --mode open")
+    ap.add_argument("--slo", type=float, default=None,
+                    help="latency SLO in seconds: installs the shed-at-"
+                         "submit callback (--mode open)")
     ap.add_argument("--seed", type=int, default=7)
     args = ap.parse_args(argv)
     if args.mode == "engine":
@@ -203,6 +332,15 @@ def main(argv=None):
     n = args.n or (2000 if args.tiny else D.N_DEFAULT)
     requests = args.batch or (16 if args.tiny else 64)
     lanes = args.lanes or (4 if args.tiny else 16)
+    if args.mode == "open":
+        qps_list = [float(q) for q in
+                    (args.qps or ("4" if args.tiny else "2,8,32")).split(",")]
+        backends = (("engine", "sharded") if args.backend == "both"
+                    else (args.backend,))
+        res = run_open(n=n, requests=requests, lanes=lanes, ef=args.ef,
+                       qps_list=qps_list, backends=backends, slo=args.slo,
+                       seed=args.seed)
+        return 1 if any(v.get("violation") for v in res.values()) else 0
     parity = args.parity or ("full" if args.tiny else "sample")
     res = run_skewed(n=n, requests=requests, lanes=lanes, ef=args.ef,
                      parity=parity, seed=args.seed)

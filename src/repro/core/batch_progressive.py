@@ -12,7 +12,10 @@ This is the middle layer of the serving stack's three-way split:
   lane's slot can be recycled for a new query between steps.
 * ``serve.scheduler`` — continuous-batching admission on top of ``step()``:
   a request queue feeds freed lanes so one heavy-tailed query never stalls
-  the batch (see that module for the latency story).
+  the batch (see that module for the latency story). The scheduler drives
+  the engine through the backend-neutral ``core.backend.LaneBackend``
+  protocol, which this engine implements for the single-host case
+  (``sharded_search.engine.ShardedEngine`` is the mesh case).
 
 Device-side structure (unchanged from the original engine):
 
@@ -74,10 +77,13 @@ from repro.core import beam_search as bs
 from repro.core import div_astar as da
 from repro.core import lane_state
 from repro.core import queue as qmod
+from repro.core.backend import LaneRequest
+from repro.core.bucketing import (next_pow2 as _next_pow2, pow2_group_sizes,
+                                  pow2_padded_indices)
 from repro.core.diversity_graph import degrees as _degrees
 from repro.core.graph import FlatGraph
 from repro.core.pgs import DiverseResult
-from repro.core.progressive import SearchStats, _next_pow2
+from repro.core.progressive import SearchStats
 from repro.core.theorems import theorem1_K, theorem2_min_value
 from repro.kernels import ops as kops
 
@@ -453,8 +459,9 @@ class BatchProgressiveDriver:
         for cap in sorted(set(int(c) for c in targets[grow])):
             idx = np.flatnonzero(grow & (targets == cap))
             m = len(idx)
-            g = _next_pow2(m)
-            jidx = jnp.asarray(np.concatenate([idx, np.full(g - m, idx[0])]))
+            padded = pow2_padded_indices(idx)
+            g = len(padded)
+            jidx = jnp.asarray(padded)
             sub = lane_state.select_lanes(self.state, jidx)
             sub = lane_state.slice_queue_capacity(sub, cap)
             self.signatures.note("rebuild", g, cap)
@@ -547,8 +554,9 @@ class BatchProgressiveDriver:
         for (width, _k), idx in sorted(groups.items()):
             idx = np.asarray(idx)
             m = len(idx)
-            g = _next_pow2(m)
-            jidx = jnp.asarray(np.concatenate([idx, np.full(g - m, idx[0])]))
+            padded = pow2_padded_indices(idx)
+            g = len(padded)
+            jidx = jnp.asarray(padded)
             Ks_pad = np.zeros(g, np.int64)
             Ks_pad[:m] = Ks[idx]     # pad rows keep K=0 -> all-sentinel
             self.signatures.note("prefix", g, width)
@@ -585,7 +593,14 @@ class ProgressiveEngine:
     continuous-batching hook the serving scheduler drives. Per-lane results
     are bit-identical to the per-query drivers regardless of admission
     order, because every device op is lane-separable and batch-invariant.
+
+    This is the single-host implementation of the ``core.backend.LaneBackend``
+    protocol (``admit``/``step``/``harvest``/``recycle``/``prewarm``/
+    ``signature_log``); ``sharded_search.engine.ShardedEngine`` is the mesh
+    one, and ``serve.scheduler.LaneScheduler`` drives either.
     """
+
+    methods = ("pss", "pgs", "pds")
 
     def __init__(self, graph: FlatGraph, num_lanes: int | None = None, *,
                  driver: BatchProgressiveDriver | None = None,
@@ -621,10 +636,19 @@ class ProgressiveEngine:
         self.maxK = np.full(self.B, graph.size, np.int64)
         self.out_ids = np.full((self.B, max_k), -1, np.int32)
         self.out_sc = np.zeros((self.B, max_k), np.float32)
+        self._unharvested: list[int] = []
 
     # -- admission ----------------------------------------------------------
     @property
+    def num_lanes(self) -> int:
+        return self.B
+
+    @property
     def signatures(self) -> SignatureLog:
+        return self.driver.signatures
+
+    @property
+    def signature_log(self) -> SignatureLog:
         return self.driver.signatures
 
     def free_lanes(self) -> np.ndarray:
@@ -652,12 +676,29 @@ class ProgressiveEngine:
         self.to_pss[lane] = method == "pss"
         self.status[lane] = _METHOD_STATUS[method]
 
-    def admit(self, lane: int, q, *, k: int, eps: float, ef: int | None = None,
+    def admit(self, lane: int, q, *, k: int | None = None,
+              eps: float | None = None, ef: int | None = None,
               method: str = "pss", max_K: int | None = None) -> None:
         """Recycle lane ``lane`` for a new request (fresh solo-equivalent
-        state; bit-identical trajectory to a fresh per-query driver)."""
+        state; bit-identical trajectory to a fresh per-query driver).
+
+        ``q`` is either a query vector with explicit ``k``/``eps`` keywords,
+        or a ``core.backend.LaneRequest`` (the protocol form the scheduler
+        uses) carrying all of them — in which case no keywords may be given.
+        """
+        if isinstance(q, LaneRequest):
+            if (k, eps, ef, max_K) != (None,) * 4 or method != "pss":
+                raise TypeError("pass parameters on the LaneRequest, not as "
+                                "admit keywords")
+            req = q
+            q, k, eps = req.q, req.k, req.eps
+            ef, method, max_K = req.ef, req.method, req.max_K
+        elif k is None or eps is None:
+            raise TypeError("admit needs k= and eps= (or a LaneRequest)")
         if self.status[lane] not in (LANE_FREE, LANE_DONE):
             raise RuntimeError(f"lane {lane} is still occupied")
+        if lane in self._unharvested:     # direct re-admission skips harvest
+            self._unharvested.remove(lane)
         ef = int(ef or self.default_ef)
         n = self.graph.size
         cap0 = self._capacity0 or min(_next_pow2(max(2 * k * ef, 256)),
@@ -670,6 +711,20 @@ class ProgressiveEngine:
         """Admit a lane whose state the driver already initialized (lockstep
         wrappers: the driver was constructed over the real query batch)."""
         self._set_lane(lane, k, eps, ef, method, max_K)
+
+    def harvest(self) -> list[tuple[int, DiverseResult]]:
+        """Drain the lanes that finished since the last harvest (protocol
+        form of ``step()``'s return + ``result()``); the lanes stay reserved
+        until ``recycle``."""
+        out = [(lane, self.result(lane)) for lane in self._unharvested]
+        self._unharvested = []
+        return out
+
+    def recycle(self, lane: int) -> None:
+        """Return a harvested lane's slot to the free pool."""
+        if self.status[lane] != LANE_DONE:
+            raise RuntimeError(f"lane {lane} is not finished")
+        self.status[lane] = LANE_FREE
 
     # -- results ------------------------------------------------------------
     def result(self, lane: int) -> DiverseResult:
@@ -736,6 +791,7 @@ class ProgressiveEngine:
     def _finish(self, lane: int, finished: list[int]) -> None:
         self.driver.stats.K_final[lane] = self.K[lane]
         self.status[lane] = LANE_DONE
+        self._unharvested.append(int(lane))
         finished.append(int(lane))
 
     # Alg. 2 round: greedy diversification over the stabilized prefix.
@@ -917,8 +973,7 @@ class ProgressiveEngine:
             if c >= top:
                 break
             c *= 2
-        group_sizes = [1 << i for i in range(_next_pow2(self.B).bit_length())
-                       if (1 << i) <= _next_pow2(self.B)]
+        group_sizes = pow2_group_sizes(self.B)
         warmed: list[tuple] = []
 
         def note(kind, *shape):

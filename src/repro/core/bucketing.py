@@ -1,0 +1,40 @@
+"""Power-of-two bucketing: the one home for the repo's compile-signature math.
+
+Every batched dispatch path (the single-host engine's growth rebuilds and
+prefix groups, the sharded engine's mesh dispatches) keeps its jit signature
+count logarithmic the same way: sizes are rounded up to powers of two, and
+variable-size lane groups are padded to a power-of-two length by repeating a
+real lane index (the padded rows recompute a real lane's work and are sliced
+off on the host, so they never change results). These helpers used to be
+re-implemented in ``core/progressive.py``, ``core/batch_progressive.py`` and
+``sharded_search/search.py``; they live here now so the padding convention
+can't drift between backends.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (1 for x <= 1)."""
+    return 1 << max(0, (int(x) - 1)).bit_length()
+
+
+def pow2_padded_indices(idx) -> np.ndarray:
+    """Pad a non-empty lane-index vector to the next power-of-two length by
+    repeating ``idx[0]``. The duplicate rows redo a real lane's work, which
+    keeps the dispatch semantics unchanged while bounding the distinct group
+    sizes (hence compile signatures) to log2(B)."""
+    idx = np.asarray(idx)
+    m = len(idx)
+    if m == 0:
+        raise ValueError("cannot pad an empty index group")
+    g = next_pow2(m)
+    return np.concatenate([idx, np.full(g - m, idx[0], idx.dtype)])
+
+
+def pow2_group_sizes(b: int) -> list[int]:
+    """All power-of-two group sizes up to next_pow2(b) — the grid a prewarm
+    pass walks so no mid-serving group size pays a fresh trace."""
+    top = next_pow2(b)
+    return [1 << i for i in range(top.bit_length()) if (1 << i) <= top]

@@ -2,10 +2,14 @@
 
 A *lane* is one slot of the batched progressive engine: a fixed-capacity
 candidate queue, a visited set, and a step counter — ``beam_search.SearchState``
-with a leading lane axis on every leaf. This module is the pure-function
-layer under ``core.batch_progressive``: it owns the shape/sentinel
-conventions and the three lane-slot operations the engine and the serving
-scheduler build on:
+with a leading lane axis on every leaf. This module is the bottom of the
+serving stack's lane-state / backend / scheduler split: the pure-function
+layer under ``core.batch_progressive.ProgressiveEngine`` (the single-host
+``core.backend.LaneBackend`` implementation; the mesh-sharded
+``sharded_search.engine.ShardedEngine`` keeps its per-lane budgets host-side
+instead, because its device state lives sharded across the mesh). It owns
+the shape/sentinel conventions and the three lane-slot operations the
+engine and the serving scheduler build on:
 
 * ``extract_lane`` / ``inject_lane`` — move one lane between the batched
   pytree and a solo ``SearchState`` (the parity bridge to the per-query

@@ -14,12 +14,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import beam_search as bs
+from repro.core.bucketing import next_pow2 as _next_pow2  # noqa: F401 (re-export)
 from repro.core.graph import FlatGraph
 from repro.core.queue import stable_count as q_stable_count
-
-
-def _next_pow2(x: int) -> int:
-    return 1 << max(0, (int(x) - 1)).bit_length()
 
 
 @dataclasses.dataclass

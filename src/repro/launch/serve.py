@@ -7,6 +7,13 @@ Requests flow through the continuous-batching lane scheduler
 (``serve.scheduler.LaneScheduler``): per-request (k, eps), lane recycling on
 certification, pre-warmed compile ladder; per-request latency and fairness
 stats are printed after the run.
+
+``--mesh-shards P`` serves retrieval off a P-way sharded device mesh
+instead of the single-host engine: the corpus is partitioned across the
+mesh's data axis and the *same* scheduler drives a
+``sharded_search.engine.ShardedEngine`` backend (shard-local beams,
+tournament merge, per-lane progressive budgets). On CPU, force host
+devices first, e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
 """
 from __future__ import annotations
 
@@ -22,6 +29,22 @@ from repro.models import model as M
 from repro.serve.rag import RagPipeline
 
 
+def _sharded_backend(docs: np.ndarray, shards: int, lanes: int, k: int):
+    from repro.compat import make_mesh
+    from repro.sharded_search import ShardedEngine, build_sharded_index
+
+    if shards & (shards - 1):
+        raise SystemExit(f"--mesh-shards {shards} must be a power of two "
+                         "(tournament merge)")
+    if shards > jax.device_count():
+        raise SystemExit(f"--mesh-shards {shards} > {jax.device_count()} "
+                         "devices (set XLA_FLAGS to force host devices)")
+    index = build_sharded_index(docs, shards, "ip", M=8)
+    mesh = make_mesh((shards,), ("data",))
+    return ShardedEngine(index, docs, mesh, num_lanes=lanes,
+                         max_k=max(k, 16))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -34,19 +57,31 @@ def main():
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--engine", default="scheduler",
                     choices=["scheduler", "lockstep", "fixed_k"])
+    ap.add_argument("--mesh-shards", type=int, default=0,
+                    help="serve retrieval from a P-way sharded mesh backend "
+                         "(0 = single-host engine)")
     ap.add_argument("--prewarm", action="store_true",
                     help="pre-compile the scheduler's capacity ladder")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
     docs = rng.normal(size=(args.corpus, args.dim)).astype(np.float32)
-    graph = build_knn_graph(docs, metric="ip", M=8)
+    backend, graph = None, None
+    if args.mesh_shards:
+        if args.engine != "scheduler":
+            raise SystemExit("--mesh-shards requires --engine scheduler")
+        # shards must split the corpus evenly; trim the tail like the
+        # benchmark does (the single-host graph is dead weight here)
+        docs = docs[:(len(docs) // args.mesh_shards) * args.mesh_shards]
+        backend = _sharded_backend(docs, args.mesh_shards, args.lanes, args.k)
+    else:
+        graph = build_knn_graph(docs, metric="ip", M=8)
     cfg = get_config(args.arch).reduced()
     params = M.init_params(cfg, jax.random.key(0))
     pipe = RagPipeline(cfg, params, graph, k=args.k, eps=args.eps,
                        engine=args.engine, num_lanes=args.lanes,
-                       prewarm=args.prewarm)
-    qs = docs[rng.integers(0, args.corpus, args.requests)]
+                       prewarm=args.prewarm, backend=backend)
+    qs = docs[rng.integers(0, len(docs), args.requests)]
     t0 = time.time()
     tokens, ids, cert = pipe.generate(qs, np.ones((args.requests, 2),
                                                   np.int32),
@@ -57,7 +92,9 @@ def main():
     print("retrieved ids:\n", ids)
     if args.engine == "scheduler":
         stats = pipe.scheduler.latency_stats()
-        print("scheduler: "
+        where = (f"mesh[{args.mesh_shards}]" if args.mesh_shards
+                 else "single-host")
+        print(f"scheduler[{where}]: "
               f"p50={stats['p50_latency'] * 1e3:.1f}ms "
               f"p99={stats['p99_latency'] * 1e3:.1f}ms "
               f"fairness={stats['fairness']:.3f} "

@@ -14,6 +14,12 @@ queued requests, and each request's result is bit-identical to a fresh
 per-query PSS driver. ``engine="lockstep"`` runs the same engine with
 whole-batch admission (PR 1's regime); ``engine="fixed_k"`` keeps the older
 static-K hybrid (batched div-A* + per-query PSS repair) for comparison.
+
+The scheduler is backend-neutral: pass ``backend=`` (any
+``core.backend.LaneBackend``, e.g. a mesh-sharded
+``sharded_search.engine.ShardedEngine``) to serve retrieval off a device
+mesh instead of the single-host graph — the rest of the pipeline is
+unchanged (``launch/serve.py --mesh-shards`` wires this up).
 """
 from __future__ import annotations
 
@@ -44,18 +50,23 @@ class RagPipeline:
     engine: str = "scheduler"   # "scheduler" | "lockstep" | "fixed_k"
     num_lanes: int = 8
     prewarm: bool = False
+    backend: object | None = None   # LaneBackend override (e.g. ShardedEngine)
     _scheduler: LaneScheduler | None = dataclasses.field(
         default=None, repr=False)
 
     @property
     def scheduler(self) -> LaneScheduler:
         """The pipeline's lane scheduler (built lazily, reused across calls
-        so the engine's compile cache and lane state persist)."""
+        so the backend's compile cache and lane state persist)."""
         if self._scheduler is None:
-            self._scheduler = LaneScheduler(
-                self.graph, num_lanes=self.num_lanes,
-                max_k=max(self.k, 16), default_ef=self.ef,
-                prewarm=self.prewarm)
+            if self.backend is not None:
+                self._scheduler = LaneScheduler(
+                    backend=self.backend, prewarm=self.prewarm)
+            else:
+                self._scheduler = LaneScheduler(
+                    self.graph, num_lanes=self.num_lanes,
+                    max_k=max(self.k, 16), default_ef=self.ef,
+                    prewarm=self.prewarm)
         return self._scheduler
 
     def retrieve(self, query_embeds, ks=None, epss=None

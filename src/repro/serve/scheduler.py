@@ -1,36 +1,44 @@
-"""Continuous-batching lane scheduler — the serving layer over the engine.
+"""Continuous-batching lane scheduler — the serving layer over a LaneBackend.
 
-Top layer of the lane-state / engine / scheduler split. The engine
-(``core.batch_progressive.ProgressiveEngine``) advances a fixed set of lanes
-one progressive round per ``step()``; this module decides *which request
-occupies which lane when*:
+Top layer of the lane-state / backend / scheduler split. A backend
+(``core.backend.LaneBackend``) advances a fixed set of lanes one progressive
+round per ``step()``; this module decides *which request occupies which lane
+when* — and it is backend-neutral: the same scheduler drives the single-host
+``core.batch_progressive.ProgressiveEngine`` and the mesh-sharded
+``sharded_search.engine.ShardedEngine``.
 
 * **Admission queue** — requests carry their own ``(k, eps, ef, method)``
   (the paper's Definition 1: the query owns its diversification level; no
   index rebuild). ``submit`` enqueues; a bounded queue gives backpressure
-  (``SchedulerSaturated``) so callers can shed or defer load.
+  (``SchedulerSaturated``) so callers can shed or defer load, and an
+  optional ``shed`` callback lets a latency-SLO policy drop requests at
+  submit time before they ever occupy a lane.
 * **Continuous batching** — whenever a lane certifies (or exhausts), its
-  slot is recycled for the next queued request *between engine steps*,
+  slot is recycled for the next queued request *between backend steps*,
   while sibling lanes keep their in-flight state. Div-A* trip counts are
   heavy-tailed by design, so under lockstep admission one hard query stalls
   a whole batch; continuous admission keeps every lane busy and cuts p99
   latency and raises throughput on skewed workloads
   (``benchmarks/batch_bench.py --mode skewed`` measures both policies —
-  they share this scheduler, differing only in ``admission``).
-* **Compile-signature-aware startup** — the engine compiles per (lane
-  count, physical capacity) for bursts and per (group, width, k) for
-  diversify/verify; the scheduler pre-warms the power-of-two capacity
-  ladder at construction so mid-serving growth never pays an XLA trace,
-  and exposes the engine's ``SignatureLog`` for recompile auditing.
+  they share this scheduler, differing only in ``admission``; ``--mode
+  open`` drives Poisson arrivals against either backend).
+* **Compile-signature-aware startup** — backends compile per shape
+  signature (lane count x capacity for single-host bursts, group x budget
+  for mesh dispatches); the scheduler pre-warms the backend's power-of-two
+  ladder at construction so mid-serving growth never pays an XLA trace, and
+  exposes the backend's ``SignatureLog`` for recompile auditing.
 * **Per-request stats** — wait (submit→admit), service (admit→done), and
   total latency per request, with p50/p99 summaries and Jain's fairness
   index over total latencies.
 
-Parity contract: a request's result is bit-identical to a fresh per-query
-driver (``pss``/``pgs``/``pds``) for that query on the CPU reference path —
-lane recycling starts from exactly ``beam_search.init_state`` and every
-engine op is lane-separable, so admission order cannot leak between
-requests. ``tests/test_scheduler.py`` enforces this.
+Parity contract (single-host backend): a request's result is bit-identical
+to a fresh per-query driver (``pss``/``pgs``/``pds``) for that query on the
+CPU reference path — lane recycling starts from exactly
+``beam_search.init_state`` and every engine op is lane-separable, so
+admission order cannot leak between requests (``tests/test_scheduler.py``).
+The sharded backend's contract is budget-parity: a harvested lane equals
+``sharded_diverse_search`` for that query at the lane's final K-budget
+(``tests/dist_scripts/sharded_scheduler_check.py``).
 """
 from __future__ import annotations
 
@@ -41,25 +49,30 @@ from typing import Callable
 
 import numpy as np
 
+from repro.core.backend import LaneBackend, LaneRequest
 from repro.core.batch_progressive import ProgressiveEngine
 from repro.core.graph import FlatGraph
 from repro.core.pgs import DiverseResult
 
 
 class SchedulerSaturated(RuntimeError):
-    """Admission queue is full — shed load or pump the scheduler first."""
+    """Admission queue is full — pump the scheduler (or defer) and retry."""
+
+
+class RequestShed(RuntimeError):
+    """The scheduler's SLO-shed policy dropped this request at submit.
+
+    Deliberately *not* a ``SchedulerSaturated``: saturation means "retry
+    after pumping", shed means "never retry" — a retry loop catching
+    ``SchedulerSaturated`` must not spin on a deterministically-shed
+    request."""
 
 
 @dataclasses.dataclass
-class Request:
-    """One diverse-search request with its own (k, eps) and timing trace."""
-    rid: int
-    q: np.ndarray
-    k: int
-    eps: float
-    ef: int
-    method: str = "pss"
-    max_K: int | None = None
+class Request(LaneRequest):
+    """One diverse-search request: a ``LaneRequest`` plus scheduler-side
+    bookkeeping (id, timing trace, lane assignment, result)."""
+    rid: int = -1
     t_submit: float = 0.0
     t_admit: float | None = None
     t_done: float | None = None
@@ -79,8 +92,13 @@ class Request:
         return (self.t_done or 0.0) - self.t_submit
 
 
-def _pctl(xs: list[float], p: float) -> float:
+def percentile(xs: list[float], p: float) -> float:
+    """p-th percentile of a (possibly empty) sample — the summary helper
+    shared with benchmarks so reported stats can't drift."""
     return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
+
+
+_pctl = percentile   # internal alias, kept for existing call sites
 
 
 def jain_fairness(latencies: list[float]) -> float:
@@ -92,7 +110,12 @@ def jain_fairness(latencies: list[float]) -> float:
 
 
 class LaneScheduler:
-    """Admission queue + lane recycling over a ``ProgressiveEngine``.
+    """Admission queue + lane recycling over any ``LaneBackend``.
+
+    Construct with either a ``graph`` (builds the default single-host
+    ``ProgressiveEngine``) or an explicit ``backend=`` (e.g. a mesh-sharded
+    ``ShardedEngine``); everything above the backend — admission policies,
+    backpressure, shed, stats — is identical.
 
     ``admission`` picks the batching policy:
 
@@ -102,9 +125,15 @@ class LaneScheduler:
       whole-batch regime (each wave waits for its straggler). Kept as the
       controlled baseline for the skewed-workload benchmark; results are
       identical either way, only latency/throughput differ.
+
+    ``shed`` is an optional callback ``(request, scheduler) -> bool`` run at
+    submit time; returning True drops the request (``RequestShed``) — the
+    hook for latency-SLO admission control (e.g. shed heavy-eps requests
+    once the queue's expected wait exceeds the SLO).
     """
 
-    def __init__(self, graph: FlatGraph, num_lanes: int = 8, *,
+    def __init__(self, graph: FlatGraph | None = None, num_lanes: int = 8, *,
+                 backend: LaneBackend | None = None,
                  max_k: int = 16, default_ef: int = 40,
                  capacity0: int | None = None,
                  max_capacity: int | None = None,
@@ -112,6 +141,7 @@ class LaneScheduler:
                  max_iters: int = 64, max_expansions: int = 400_000,
                  max_signatures: int | None = 1024,
                  admission: str = "continuous",
+                 shed: Callable[[Request, "LaneScheduler"], bool] | None = None,
                  prewarm: bool = True,
                  prewarm_capacity: int | None = None,
                  prewarm_ks: tuple = (), prewarm_widths: tuple = (),
@@ -119,15 +149,39 @@ class LaneScheduler:
                  clock: Callable[[], float] = time.monotonic):
         if admission not in ("continuous", "lockstep"):
             raise ValueError(f"unknown admission policy {admission!r}")
-        self.engine = ProgressiveEngine(
-            graph, num_lanes, max_k=max_k, default_ef=default_ef,
-            capacity0=capacity0, max_capacity=max_capacity,
-            max_iters=max_iters, max_expansions=max_expansions,
-            max_signatures=max_signatures)
-        self.num_lanes = num_lanes
+        if backend is None:
+            if graph is None:
+                raise ValueError("LaneScheduler needs a graph or a backend")
+            backend = ProgressiveEngine(
+                graph, num_lanes, max_k=max_k, default_ef=default_ef,
+                capacity0=capacity0, max_capacity=max_capacity,
+                max_iters=max_iters, max_expansions=max_expansions,
+                max_signatures=max_signatures)
+        else:
+            if graph is not None:
+                raise ValueError("pass either graph or backend=, not both")
+            # known limitation: a value explicitly passed that *equals* the
+            # default (e.g. num_lanes=8) is indistinguishable from "not
+            # passed" and is silently ignored; only non-default overrides
+            # are caught here
+            overridden = [name for name, (val, default) in dict(
+                num_lanes=(num_lanes, 8), max_k=(max_k, 16),
+                default_ef=(default_ef, 40), capacity0=(capacity0, None),
+                max_capacity=(max_capacity, None), max_iters=(max_iters, 64),
+                max_expansions=(max_expansions, 400_000),
+                max_signatures=(max_signatures, 1024)).items()
+                if val != default]
+            if overridden:
+                raise ValueError(
+                    f"{overridden} are backend-construction parameters — "
+                    "configure them on the backend, not the scheduler")
+        self.backend = backend
+        self.engine = backend   # legacy alias (PR 2 name)
+        self.num_lanes = int(backend.num_lanes)
         self.admission = admission
+        self.shed = shed
         self.max_pending = (max_pending if max_pending is not None
-                            else 4 * num_lanes)
+                            else 4 * self.num_lanes)
         self.clock = clock
         self.pending: collections.deque[Request] = collections.deque()
         self.inflight: dict[int, Request] = {}
@@ -137,69 +191,81 @@ class LaneScheduler:
         self.completed: collections.deque[Request] = collections.deque(
             maxlen=history)
         self.total_completed = 0
+        self.total_shed = 0
         self._next_rid = 0
         self.steps = 0
         if prewarm:
-            self.engine.prewarm(max_capacity=prewarm_capacity,
-                                ks=prewarm_ks, widths=prewarm_widths)
+            self.backend.prewarm(max_capacity=prewarm_capacity,
+                                 ks=prewarm_ks, widths=prewarm_widths)
 
     # -- admission ----------------------------------------------------------
     def submit(self, q, k: int, eps: float, ef: int | None = None,
-               method: str = "pss", max_K: int | None = None) -> Request:
+               method: str | None = None, max_K: int | None = None) -> Request:
         """Enqueue a request; raises ``SchedulerSaturated`` on backpressure
-        (``try_submit`` is the non-raising variant). Invalid parameters are
-        rejected here, not at admission — a bad request must never dequeue
-        and then abort serving mid-pump."""
-        if method not in ("pss", "pgs", "pds"):
-            raise ValueError(f"unknown progressive method {method!r}")
-        if not 1 <= k <= self.engine.max_k:
+        or ``RequestShed`` if the shed policy drops it (``try_submit`` is the
+        non-raising variant). ``method`` defaults to the backend's native
+        method. Invalid parameters are rejected here, not at admission — a
+        bad request must never dequeue and then abort serving mid-pump."""
+        if method is None:
+            method = self.backend.methods[0]
+        if method not in self.backend.methods:
             raise ValueError(
-                f"k={k} outside [1, {self.engine.max_k}] (engine max_k)")
+                f"method {method!r} not served by this backend "
+                f"(supported: {self.backend.methods})")
+        if not 1 <= k <= self.backend.max_k:
+            raise ValueError(
+                f"k={k} outside [1, {self.backend.max_k}] (backend max_k)")
         if len(self.pending) >= self.max_pending:
             raise SchedulerSaturated(
                 f"{len(self.pending)} pending >= max_pending="
                 f"{self.max_pending}; pump() or shed load")
         req = Request(rid=self._next_rid, q=np.asarray(q, np.float32),
-                      k=k, eps=eps, ef=int(ef or self.engine.default_ef),
+                      k=k, eps=eps, ef=int(ef or self.backend.default_ef),
                       method=method, max_K=max_K, t_submit=self.clock())
-        self._next_rid += 1
+        self._next_rid += 1   # shed requests keep their rid (unique traces)
+        if self.shed is not None and self.shed(req, self):
+            self.total_shed += 1
+            raise RequestShed(f"request {req.rid} shed by SLO policy")
         self.pending.append(req)
         return req
 
     def try_submit(self, q, k: int, eps: float, **kw) -> Request | None:
+        """``submit`` returning None instead of raising, for both drop
+        reasons (inspect ``total_shed`` to tell them apart)."""
         try:
             return self.submit(q, k, eps, **kw)
-        except SchedulerSaturated:
+        except (SchedulerSaturated, RequestShed):
             return None
 
     def _refill(self) -> None:
         if self.admission == "lockstep" and self.inflight:
             return  # whole-batch regime: wait for the wave's straggler
-        for lane in self.engine.free_lanes():
+        for lane in self.backend.free_lanes():
             if not self.pending:
                 break
             req = self.pending.popleft()
-            self.engine.admit(int(lane), req.q, k=req.k, eps=req.eps,
-                              ef=req.ef, method=req.method, max_K=req.max_K)
+            self.backend.admit(int(lane), req)
             req.t_admit = self.clock()
             req.lane = int(lane)
             self.inflight[int(lane)] = req
 
     # -- serving loop -------------------------------------------------------
     def pump(self) -> list[Request]:
-        """Refill freed lanes and advance the engine one step; returns the
-        requests that completed during this pump."""
+        """Refill freed lanes, advance the backend one step, harvest and
+        recycle finished lanes; returns the requests that completed."""
         self._refill()
         done: list[Request] = []
-        if self.engine.active_count():
+        if self.backend.active_count():
             self.steps += 1
-            for lane in self.engine.step():
-                req = self.inflight.pop(lane)
-                req.result = self.engine.result(lane)
-                req.t_done = self.clock()
-                self.completed.append(req)
-                self.total_completed += 1
-                done.append(req)
+            self.backend.step()
+        for lane, result in self.backend.harvest():
+            req = self.inflight.pop(lane)
+            req.result = result
+            req.t_done = self.clock()
+            self.backend.recycle(lane)
+            self.completed.append(req)
+            self.total_completed += 1
+            done.append(req)
         return done
 
     def drain(self) -> list[Request]:
@@ -210,37 +276,44 @@ class LaneScheduler:
             self._refill()
         return out
 
-    def run(self, qs, ks, epss, efs=None, method: str = "pss"
-            ) -> list[DiverseResult]:
+    def run(self, qs, ks, epss, efs=None, method: str | None = None
+            ) -> list[DiverseResult | None]:
         """Serve a closed batch of requests; results in submission order.
 
         Per-request parameters may be scalars or per-request sequences.
-        Oversubmission is handled by pumping whenever the queue saturates.
+        Oversubmission is handled by pumping whenever the queue saturates;
+        a request dropped by the shed policy yields ``None`` in its slot
+        (it is *not* retried — a deterministic policy would shed it again
+        forever).
         """
         qs = np.asarray(qs, np.float32)
         B = qs.shape[0]
         ks = np.broadcast_to(np.asarray(ks), (B,))
         epss = np.broadcast_to(np.asarray(epss, np.float64), (B,))
         efs = np.broadcast_to(
-            np.asarray(efs if efs is not None else self.engine.default_ef),
+            np.asarray(efs if efs is not None else self.backend.default_ef),
             (B,))
-        reqs: list[Request] = []
+        reqs: list[Request | None] = []
         for i in range(B):
             while True:
-                r = self.try_submit(qs[i], int(ks[i]), float(epss[i]),
-                                    ef=int(efs[i]), method=method)
-                if r is not None:
-                    reqs.append(r)
+                try:
+                    reqs.append(self.submit(qs[i], int(ks[i]),
+                                            float(epss[i]), ef=int(efs[i]),
+                                            method=method))
                     break
-                self.pump()
+                except RequestShed:
+                    reqs.append(None)
+                    break
+                except SchedulerSaturated:
+                    self.pump()   # backpressure: free a slot and retry
         self.drain()
-        return [r.result for r in reqs]
+        return [r.result if r is not None else None for r in reqs]
 
     # -- reporting ----------------------------------------------------------
     def latency_stats(self) -> dict:
         """p50/p99 wait/service/total latency, Jain fairness, throughput
         (percentiles/throughput over the retained ``history`` window;
-        ``completed`` counts the scheduler's lifetime)."""
+        ``completed``/``shed`` count the scheduler's lifetime)."""
         reqs = list(self.completed)
         lats = [r.latency for r in reqs]
         waits = [r.wait for r in reqs]
@@ -249,6 +322,7 @@ class LaneScheduler:
                 if reqs else 0.0)
         return dict(
             completed=self.total_completed,
+            shed=self.total_shed,
             pending=len(self.pending),
             inflight=len(self.inflight),
             steps=self.steps,
@@ -259,6 +333,6 @@ class LaneScheduler:
             throughput=len(reqs) / span if span > 0 else 0.0,
             certified_frac=(float(np.mean([r.result.stats.certified
                                            for r in reqs])) if reqs else 0.0),
-            signatures=len(self.engine.signatures),
-            unplanned_signatures=len(self.engine.signatures.unplanned),
+            signatures=len(self.backend.signature_log),
+            unplanned_signatures=len(self.backend.signature_log.unplanned),
         )

@@ -1,3 +1,4 @@
+from repro.sharded_search.engine import ShardedEngine  # noqa: F401
 from repro.sharded_search.search import (  # noqa: F401
     ShardedIndex,
     build_sharded_index,

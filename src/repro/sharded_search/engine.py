@@ -1,0 +1,232 @@
+"""ShardedEngine: the mesh-sharded implementation of ``LaneBackend``.
+
+A *lane* here is one query row of the replicated batch that rides over the
+device mesh: the database is sharded P ways along the mesh's data axis, every
+dispatch runs the shard-local beam search + tournament merge + replicated
+div-A* of ``sharded_search.sharded_diverse_search``, and each lane carries
+its own ``(k, eps, K-budget)`` — the paper's query-owned diversification
+level at mesh scale.
+
+Round structure (one ``step()``):
+
+1. Occupied lanes are bucketed by their current ``(K-budget, k)`` and each
+   bucket is dispatched at exactly that budget, padded to a power-of-two
+   lane count (``core.bucketing``) so compile signatures stay logarithmic in
+   batch size. ``eps`` is traced per lane, so mixed-eps traffic shares one
+   compilation per bucket shape.
+2. A lane whose Theorem-2 certificate fires (or whose budget hit the corpus
+   / its ``max_K`` cap) finishes and its mesh slot is freed — the serving
+   scheduler admits the next queued request into it *between rounds*, while
+   sibling lanes keep their budgets. This is the request-queue half that
+   ``sharded_progressive_diverse`` alone never had (per-lane budgets only).
+3. Surviving lanes double their budget (clamped) for the next round; a lane
+   that exhausts ``max_rounds`` finishes uncertified with its last results.
+
+Parity contract: a harvested lane's result is exactly
+``sharded_diverse_search`` for that query at the lane's final K-budget —
+every dispatch *is* that function, lanes are vmapped rows, and padding rows
+only duplicate a real lane's work. Admission order can therefore never leak
+between requests. ``tests/dist_scripts/sharded_scheduler_check.py`` enforces
+this on a 4-device host mesh, plus mid-run admission into a freed lane.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backend import LaneRequest
+from repro.core.batch_progressive import SignatureLog
+from repro.core.bucketing import pow2_group_sizes, pow2_padded_indices
+from repro.core.pgs import DiverseResult
+from repro.core.progressive import SearchStats
+from repro.sharded_search.search import ShardedIndex, sharded_diverse_search
+
+LANE_FREE, LANE_RUN, LANE_DONE = range(3)
+
+
+class ShardedEngine:
+    """Per-lane progressive budgets over a sharded mesh index.
+
+    Implements ``core.backend.LaneBackend``; drive it directly (the
+    ``sharded_progressive_diverse`` wrapper does) or through
+    ``serve.scheduler.LaneScheduler`` for continuous batching, backpressure
+    and latency stats on an N-device mesh.
+    """
+
+    methods = ("sharded",)
+
+    def __init__(self, index: ShardedIndex, all_vectors, mesh,
+                 num_lanes: int = 8, *, axis: str = "data",
+                 K0: int = 32, L_factor: int = 4, merge: str = "tournament",
+                 max_expansions: int = 100_000, max_rounds: int = 8,
+                 max_k: int = 16, default_ef: int = 0,
+                 max_signatures: int | None = 1024):
+        self.index = index
+        self.all_vectors = jnp.asarray(all_vectors)
+        self.mesh = mesh
+        self.axis = axis
+        self.K0 = K0
+        self.L_factor = L_factor
+        self.merge = merge
+        self.max_expansions = max_expansions
+        self.max_rounds = max_rounds
+        self.max_k = max_k
+        # the mesh backend has no beam-ef knob (beam width = K * L_factor);
+        # kept so the scheduler's ef plumbing is backend-neutral
+        self.default_ef = default_ef
+        self.B = int(num_lanes)
+        self.n_total = index.num_shards * index.shard_size
+        d = int(index.vectors.shape[-1])
+        self.qs = np.zeros((self.B, d), np.float32)
+        self.status = np.full(self.B, LANE_FREE, np.int8)
+        self.ks = np.ones(self.B, np.int64)
+        self.epss = np.zeros(self.B, np.float64)
+        self.K = np.zeros(self.B, np.int64)
+        self.maxK = np.full(self.B, self.n_total, np.int64)
+        self.rounds = np.zeros(self.B, np.int64)
+        self.out_ids = np.full((self.B, max_k), -1, np.int32)
+        self.out_sc = np.zeros((self.B, max_k), np.float32)
+        self.cert = np.zeros(self.B, bool)
+        self.signatures = SignatureLog(max_signatures)
+        self._unharvested: list[int] = []
+
+    # -- protocol surface ---------------------------------------------------
+    @property
+    def num_lanes(self) -> int:
+        return self.B
+
+    @property
+    def signature_log(self) -> SignatureLog:
+        return self.signatures
+
+    def free_lanes(self) -> np.ndarray:
+        return np.flatnonzero(self.status == LANE_FREE)
+
+    def active_count(self) -> int:
+        return int((self.status == LANE_RUN).sum())
+
+    def admit(self, lane: int, request: LaneRequest) -> None:
+        """Hand a free mesh lane to ``request``: fresh budget ladder from
+        ``K0``; sibling lanes keep their in-flight budgets."""
+        if self.status[lane] != LANE_FREE:
+            raise RuntimeError(f"mesh lane {lane} is still occupied")
+        k = int(request.k)
+        if k > self.max_k:
+            raise ValueError(f"k={k} exceeds engine max_k={self.max_k}")
+        if request.method not in self.methods:
+            raise ValueError(
+                f"unknown sharded method {request.method!r}")
+        self.qs[lane] = np.asarray(request.q, np.float32)
+        self.ks[lane] = k
+        self.epss[lane] = float(request.eps)
+        self.maxK[lane] = min(request.max_K or self.n_total, self.n_total)
+        self.K[lane] = min(max(self.K0, 2 * k), self.maxK[lane])
+        self.rounds[lane] = 0
+        self.out_ids[lane] = -1
+        self.out_sc[lane] = 0.0
+        self.cert[lane] = False
+        self.status[lane] = LANE_RUN
+
+    def recycle(self, lane: int) -> None:
+        """Return a harvested lane's mesh slot to the free pool."""
+        if self.status[lane] != LANE_DONE:
+            raise RuntimeError(f"mesh lane {lane} is not finished")
+        self.status[lane] = LANE_FREE
+
+    # -- the round ----------------------------------------------------------
+    def _dispatch(self, idx: np.ndarray, Kval: int, k_g: int) -> None:
+        padded = pow2_padded_indices(idx)
+        self.signatures.note("sharded", len(padded), Kval, k_g)
+        ids, scores, cert = sharded_diverse_search(
+            self.index, self.all_vectors, jnp.asarray(self.qs[padded]), k_g,
+            jnp.asarray(self.epss[padded], jnp.float32), Kval, self.mesh,
+            self.axis, self.L_factor, self.merge, "div_astar",
+            self.max_expansions)
+        m = len(idx)
+        self.out_ids[idx, :k_g] = np.asarray(ids)[:m]
+        self.out_sc[idx, :k_g] = np.asarray(scores)[:m]
+        self.cert[idx] = np.asarray(cert)[:m]
+
+    def step(self) -> list[int]:
+        """Advance every occupied mesh lane one budget round; returns the
+        lanes that finished (also queued for ``harvest``)."""
+        active = self.status == LANE_RUN
+        if not active.any():
+            return []
+        buckets: dict[tuple, list[int]] = {}
+        for i in np.flatnonzero(active):
+            buckets.setdefault((int(self.K[i]), int(self.ks[i])), []).append(i)
+        for (Kval, k_g), idx in sorted(buckets.items()):
+            self._dispatch(np.asarray(idx), Kval, k_g)
+        self.rounds[active] += 1
+        finished = active & (self.cert | (self.K >= self.maxK))
+        still = active & ~finished
+        # a lane out of rounds retires uncertified at its *current* budget
+        # (so K_final is always a budget that was actually dispatched — the
+        # parity anchor); only true survivors double for the next round
+        retired = still & (self.rounds >= self.max_rounds)
+        cont = still & ~retired
+        self.K[cont] = np.minimum(self.K[cont] * 2, self.maxK[cont])
+        done = np.flatnonzero(finished | retired)
+        for lane in done:
+            self.status[lane] = LANE_DONE
+            self._unharvested.append(int(lane))
+        return [int(x) for x in done]
+
+    def harvest(self) -> list[tuple[int, DiverseResult]]:
+        """Drain finished lanes since the last harvest; each lane stays
+        reserved until ``recycle``."""
+        out = [(lane, self.result(lane)) for lane in self._unharvested]
+        self._unharvested = []
+        return out
+
+    def result(self, lane: int) -> DiverseResult:
+        """Solo-call-compatible result: equals ``sharded_diverse_search`` for
+        this query at ``stats.K_final``."""
+        k = int(self.ks[lane])
+        ids = self.out_ids[lane, :k].copy()
+        sc = self.out_sc[lane, :k].copy()
+        certified = bool(self.cert[lane])
+        stats = SearchStats(
+            expansions=0, growths=max(0, int(self.rounds[lane]) - 1),
+            search_calls=int(self.rounds[lane]),
+            div_calls=int(self.rounds[lane]),
+            certified=certified, exhausted=not certified,
+            K_final=int(self.K[lane]))
+        return DiverseResult(ids.astype(np.int32), sc.astype(np.float32),
+                             float(sc.sum()), stats)
+
+    # -- prewarm ------------------------------------------------------------
+    def prewarm(self, *, max_capacity: int | None = None, ks: tuple = (),
+                widths: tuple = ()) -> list[tuple]:
+        """Compile the mesh dispatch ladder ahead of serving.
+
+        Walks the power-of-two group sizes up to ``num_lanes`` crossed with
+        the budget-doubling ladder from ``K0`` up to ``max_capacity``
+        (default: one rung, ``K0`` only — mesh dispatches *execute* the
+        search, so a full-corpus warmup is a real cost the caller opts into)
+        for each ``k`` in ``ks`` (default: ``max_k``). ``widths`` is accepted
+        for signature-compatibility with the single-host backend and
+        ignored (the mesh backend has no prefix-width stage).
+        """
+        del widths
+        if (self.status != LANE_FREE).any():
+            raise RuntimeError("prewarm before admitting requests (prewarm "
+                               "dispatches scribble on lane 0's result row)")
+        top = min(max_capacity or self.K0, self.n_total)
+        ks = tuple(int(k) for k in ks) or (self.max_k,)
+        warmed: list[tuple] = []
+        for g in pow2_group_sizes(self.B):
+            for k in ks:
+                K = min(max(self.K0, 2 * k), self.n_total)
+                while True:
+                    self._dispatch(np.zeros(g, np.int64), K, k)
+                    warmed.append(("sharded", g, K, k))
+                    if K >= top:
+                        break
+                    K = min(K * 2, self.n_total)
+        # prewarm dispatches scribble on (free) lane 0's result row; wipe it
+        self.out_ids[0] = -1
+        self.out_sc[0] = 0.0
+        self.cert[0] = False
+        return warmed

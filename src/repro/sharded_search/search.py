@@ -25,7 +25,6 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import beam_search as bs
 from repro.core import div_astar as da
-from repro.core.progressive import _next_pow2
 from repro.core.graph import make_flat_graph
 from repro.core.theorems import theorem2_min_value
 from repro.kernels import ops as kops
@@ -159,12 +158,16 @@ def sharded_diverse_search(index: ShardedIndex, all_vectors: jnp.ndarray,
     Returns (ids[B, k], scores[B, k], certified[B]).
     ``all_vectors`` [N, d] is the global database used to gather candidate
     vectors for the adjacency build (replicated or resharded by the caller).
+    ``eps`` may be a scalar or a per-query ``[B]`` vector (the scheduler's
+    query-owned diversification level): lanes with different eps share one
+    dispatch because eps is traced, never baked into the compilation.
     """
     ids, scores = sharded_topk(index, qs, K, K * L_factor, mesh, axis, merge)
+    epss = jnp.broadcast_to(jnp.asarray(eps, jnp.float32), (qs.shape[0],))
 
-    def diversify(cand_ids, cand_scores):
+    def diversify(cand_ids, cand_scores, eps_q):
         vecs = all_vectors[jnp.maximum(cand_ids, 0)]
-        adj = kops.pairwise_adjacency(vecs, eps, index.metric, cand_ids >= 0)
+        adj = kops.pairwise_adjacency(vecs, eps_q, index.metric, cand_ids >= 0)
         if method == "greedy":
             sel, count = kops.greedy_diversify(cand_scores, adj, k,
                                                valid=cand_ids >= 0)
@@ -180,7 +183,7 @@ def sharded_diverse_search(index: ShardedIndex, all_vectors: jnp.ndarray,
         out_sc = jnp.where(sel >= 0, cand_scores[jnp.maximum(sel, 0)], 0.0)
         return out_ids, out_sc, certified
 
-    return jax.vmap(diversify)(ids, scores)
+    return jax.vmap(diversify)(ids, scores, epss)
 
 
 def sharded_progressive_diverse(index: ShardedIndex, all_vectors: jnp.ndarray,
@@ -194,42 +197,45 @@ def sharded_progressive_diverse(index: ShardedIndex, all_vectors: jnp.ndarray,
 
     The fixed-budget ``sharded_diverse_search`` can return uncertified lanes
     (Theorem-2 check fails: the optimal diverse set may extend past the K
-    merged candidates). This entry point runs scheduler-managed lanes over
-    the mesh: every lane carries its *own* candidate budget, a certified
-    lane leaves the working set immediately (freeing its mesh slot instead
-    of riding along through further lockstep rounds, mirroring the serving
-    scheduler's continuous batching), and each round re-dispatches only the
-    uncertified lanes, bucketed by budget and padded to power-of-two
-    sub-batch sizes so compile signatures stay logarithmic.
+    merged candidates). This entry point is a thin lockstep wrapper over
+    ``sharded_search.engine.ShardedEngine`` — the mesh implementation of the
+    ``core.backend.LaneBackend`` protocol: every lane carries its *own*
+    candidate budget, a certified lane leaves the working set immediately,
+    and each round re-dispatches only the uncertified lanes, bucketed by
+    budget and padded to power-of-two sub-batch sizes so compile signatures
+    stay logarithmic. (For continuous admission — new queries entering freed
+    mesh lanes mid-run — drive the engine through
+    ``serve.scheduler.LaneScheduler`` instead.)
 
     Returns (ids[B, k], scores[B, k], certified[B], K_final[B]) with
-    ``K_final`` the per-lane budget at which each lane stopped.
+    ``K_final`` the per-lane budget at which each lane stopped — always a
+    budget that was actually dispatched, so every lane's (ids, scores,
+    certified) equals ``sharded_diverse_search`` for that query at its
+    ``K_final``. (Previously a round-limited lane reported the doubled
+    budget it never ran.)
     """
-    n_total = index.num_shards * index.shard_size
+    from repro.core.backend import LaneRequest
+    from repro.sharded_search.engine import ShardedEngine
+
     B = int(qs.shape[0])
-    K = np.full(B, min(max(K0, 2 * k), n_total), np.int64)
+    eng = ShardedEngine(index, all_vectors, mesh, num_lanes=B, axis=axis,
+                        K0=K0, L_factor=L_factor, merge=merge,
+                        max_expansions=max_expansions, max_rounds=max_rounds,
+                        max_k=k)
+    qs_np = np.asarray(qs, np.float32)
+    epss = np.broadcast_to(np.asarray(eps, np.float64), (B,))
+    for lane in range(B):
+        eng.admit(lane, LaneRequest(q=qs_np[lane], k=k, eps=float(epss[lane]),
+                                    method="sharded"))
     out_ids = np.full((B, k), -1, np.int32)
     out_sc = np.zeros((B, k), np.float32)
     out_cert = np.zeros(B, bool)
-    active = np.ones(B, bool)
-    for _ in range(max_rounds):
-        if not active.any():
-            break
-        buckets: dict[int, list[int]] = {}
-        for i in np.flatnonzero(active):
-            buckets.setdefault(int(K[i]), []).append(i)
-        for Kval, idx in sorted(buckets.items()):
-            idx = np.asarray(idx)
-            m = len(idx)
-            g = _next_pow2(m)
-            jidx = jnp.asarray(np.concatenate([idx, np.full(g - m, idx[0])]))
-            ids, scores, cert = sharded_diverse_search(
-                index, all_vectors, qs[jidx], k, eps, Kval, mesh, axis,
-                L_factor, merge, "div_astar", max_expansions)
-            out_ids[idx] = np.asarray(ids)[:m]
-            out_sc[idx] = np.asarray(scores)[:m]
-            out_cert[idx] = np.asarray(cert)[:m]
-        finished = active & (out_cert | (K >= n_total))
-        active = active & ~finished
-        K = np.where(active, np.minimum(K * 2, n_total), K)
-    return out_ids, out_sc, out_cert, K
+    K_final = np.zeros(B, np.int64)
+    while eng.active_count():
+        eng.step()
+        for lane, res in eng.harvest():
+            out_ids[lane], out_sc[lane] = res.ids, res.scores
+            out_cert[lane] = res.stats.certified
+            K_final[lane] = res.stats.K_final
+            eng.recycle(lane)
+    return out_ids, out_sc, out_cert, K_final

@@ -1,0 +1,183 @@
+"""LaneBackend protocol: bucketing helpers, protocol conformance of both
+engines, and the scheduler driving a (1-shard) ShardedEngine — the mesh
+backend's full lifecycle without forced host devices (the 4-device variant
+lives in tests/dist_scripts/sharded_scheduler_check.py)."""
+import numpy as np
+import pytest
+
+from repro.compat import make_mesh
+from repro.core.backend import LaneBackend, LaneRequest
+from repro.core.bucketing import (next_pow2, pow2_group_sizes,
+                                  pow2_padded_indices)
+from repro.serve.scheduler import LaneScheduler, RequestShed
+from repro.sharded_search import (ShardedEngine, build_sharded_index,
+                                  sharded_diverse_search,
+                                  sharded_progressive_diverse)
+
+
+# ----------------------------------------------------------- bucketing ----
+
+def test_next_pow2():
+    assert [next_pow2(x) for x in (0, 1, 2, 3, 4, 5, 63, 64, 65)] == \
+        [1, 1, 2, 4, 4, 8, 64, 64, 128]
+
+
+def test_pow2_padded_indices():
+    np.testing.assert_array_equal(pow2_padded_indices([3, 7, 1]),
+                                  [3, 7, 1, 3])
+    np.testing.assert_array_equal(pow2_padded_indices([5]), [5])
+    np.testing.assert_array_equal(pow2_padded_indices([2, 4]), [2, 4])
+    with pytest.raises(ValueError):
+        pow2_padded_indices([])
+
+
+def test_pow2_group_sizes():
+    assert pow2_group_sizes(1) == [1]
+    assert pow2_group_sizes(6) == [1, 2, 4, 8]
+    assert pow2_group_sizes(8) == [1, 2, 4, 8]
+
+
+# ----------------------------------------------- protocol conformance ----
+
+@pytest.fixture(scope="module")
+def tiny_world():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(256, 12)).astype(np.float32)
+    index = build_sharded_index(x, 1, "ip", M=8)
+    mesh = make_mesh((1,), ("data",))
+    qs = rng.normal(size=(6, 12)).astype(np.float32)
+    return x, index, mesh, qs
+
+
+def test_both_engines_satisfy_protocol(tiny_world):
+    from repro.core.batch_progressive import ProgressiveEngine
+    from repro.index.flat import build_knn_graph
+
+    x, index, mesh, _ = tiny_world
+    graph = build_knn_graph(x, metric="ip", M=8)
+    single = ProgressiveEngine(graph, num_lanes=2)
+    sharded = ShardedEngine(index, x, mesh, num_lanes=2)
+    for eng in (single, sharded):
+        assert isinstance(eng, LaneBackend)
+        assert eng.num_lanes == 2
+        assert len(eng.free_lanes()) == 2 and eng.active_count() == 0
+        assert eng.methods[0] in ("pss", "sharded")
+        assert len(eng.signature_log) >= 0
+
+
+def test_sharded_engine_lifecycle(tiny_world):
+    """admit -> step -> harvest -> recycle on the mesh backend, plus the
+    occupancy guards."""
+    x, index, mesh, qs = tiny_world
+    eng = ShardedEngine(index, x, mesh, num_lanes=2, K0=16, max_k=8)
+    req = LaneRequest(q=qs[0], k=4, eps=4.0, method="sharded")
+    eng.admit(0, req)
+    assert eng.active_count() == 1 and list(eng.free_lanes()) == [1]
+    with pytest.raises(RuntimeError):
+        eng.admit(0, req)                  # occupied
+    with pytest.raises(ValueError):
+        eng.admit(1, LaneRequest(q=qs[0], k=99, eps=4.0, method="sharded"))
+    while eng.active_count():
+        eng.step()
+    harvested = eng.harvest()
+    assert [lane for lane, _ in harvested] == [0]
+    lane, res = harvested[0]
+    assert res.ids.shape == (4,) and res.stats.K_final >= 16
+    with pytest.raises(RuntimeError):
+        eng.recycle(1)                     # never ran
+    eng.recycle(0)
+    assert sorted(eng.free_lanes().tolist()) == [0, 1]
+
+
+def test_scheduler_over_sharded_backend_parity(tiny_world):
+    """The unmodified LaneScheduler serving queued requests over recycled
+    mesh lanes: every result must equal sharded_diverse_search for that
+    query at the lane's final K-budget (the mesh parity contract)."""
+    import jax.numpy as jnp
+
+    x, index, mesh, qs = tiny_world
+    eng = ShardedEngine(index, x, mesh, num_lanes=2, K0=16, max_k=8)
+    sched = LaneScheduler(backend=eng, prewarm=False, max_pending=8)
+    reqs = [sched.submit(qs[i], 4, 4.0) for i in range(6)]   # 6 reqs, 2 lanes
+    sched.drain()
+    assert all(r.result is not None for r in reqs)
+    for r in reqs:
+        assert r.method == "sharded"      # backend-native default
+        Kf = r.result.stats.K_final
+        ids, sc, cert = sharded_diverse_search(
+            index, jnp.asarray(x), jnp.asarray(r.q[None]), 4, 4.0, int(Kf),
+            mesh)
+        np.testing.assert_array_equal(np.asarray(ids)[0], r.result.ids)
+        np.testing.assert_array_equal(np.asarray(sc)[0], r.result.scores)
+        assert bool(np.asarray(cert)[0]) == r.result.stats.certified
+    st = sched.latency_stats()
+    assert st["completed"] == 6 and st["signatures"] > 0
+
+
+def test_sharded_wrapper_matches_engine(tiny_world):
+    """sharded_progressive_diverse is a thin wrapper over ShardedEngine:
+    same results as driving the engine by hand in lockstep."""
+    x, index, mesh, qs = tiny_world
+    ids, sc, cert, K_final = sharded_progressive_diverse(
+        index, np.asarray(x), qs, k=4, eps=4.0, mesh=mesh, K0=16)
+    assert ids.shape == (6, 4) and K_final.min() >= 16
+    eng = ShardedEngine(index, x, mesh, num_lanes=6, K0=16, max_k=4)
+    for lane in range(6):
+        eng.admit(lane, LaneRequest(q=qs[lane], k=4, eps=4.0,
+                                    method="sharded"))
+    while eng.active_count():
+        eng.step()
+    for lane, res in eng.harvest():
+        np.testing.assert_array_equal(res.ids, ids[lane])
+        np.testing.assert_array_equal(res.scores, sc[lane])
+        assert res.stats.certified == bool(cert[lane])
+        assert res.stats.K_final == int(K_final[lane])
+
+
+def test_scheduler_rejects_foreign_method(tiny_world):
+    x, index, mesh, qs = tiny_world
+    eng = ShardedEngine(index, x, mesh, num_lanes=2, max_k=8)
+    sched = LaneScheduler(backend=eng, prewarm=False)
+    with pytest.raises(ValueError):
+        sched.submit(qs[0], 4, 4.0, method="pds")   # single-host-only method
+
+
+def test_scheduler_graph_xor_backend(tiny_world):
+    from repro.index.flat import build_knn_graph
+
+    x, index, mesh, _ = tiny_world
+    graph = build_knn_graph(x, metric="ip", M=8)
+    eng = ShardedEngine(index, x, mesh, num_lanes=2)
+    with pytest.raises(ValueError):
+        LaneScheduler(graph, backend=eng)
+    with pytest.raises(ValueError):
+        LaneScheduler()
+
+
+def test_shed_callback(tiny_world):
+    """The SLO-shed hook drops requests at submit and counts them."""
+    x, index, mesh, qs = tiny_world
+    eng = ShardedEngine(index, x, mesh, num_lanes=2, max_k=8)
+    sched = LaneScheduler(backend=eng, prewarm=False,
+                          shed=lambda req, s: req.eps > 5.0)
+    ok = sched.submit(qs[0], 4, 4.0)
+    with pytest.raises(RequestShed):
+        sched.submit(qs[1], 4, 9.0)
+    assert sched.try_submit(qs[2], 4, 9.0) is None
+    assert sched.total_shed == 2
+    sched.drain()
+    assert ok.result is not None
+    assert sched.latency_stats()["shed"] == 2
+
+
+def test_run_with_deterministic_shed_terminates(tiny_world):
+    """run() must not retry a shed request (a deterministic policy would
+    shed it again forever): shed slots come back as None."""
+    x, index, mesh, qs = tiny_world
+    eng = ShardedEngine(index, x, mesh, num_lanes=2, max_k=8)
+    sched = LaneScheduler(backend=eng, prewarm=False,
+                          shed=lambda req, s: req.eps > 5.0)
+    results = sched.run(qs[:4], 4, [4.0, 9.0, 4.0, 9.0])
+    assert [r is None for r in results] == [False, True, False, True]
+    assert results[0].ids.shape == (4,)
+    assert sched.total_shed == 2

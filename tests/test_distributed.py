@@ -25,6 +25,12 @@ def test_sharded_search_4dev():
     _run("sharded_search_check.py")
 
 
+def test_sharded_scheduler_4dev():
+    """LaneScheduler over ShardedEngine: budget parity + mid-run admission
+    into freed mesh lanes (the LaneBackend acceptance check)."""
+    _run("sharded_scheduler_check.py")
+
+
 def test_compressed_psum_4dev():
     _run("compression_check.py")
 

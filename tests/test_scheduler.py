@@ -58,6 +58,24 @@ def test_lockstep_and_continuous_agree(graph_and_queries):
         np.testing.assert_array_equal(x.scores, y.scores)
 
 
+def test_explicit_backend_matches_graph_construction(graph_and_queries):
+    """LaneScheduler(backend=ProgressiveEngine(...)) is the same scheduler
+    as the graph-convenience constructor — bit-identical results."""
+    from repro.core.batch_progressive import ProgressiveEngine
+
+    graph, qs = graph_and_queries
+    eng = ProgressiveEngine(graph, num_lanes=3, max_k=8, default_ef=10)
+    a = LaneScheduler(backend=eng, prewarm=False)
+    assert a.backend is eng and a.num_lanes == 3
+    b = LaneScheduler(graph, num_lanes=3, max_k=8, default_ef=10,
+                      prewarm=False)
+    ra = a.run(qs, MIX_KS, MIX_EPS)
+    rb = b.run(qs, MIX_KS, MIX_EPS)
+    for x, y in zip(ra, rb):
+        np.testing.assert_array_equal(x.ids, y.ids)
+        np.testing.assert_array_equal(x.scores, y.scores)
+
+
 def test_scheduler_runs_pds_requests(graph_and_queries):
     graph, qs = graph_and_queries
     sched = LaneScheduler(graph, num_lanes=2, max_k=8, default_ef=10,
