@@ -27,15 +27,25 @@ Three modes:
   shed rate vs offered load. ``--backend engine`` (single-host
   ``ProgressiveEngine``), ``--backend sharded`` (a ``ShardedEngine`` over an
   in-process mesh of the available devices), or ``--backend both`` drive the
-  *same* ``LaneScheduler`` — the point of the LaneBackend protocol. An
-  optional latency SLO (``--slo`` seconds) installs the shed callback:
-  requests whose expected queue wait already exceeds the SLO are dropped at
-  submit. All summary math (percentiles, Jain fairness) comes from
-  ``repro.serve.scheduler`` so benchmark and scheduler stats cannot drift.
+  *same* ``LaneScheduler`` — the point of the LaneBackend protocol. The
+  sharded backend runs twice, as ``sharded-scratch`` and ``sharded-beam``
+  (the resumable shard-local beams), and every load point reports the
+  cumulative expansion / per-round counters — the measured work that
+  resumption saves. An optional latency SLO (``--slo`` seconds) installs
+  the shed callback: requests whose expected queue wait already exceeds the
+  SLO are dropped at submit. All summary math (percentiles, Jain fairness)
+  comes from ``repro.serve.scheduler`` so benchmark and scheduler stats
+  cannot drift.
+
+``--json PATH`` appends the run to a stable-schema JSON trend file (see
+``BENCH_SCHEMA``): one ``modes`` entry per bench mode, merged across
+invocations, so CI can upload a single ``BENCH_pr4.json`` artifact with the
+skewed-admission and open-system numbers side by side.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -195,28 +205,37 @@ def run_skewed(n: int = D.N_DEFAULT, requests: int = 64, lanes: int = 16,
 
 def _backend_scheduler_factory(kind: str, graph, x, metric, lanes: int,
                                max_k: int, ef: int, max_pending: int,
-                               history: int):
+                               history: int, mesh_world: dict):
     """Returns ``make(shed) -> LaneScheduler`` for one backend kind — the
-    LaneBackend protocol in action: same scheduler, different engine. The
-    sharded index/mesh are built once here, not per load point (jit caches
-    are process-global, so later points also start warm)."""
+    LaneBackend protocol in action: same scheduler, different engine.
+    ``kind`` is ``engine`` or ``sharded-{scratch,beam}`` (the ShardedEngine
+    resume mode). The sharded index/mesh are built once into ``mesh_world``,
+    not per load point (jit caches are process-global, so later points also
+    start warm)."""
     if kind == "engine":
         return lambda shed: LaneScheduler(
             graph, num_lanes=lanes, max_k=max_k, default_ef=ef,
             max_pending=max_pending, history=history, prewarm=False,
             shed=shed)
-    import jax
+    resume = kind.split("-", 1)[1]
+    if not mesh_world:
+        import jax
 
-    from repro.compat import make_mesh
-    from repro.sharded_search import ShardedEngine, build_sharded_index
+        from repro.compat import make_mesh
+        from repro.sharded_search import build_sharded_index
 
-    shards = 1 << (jax.device_count().bit_length() - 1)  # pow2 <= devices
-    n = (x.shape[0] // shards) * shards
-    index = build_sharded_index(np.asarray(x[:n]), shards, metric, M=12)
-    mesh = make_mesh((shards,), ("data",))
-    xs = x[:n]
+        shards = 1 << (jax.device_count().bit_length() - 1)  # pow2 <= devs
+        n = (x.shape[0] // shards) * shards
+        mesh_world["index"] = build_sharded_index(np.asarray(x[:n]), shards,
+                                                  metric, M=12)
+        mesh_world["mesh"] = make_mesh((shards,), ("data",))
+        mesh_world["xs"] = x[:n]
+    from repro.sharded_search import ShardedEngine
+
     return lambda shed: LaneScheduler(
-        backend=ShardedEngine(index, xs, mesh, num_lanes=lanes, max_k=max_k),
+        backend=ShardedEngine(mesh_world["index"], mesh_world["xs"],
+                              mesh_world["mesh"], num_lanes=lanes,
+                              max_k=max_k, resume=resume),
         max_pending=max_pending, history=history, prewarm=False, shed=shed)
 
 
@@ -245,12 +264,19 @@ def run_open(n: int, requests: int, lanes: int, ef: int, qps_list,
     max_k = int(ks.max())
     warmup = min(lanes, requests)
     out = {}
-    for kind in backends:
+    # the sharded backend runs once per resume mode: scratch restarts every
+    # budget round cold, beam resumes the shard-local beams — the
+    # expansions counters below are the work resumption saves
+    kinds = [k2 for kind in backends for k2 in
+             (("sharded-scratch", "sharded-beam") if kind == "sharded"
+              else (kind,))]
+    mesh_world: dict = {}
+    for kind in kinds:
         # history must retain this run's requests plus the warmup pass, or
         # the served count below undercounts and trips a false violation
         make_sched = _backend_scheduler_factory(
             kind, graph, x, metric, lanes, max_k, ef, max_pending=requests,
-            history=requests + warmup)
+            history=requests + warmup, mesh_world=mesh_world)
         for qps in qps_list:
             sched = make_sched(make_slo_shed(slo) if slo else None)
             # warm the compile caches outside the timed open-loop run so the
@@ -280,6 +306,12 @@ def run_open(n: int, requests: int, lanes: int, ef: int, qps_list,
             waits = [r.wait for r in open_reqs]
             served = len(open_reqs)
             shed_n = stats["shed"]
+            # real per-lane counters out of the harvested SearchStats (the
+            # sharded backend threads them from the resumable beam state)
+            exp_total = sum(int(r.result.stats.expansions)
+                            for r in open_reqs if r.result is not None)
+            rounds_total = sum(int(r.result.stats.search_calls)
+                               for r in open_reqs if r.result is not None)
             tag = f"open/{kind}/qps{qps:g}"
             emit(f"{tag}/p50_latency", percentile(lats, 50) * 1e3, "ms")
             emit(f"{tag}/p99_latency", percentile(lats, 99) * 1e3,
@@ -287,14 +319,68 @@ def run_open(n: int, requests: int, lanes: int, ef: int, qps_list,
                  f"fairness={jain_fairness(lats):.3f}")
             emit(f"{tag}/served", served,
                  f"of {requests} offered;shed={shed_n}")
+            emit(f"{tag}/expansions", exp_total,
+                 f"cumulative;rounds={rounds_total};per_round="
+                 f"{exp_total / max(rounds_total, 1):.1f}")
             out[(kind, qps)] = dict(
                 p50=percentile(lats, 50), p99=percentile(lats, 99),
-                p99_wait=percentile(waits, 99), served=served, shed=shed_n)
+                p99_wait=percentile(waits, 99), served=served, shed=shed_n,
+                expansions_total=exp_total, rounds_total=rounds_total,
+                expansions_per_round=exp_total / max(rounds_total, 1),
+                throughput=(served / max(max(r.t_done or 0.0
+                                             for r in open_reqs) - t0, 1e-9)
+                            if open_reqs else 0.0))
             if served + shed_n != requests:
                 print(f"# OPEN-LOOP ACCOUNTING VIOLATION {kind}@{qps}: "
                       f"{served} served + {shed_n} shed != {requests}")
                 out[(kind, qps)]["violation"] = True
     return out
+
+
+# -------------------------------------------------------------- trend json --
+
+BENCH_SCHEMA = 1
+
+_SKEWED_KEYS = ("p50_latency", "p99_latency", "p50_wait", "p99_wait",
+                "throughput", "fairness", "certified_frac", "signatures")
+
+
+def write_trend_json(path: str, mode: str, payload: dict) -> None:
+    """Merge one mode's summary into the stable-schema trend file.
+
+    Schema (``schema_version`` gates compat): top-level ``modes`` maps a
+    bench mode to its summary dict — ``skewed`` keys the two admission
+    policies plus ``parity_violations``; ``open`` keys ``<kind>@qps<q>``
+    load points, each with p50/p99/p99_wait seconds, served/shed counts,
+    throughput, and the expansion counters (``expansions_total``,
+    ``rounds_total``, ``expansions_per_round``) that separate
+    sharded-scratch from sharded-beam. Repeated invocations with the same
+    path accumulate modes, so one artifact carries the whole trend entry.
+    """
+    doc = {"schema_version": BENCH_SCHEMA, "bench": "batch_bench",
+           "modes": {}}
+    if os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+        if old.get("schema_version") == BENCH_SCHEMA:
+            doc = old
+    doc["modes"][mode] = payload
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path} (modes: {sorted(doc['modes'])})", flush=True)
+
+
+def _skewed_payload(res: dict) -> dict:
+    out = {adm: {key: res[adm][key] for key in _SKEWED_KEYS}
+           for adm in ("lockstep", "continuous")}
+    out["parity_violations"] = res["parity_violations"]
+    return out
+
+
+def _open_payload(res: dict) -> dict:
+    return {f"{kind}@qps{qps:g}": point
+            for (kind, qps), point in sorted(res.items())}
 
 
 def main(argv=None):
@@ -319,6 +405,9 @@ def main(argv=None):
     ap.add_argument("--slo", type=float, default=None,
                     help="latency SLO in seconds: installs the shed-at-"
                          "submit callback (--mode open)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge this run's summary into a stable-schema "
+                         "trend JSON (skewed/open modes)")
     ap.add_argument("--seed", type=int, default=7)
     args = ap.parse_args(argv)
     if args.mode == "engine":
@@ -340,10 +429,14 @@ def main(argv=None):
         res = run_open(n=n, requests=requests, lanes=lanes, ef=args.ef,
                        qps_list=qps_list, backends=backends, slo=args.slo,
                        seed=args.seed)
+        if args.json:
+            write_trend_json(args.json, "open", _open_payload(res))
         return 1 if any(v.get("violation") for v in res.values()) else 0
     parity = args.parity or ("full" if args.tiny else "sample")
     res = run_skewed(n=n, requests=requests, lanes=lanes, ef=args.ef,
                      parity=parity, seed=args.seed)
+    if args.json:
+        write_trend_json(args.json, "skewed", _skewed_payload(res))
     if res["parity_violations"]:
         return 1
     return 0

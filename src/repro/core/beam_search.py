@@ -94,6 +94,36 @@ def run_search(graph: FlatGraph, q: jnp.ndarray, state: SearchState,
     )
 
 
+def resume_search(graph: FlatGraph, q: jnp.ndarray, state: SearchState,
+                  stable_limit, min_value=-jnp.inf,
+                  step_budget=None) -> SearchState:
+    """Resume a previous ``run_search`` under a *continued* stable limit.
+
+    The queue and visited set carry over, so expansions from earlier calls
+    are never redone: a wider ``stable_limit`` (the budget-doubling ladder's
+    next rung) keeps expanding from the previous frontier instead of
+    restarting at the entry point. ``step_budget`` is the per-call expansion
+    allowance — unlike ``run_search``'s absolute ``max_steps``, it is added
+    on top of the steps the state has already accumulated, so a resumed
+    round gets the same allowance a fresh one would.
+
+    Widening contract: a queue whose capacity is at least ``stable_limit``
+    (or at least the graph's valid-node count) evolves its leading prefix
+    identically to any wider queue — entries only ever drop *below* a full
+    prefix of better-scored entries, and a dropped entry re-inserted later
+    lands below that prefix again. The sharded resume path relies on this:
+    it sizes the queue once at the lane's max beam width
+    (``ShardedSearchState``), so the first round is bit-exact with a scratch
+    search at the narrow width, and later rounds continue exactly where the
+    previous rung stopped.
+    """
+    if step_budget is None:
+        step_budget = 4 * state.queue.capacity + 64
+    max_steps = state.steps + jnp.asarray(step_budget, jnp.int32)
+    return run_search(graph, q, state, stable_limit, min_value,
+                      max_steps=max_steps)
+
+
 def beam_search(graph: FlatGraph, q: jnp.ndarray, k: int, L: int,
                 capacity: int | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Paper Alg. 1: plain beam search; returns (ids[k], scores[k])."""

@@ -55,3 +55,36 @@ def theorem3_recall_bound(K: float, k: int, lam: float) -> float:
         return 0.0
     base = 1.0 - (K * lam) / (K - k + 1)
     return max(0.0, base) ** k
+
+
+def theorem2_recheck(vectors, metric: str, cand_ids, cand_scores, eps,
+                     k: int, max_expansions: int = 100_000):
+    """Independent Theorem-2 certificate audit over a candidate frontier.
+
+    Re-runs div-A* from scratch on the recorded ``(cand_ids, cand_scores)``
+    (global ids into ``vectors``; -1 rows are padding) and re-evaluates
+    ``minValue > s_K`` — engine-free, so it can audit a served result's
+    certificate without trusting the engine that produced it. Returns
+    ``(certified, selected_global_ids)``; a sound certificate means
+    ``certified`` is True and the selected ids equal the served ones.
+    """
+    import numpy as np
+
+    from repro.core import div_astar as da
+    from repro.kernels import ops as kops
+
+    cand_ids = np.asarray(cand_ids)
+    cand_scores = np.asarray(cand_scores)
+    K = len(cand_ids)
+    vecs = jnp.asarray(vectors)[np.maximum(cand_ids, 0)]
+    adj = kops.pairwise_adjacency(vecs, eps, metric,
+                                  jnp.asarray(cand_ids >= 0))
+    res = da.div_astar(jnp.where(jnp.asarray(cand_ids) >= 0,
+                                 jnp.asarray(cand_scores), -jnp.inf),
+                       adj, k, max_expansions=max_expansions)
+    min_value = theorem2_min_value(res.best_scores, k)
+    certified = bool(np.asarray((min_value > cand_scores[K - 1])
+                                & res.complete))
+    sel = np.asarray(res.best_sets[k - 1])
+    sel_ids = np.where(sel >= 0, cand_ids[np.maximum(sel, 0)], -1)
+    return certified, sel_ids.astype(np.int32)

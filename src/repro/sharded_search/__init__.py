@@ -1,8 +1,14 @@
 from repro.sharded_search.engine import ShardedEngine  # noqa: F401
 from repro.sharded_search.search import (  # noqa: F401
     ShardedIndex,
+    ShardedSearchState,
+    beam_state_capacity,
     build_sharded_index,
+    init_sharded_state,
+    resume_jit_cache_sizes,
+    sharded_diverse_resume,
     sharded_diverse_search,
     sharded_progressive_diverse,
     sharded_topk,
+    sharded_topk_resume,
 )

@@ -22,12 +22,36 @@ Round structure (one ``step()``):
 3. Surviving lanes double their budget (clamped) for the next round; a lane
    that exhausts ``max_rounds`` finishes uncertified with its last results.
 
-Parity contract: a harvested lane's result is exactly
-``sharded_diverse_search`` for that query at the lane's final K-budget —
-every dispatch *is* that function, lanes are vmapped rows, and padding rows
-only duplicate a real lane's work. Admission order can therefore never leak
-between requests. ``tests/dist_scripts/sharded_scheduler_check.py`` enforces
-this on a 4-device host mesh, plus mid-run admission into a freed lane.
+Resumption contract (``resume=``):
+
+* ``"beam"`` (default) — truly progressive: a fixed-shape
+  ``ShardedSearchState`` pytree (per-lane, per-shard beam queue + visited
+  set, capacity sized once to the lane's max beam width) is carried across
+  rounds, so a doubled budget *continues* each shard-local beam from the
+  previous round's frontier instead of restarting ``_local_topk`` cold.
+  A lane that finishes in its **first** round is bit-exact with
+  ``sharded_diverse_search`` at its final K-budget (a fresh seed's round is
+  the scratch computation). A **multi-round** lane reuses its expansions —
+  its candidate frontier may differ from a cold run near score ties — and
+  instead carries the soundness contract: a certified lane's result passes
+  an independent Theorem-2 re-check against its final candidate frontier
+  (``last_candidates``), and recall vs the exact diverse oracle is no worse
+  than the scratch path (tested on the 10k graph), at strictly fewer
+  cumulative shard expansions.
+* ``"scratch"`` — the lockstep-parity escape hatch: every round re-runs the
+  beams from scratch at ``K * L_factor``; every harvested lane (single- or
+  multi-round) equals ``sharded_diverse_search`` at its final K-budget,
+  bit-exact on the CPU host mesh.
+  ``tests/dist_scripts/sharded_scheduler_check.py`` enforces this on a
+  4-device host mesh, plus mid-run admission into a freed lane.
+
+Either way ``result()`` reports *real* per-lane counters: ``expansions`` is
+the lane's cumulative shard-local expansion count (summed over shards; under
+``"beam"`` expansions are counted once, under ``"scratch"`` every round's
+restart re-counts its redone work — the measured difference is exactly what
+resumption saves), ``growths`` the budget doublings actually applied, and
+``exhausted`` marks a lane whose ladder hit its ``max_K``/corpus cap without
+certifying (a round-limited retirement is truncated, not exhausted).
 """
 from __future__ import annotations
 
@@ -39,7 +63,10 @@ from repro.core.batch_progressive import SignatureLog
 from repro.core.bucketing import pow2_group_sizes, pow2_padded_indices
 from repro.core.pgs import DiverseResult
 from repro.core.progressive import SearchStats
-from repro.sharded_search.search import ShardedIndex, sharded_diverse_search
+from repro.sharded_search.search import (ShardedIndex, beam_state_capacity,
+                                         init_sharded_state,
+                                         sharded_diverse_resume,
+                                         sharded_diverse_search)
 
 LANE_FREE, LANE_RUN, LANE_DONE = range(3)
 
@@ -50,7 +77,12 @@ class ShardedEngine:
     Implements ``core.backend.LaneBackend``; drive it directly (the
     ``sharded_progressive_diverse`` wrapper does) or through
     ``serve.scheduler.LaneScheduler`` for continuous batching, backpressure
-    and latency stats on an N-device mesh.
+    and latency stats on an N-device mesh. ``resume="beam"`` carries each
+    lane's shard-local beam state across budget rounds (see the module
+    docstring for the contract); ``resume="scratch"`` is the lockstep
+    bit-parity mode. ``record_candidates`` keeps each lane's last merged
+    candidate frontier host-side (``last_candidates``) so certificates can
+    be re-verified independently.
     """
 
     methods = ("sharded",)
@@ -60,7 +92,11 @@ class ShardedEngine:
                  K0: int = 32, L_factor: int = 4, merge: str = "tournament",
                  max_expansions: int = 100_000, max_rounds: int = 8,
                  max_k: int = 16, default_ef: int = 0,
-                 max_signatures: int | None = 1024):
+                 max_signatures: int | None = 1024,
+                 resume: str = "beam", state_capacity: int | None = None,
+                 record_candidates: bool = False):
+        if resume not in ("beam", "scratch"):
+            raise ValueError(f"unknown resume mode {resume!r}")
         self.index = index
         self.all_vectors = jnp.asarray(all_vectors)
         self.mesh = mesh
@@ -74,6 +110,8 @@ class ShardedEngine:
         # the mesh backend has no beam-ef knob (beam width = K * L_factor);
         # kept so the scheduler's ef plumbing is backend-neutral
         self.default_ef = default_ef
+        self.resume = resume
+        self.record_candidates = record_candidates
         self.B = int(num_lanes)
         self.n_total = index.num_shards * index.shard_size
         d = int(index.vectors.shape[-1])
@@ -87,6 +125,29 @@ class ShardedEngine:
         self.out_ids = np.full((self.B, max_k), -1, np.int32)
         self.out_sc = np.zeros((self.B, max_k), np.float32)
         self.cert = np.zeros(self.B, bool)
+        self.expansions = np.zeros(self.B, np.int64)
+        self.fresh = np.ones(self.B, bool)
+        #: per-lane (cand_ids, cand_scores) of the last dispatched round,
+        #: populated when ``record_candidates`` — the frontier a Theorem-2
+        #: re-check verifies the certificate against
+        self.last_candidates: list = [None] * self.B
+        if resume == "beam":
+            floor = beam_state_capacity(index, self.n_total, L_factor)
+            cap = state_capacity or floor
+            if cap < floor:
+                # a narrower queue silently drops beam candidates: harvest
+                # pads with -inf rows, which trivially satisfies the
+                # certificate's min_value > s_K and voids both the parity
+                # and the soundness contract — refuse at construction
+                raise ValueError(
+                    f"state_capacity={cap} is below the resumable-beam "
+                    f"floor {floor} (beam_state_capacity); the widening "
+                    "contract needs the queue to hold every rung's beam "
+                    "or the whole shard")
+            self.beam_state = init_sharded_state(index, self.B, cap, mesh,
+                                                 axis)
+        else:
+            self.beam_state = None
         self.signatures = SignatureLog(max_signatures)
         self._unharvested: list[int] = []
 
@@ -107,7 +168,8 @@ class ShardedEngine:
 
     def admit(self, lane: int, request: LaneRequest) -> None:
         """Hand a free mesh lane to ``request``: fresh budget ladder from
-        ``K0``; sibling lanes keep their in-flight budgets."""
+        ``K0``; sibling lanes keep their in-flight budgets (and, under
+        ``resume="beam"``, their in-flight beam frontiers)."""
         if self.status[lane] != LANE_FREE:
             raise RuntimeError(f"mesh lane {lane} is still occupied")
         k = int(request.k)
@@ -125,27 +187,55 @@ class ShardedEngine:
         self.out_ids[lane] = -1
         self.out_sc[lane] = 0.0
         self.cert[lane] = False
+        self.expansions[lane] = 0
+        self.fresh[lane] = True   # first dispatch re-seeds the beam state
+        self.last_candidates[lane] = None
         self.status[lane] = LANE_RUN
 
     def recycle(self, lane: int) -> None:
-        """Return a harvested lane's mesh slot to the free pool."""
+        """Return a harvested lane's mesh slot to the free pool; the lane's
+        carried beam state is cleared (re-seeded on the next admit)."""
         if self.status[lane] != LANE_DONE:
             raise RuntimeError(f"mesh lane {lane} is not finished")
+        self.fresh[lane] = True
         self.status[lane] = LANE_FREE
 
     # -- the round ----------------------------------------------------------
     def _dispatch(self, idx: np.ndarray, Kval: int, k_g: int) -> None:
         padded = pow2_padded_indices(idx)
         self.signatures.note("sharded", len(padded), Kval, k_g)
-        ids, scores, cert = sharded_diverse_search(
-            self.index, self.all_vectors, jnp.asarray(self.qs[padded]), k_g,
-            jnp.asarray(self.epss[padded], jnp.float32), Kval, self.mesh,
-            self.axis, self.L_factor, self.merge, "div_astar",
-            self.max_expansions)
         m = len(idx)
+        if self.resume == "beam":
+            ids, scores, cand_ids, cand_sc, cert, self.beam_state = \
+                sharded_diverse_resume(
+                    self.index, self.all_vectors, self.beam_state,
+                    jnp.asarray(self.qs[padded]), padded,
+                    self.fresh[padded], k_g,
+                    jnp.asarray(self.epss[padded], jnp.float32), Kval,
+                    self.mesh, self.axis, self.L_factor, self.merge,
+                    "div_astar", self.max_expansions)
+            self.fresh[idx] = False
+            # cumulative per-lane expansions since the lane's seed: the
+            # carried state's step counters summed over shards
+            steps = np.asarray(self.beam_state.steps).sum(axis=0)
+            self.expansions[idx] = steps[idx]
+        else:
+            ids, scores, cert, exp = sharded_diverse_search(
+                self.index, self.all_vectors, jnp.asarray(self.qs[padded]),
+                k_g, jnp.asarray(self.epss[padded], jnp.float32), Kval,
+                self.mesh, self.axis, self.L_factor, self.merge,
+                "div_astar", self.max_expansions, with_expansions=True)
+            cand_ids = cand_sc = None
+            # every scratch round redoes (and re-counts) its prior work
+            self.expansions[idx] += np.asarray(exp)[:m]
         self.out_ids[idx, :k_g] = np.asarray(ids)[:m]
         self.out_sc[idx, :k_g] = np.asarray(scores)[:m]
         self.cert[idx] = np.asarray(cert)[:m]
+        if self.record_candidates and cand_ids is not None:
+            cids, csc = np.asarray(cand_ids), np.asarray(cand_sc)
+            for row, lane in enumerate(idx):
+                self.last_candidates[int(lane)] = (cids[row].copy(),
+                                                   csc[row].copy())
 
     def step(self) -> list[int]:
         """Advance every occupied mesh lane one budget round; returns the
@@ -181,17 +271,24 @@ class ShardedEngine:
         return out
 
     def result(self, lane: int) -> DiverseResult:
-        """Solo-call-compatible result: equals ``sharded_diverse_search`` for
-        this query at ``stats.K_final``."""
+        """Solo-call-compatible result with the lane's real counters.
+
+        Under ``resume="scratch"`` (or a single-round lane under
+        ``resume="beam"``) the (ids, scores, certified) equal
+        ``sharded_diverse_search`` for this query at ``stats.K_final``.
+        """
         k = int(self.ks[lane])
         ids = self.out_ids[lane, :k].copy()
         sc = self.out_sc[lane, :k].copy()
         certified = bool(self.cert[lane])
         stats = SearchStats(
-            expansions=0, growths=max(0, int(self.rounds[lane]) - 1),
+            expansions=int(self.expansions[lane]),
+            growths=max(0, int(self.rounds[lane]) - 1),
             search_calls=int(self.rounds[lane]),
             div_calls=int(self.rounds[lane]),
-            certified=certified, exhausted=not certified,
+            certified=certified,
+            exhausted=bool(not certified
+                           and int(self.K[lane]) >= int(self.maxK[lane])),
             K_final=int(self.K[lane]))
         return DiverseResult(ids.astype(np.int32), sc.astype(np.float32),
                              float(sc.sum()), stats)
@@ -205,9 +302,12 @@ class ShardedEngine:
         the budget-doubling ladder from ``K0`` up to ``max_capacity``
         (default: one rung, ``K0`` only — mesh dispatches *execute* the
         search, so a full-corpus warmup is a real cost the caller opts into)
-        for each ``k`` in ``ks`` (default: ``max_k``). ``widths`` is accepted
-        for signature-compatibility with the single-host backend and
-        ignored (the mesh backend has no prefix-width stage).
+        for each ``k`` in ``ks`` (default: ``max_k``). Under
+        ``resume="beam"`` the fresh/resumed distinction is traced, so the
+        ladder covers both; signatures stay one per (group, K, k) rung.
+        ``widths`` is accepted for signature-compatibility with the
+        single-host backend and ignored (the mesh backend has no
+        prefix-width stage).
         """
         del widths
         if (self.status != LANE_FREE).any():
@@ -219,14 +319,18 @@ class ShardedEngine:
         for g in pow2_group_sizes(self.B):
             for k in ks:
                 K = min(max(self.K0, 2 * k), self.n_total)
+                self.fresh[0] = True   # each ladder seeds lane 0 afresh
                 while True:
                     self._dispatch(np.zeros(g, np.int64), K, k)
                     warmed.append(("sharded", g, K, k))
                     if K >= top:
                         break
                     K = min(K * 2, self.n_total)
-        # prewarm dispatches scribble on (free) lane 0's result row; wipe it
+        # prewarm dispatches scribble on (free) lane 0's rows; wipe them
         self.out_ids[0] = -1
         self.out_sc[0] = 0.0
         self.cert[0] = False
+        self.expansions[0] = 0
+        self.fresh[0] = True
+        self.last_candidates[0] = None
         return warmed

@@ -12,19 +12,33 @@ is independent of N, exactly the paper's candidates-then-diversify split.
 
 Naive all-gather merge is kept as ``merge="allgather"`` for the §Perf
 baseline/optimized comparison.
+
+Progressive resumption (the paper's pause/inspect/resume at mesh scale):
+the budget-doubling ladder used to re-run every shard-local beam from
+scratch at each rung. ``ShardedSearchState`` now carries each lane's
+per-shard queue + visited set across rounds — ``sharded_topk_resume``
+re-enters ``beam_search.resume_search`` under the widened stable limit, so
+a doubled budget continues expanding from the previous frontier.
+``sharded_topk`` / ``sharded_diverse_search`` remain the scratch halves
+(one fixed budget, no state) and stay the bit-parity reference; both paths
+share the same tournament merge over harvested frontiers and the same
+replicated diversify stage.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import beam_search as bs
 from repro.core import div_astar as da
+from repro.core import queue as qmod
+from repro.core.bucketing import next_pow2
 from repro.core.graph import make_flat_graph
 from repro.core.theorems import theorem2_min_value
 from repro.kernels import ops as kops
@@ -83,14 +97,16 @@ def build_sharded_index(vectors: np.ndarray, num_shards: int, metric: str,
 
 def _local_topk(vectors, neighbors, entry, base, qs, metric: str,
                 k: int, L: int):
-    """Shard-local beam search for a query batch; returns GLOBAL ids."""
+    """Shard-local beam search for a query batch; returns GLOBAL ids plus
+    the per-lane expansion (step) counts."""
     graph = make_flat_graph(vectors, neighbors, None, entry, metric)
 
     def one(q):
         state = bs.init_state(graph, q, L, use_descent=False)
         state = bs.run_search(graph, q, state, stable_limit=L)
         ids = state.queue.ids[:k]
-        return jnp.where(ids >= 0, ids + base, -1), state.queue.scores[:k]
+        return (jnp.where(ids >= 0, ids + base, -1),
+                state.queue.scores[:k], state.steps)
 
     return jax.vmap(one)(qs)
 
@@ -124,50 +140,221 @@ def _allgather_merge(ids, scores, axis: str, k: int):
 
 
 def sharded_topk(index: ShardedIndex, qs: jnp.ndarray, k: int, L: int,
-                 mesh: Mesh, axis: str = "data", merge: str = "tournament"):
-    """Global top-k over all shards; output replicated on every device."""
+                 mesh: Mesh, axis: str = "data", merge: str = "tournament",
+                 with_expansions: bool = False):
+    """Global top-k over all shards; output replicated on every device.
+
+    This is the *scratch* half: every call restarts each shard-local beam at
+    its entry point (see ``sharded_topk_resume`` for the stateful half).
+    With ``with_expansions`` the per-lane expansion counts summed over
+    shards come back as a third output.
+    """
     p = index.num_shards
 
     def shard_fn(vectors, neighbors, entries, bases, qs):
-        ids, scores = _local_topk(vectors[0], neighbors[0], entries[0],
-                                  bases[0], qs, index.metric, k, L)
+        ids, scores, steps = _local_topk(vectors[0], neighbors[0], entries[0],
+                                         bases[0], qs, index.metric, k, L)
         if p > 1:
             if merge == "tournament":
                 ids, scores = _tournament_merge(ids, scores, axis, p)
             else:
                 ids, scores = _allgather_merge(ids, scores, axis, k)
-        return ids, scores
+        return ids, scores, jax.lax.psum(steps, axis)
 
     shard_spec = P(axis)
     fn = shard_map(
         shard_fn, mesh,
         in_specs=(shard_spec, shard_spec, shard_spec, shard_spec, P()),
-        out_specs=(P(), P()),
+        out_specs=(P(), P(), P()),
     )
-    return fn(index.vectors, index.neighbors, index.entries, index.bases, qs)
+    ids, scores, expansions = fn(index.vectors, index.neighbors,
+                                 index.entries, index.bases, qs)
+    if with_expansions:
+        return ids, scores, expansions
+    return ids, scores
 
 
-def sharded_diverse_search(index: ShardedIndex, all_vectors: jnp.ndarray,
-                           qs: jnp.ndarray, k: int, eps, K: int,
-                           mesh: Mesh, axis: str = "data",
-                           L_factor: int = 4, merge: str = "tournament",
-                           method: str = "div_astar",
-                           max_expansions: int = 100_000):
-    """Distributed diverse search: sharded candidates + replicated diversify.
+# ------------------------------------------------- resumable shard beams ----
 
-    Returns (ids[B, k], scores[B, k], certified[B]).
-    ``all_vectors`` [N, d] is the global database used to gather candidate
-    vectors for the adjacency build (replicated or resharded by the caller).
-    ``eps`` may be a scalar or a per-query ``[B]`` vector (the scheduler's
-    query-owned diversification level): lanes with different eps share one
-    dispatch because eps is traced, never baked into the compilation.
+class ShardedSearchState(NamedTuple):
+    """Fixed-shape per-lane, per-shard beam state carried across budget
+    rounds (leading axis sharded along the mesh's data axis).
+
+    One lane's slice ``(ids[s, b], scores[s, b], stable[s, b], visited[s, b],
+    steps[s, b])`` is exactly a ``beam_search.SearchState`` for that lane's
+    beam on shard ``s``. Capacity is sized once, at the lane's max beam
+    width (``beam_state_capacity``), so the queue never changes shape as the
+    budget ladder doubles — the "wider queue" of each rung is the same
+    queue under a wider stable limit.
     """
-    ids, scores = sharded_topk(index, qs, K, K * L_factor, mesh, axis, merge)
-    epss = jnp.broadcast_to(jnp.asarray(eps, jnp.float32), (qs.shape[0],))
+    ids: jnp.ndarray      # int32[P, B, C] shard-local candidate ids
+    scores: jnp.ndarray   # f32[P, B, C]
+    stable: jnp.ndarray   # bool[P, B, C]
+    visited: jnp.ndarray  # bool[P, B, Ns]
+    steps: jnp.ndarray    # int32[P, B]
+
+    @property
+    def capacity(self) -> int:
+        return self.ids.shape[-1]
+
+
+def beam_state_capacity(index: ShardedIndex, K_max: int,
+                        L_factor: int = 4) -> int:
+    """Queue width for resumable shard-local beams.
+
+    Wide enough that either no dispatched rung's beam (``K * L_factor``)
+    ever drops a candidate, or the whole shard fits — the precondition for
+    the first round being bit-exact with the scratch search at the narrow
+    width (see ``beam_search.resume_search``'s widening contract).
+    """
+    return min(next_pow2(max(int(K_max) * int(L_factor), 1)),
+               next_pow2(index.shard_size))
+
+
+def init_sharded_state(index: ShardedIndex, num_lanes: int, capacity: int,
+                       mesh: Mesh | None = None,
+                       axis: str = "data") -> ShardedSearchState:
+    """Empty (all lanes unseeded) state, device-sharded along ``axis``."""
+    p, ns = index.num_shards, index.shard_size
+    leaves = ShardedSearchState(
+        ids=jnp.full((p, num_lanes, capacity), -1, jnp.int32),
+        scores=jnp.full((p, num_lanes, capacity), -jnp.inf, jnp.float32),
+        stable=jnp.ones((p, num_lanes, capacity), jnp.bool_),
+        visited=jnp.zeros((p, num_lanes, ns), jnp.bool_),
+        steps=jnp.zeros((p, num_lanes), jnp.int32),
+    )
+    if mesh is None:
+        return leaves
+    sharding = NamedSharding(mesh, P(axis))
+    return ShardedSearchState(
+        *(jax.device_put(leaf, sharding) for leaf in leaves))
+
+
+_RESUME_DISPATCH_FNS: dict[tuple, object] = {}
+
+
+def _resume_dispatch_fn(mesh: Mesh, axis: str, metric: str, p: int, K: int,
+                        C: int, merge: str):
+    """Jitted shard_map dispatch for one (mesh, K-harvest, capacity) rung.
+
+    Cached on its static key so repeat traffic re-enters the same jit
+    callable — the resume path's equivalent of the single-host engine's
+    module-level jits (``resume_jit_cache_sizes`` audits these).
+    """
+    key = (mesh, axis, metric, p, K, C, merge)
+    fn = _RESUME_DISPATCH_FNS.get(key)
+    if fn is not None:
+        return fn
+
+    def shard_fn(vectors, neighbors, entries, bases,
+                 s_ids, s_sc, s_st, s_vis, s_steps,
+                 qs, idx, fresh, limit, budget):
+        graph = make_flat_graph(vectors[0], neighbors[0], None, entries[0],
+                                metric)
+        base = bases[0]
+        ids_b, sc_b, st_b = s_ids[0], s_sc[0], s_st[0]       # [B, C]
+        vis_b, steps_b = s_vis[0], s_steps[0]                # [B, Ns], [B]
+
+        def one(q, f, ids, sc, st, vis, steps):
+            cur = bs.SearchState(qmod.Queue(ids, sc, st), vis, steps)
+            seeded = bs.init_state(graph, q, C, use_descent=False)
+            cur = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(f, a, b), seeded, cur)
+            cur = bs.resume_search(graph, q, cur, stable_limit=limit,
+                                   step_budget=budget)
+            h = min(K, C)
+            hid = cur.queue.ids[:h]
+            out_ids = jnp.where(hid >= 0, hid + base, -1)
+            out_sc = cur.queue.scores[:h]
+            if h < K:              # budget exceeds the shard's own content
+                pad = K - h
+                out_ids = jnp.concatenate(
+                    [out_ids, jnp.full((pad,), -1, jnp.int32)])
+                out_sc = jnp.concatenate(
+                    [out_sc, jnp.full((pad,), qmod.NEG_INF, jnp.float32)])
+            return out_ids, out_sc, cur
+
+        out_ids, out_sc, new = jax.vmap(one)(
+            qs, fresh, ids_b[idx], sc_b[idx], st_b[idx], vis_b[idx],
+            steps_b[idx])
+        # scatter the group's rows back; padded duplicate indices recompute
+        # the same lane from the same state, so duplicate writes carry
+        # identical values and the scatter stays deterministic
+        ids_b = ids_b.at[idx].set(new.queue.ids)
+        sc_b = sc_b.at[idx].set(new.queue.scores)
+        st_b = st_b.at[idx].set(new.queue.stable)
+        vis_b = vis_b.at[idx].set(new.visited)
+        steps_b = steps_b.at[idx].set(new.steps)
+        if p > 1:
+            if merge == "tournament":
+                out_ids, out_sc = _tournament_merge(out_ids, out_sc, axis, p)
+            else:
+                out_ids, out_sc = _allgather_merge(out_ids, out_sc, axis, K)
+        return (out_ids, out_sc, ids_b[None], sc_b[None], st_b[None],
+                vis_b[None], steps_b[None])
+
+    sspec = P(axis)
+    mapped = shard_map(
+        shard_fn, mesh,
+        in_specs=(sspec, sspec, sspec, sspec,
+                  sspec, sspec, sspec, sspec, sspec,
+                  P(), P(), P(), P(), P()),
+        out_specs=(P(), P(), sspec, sspec, sspec, sspec, sspec),
+    )
+    fn = jax.jit(mapped)
+    _RESUME_DISPATCH_FNS[key] = fn
+    return fn
+
+
+def resume_jit_cache_sizes() -> dict[str, int]:
+    """Compile-cache audit for the resume dispatch ladder (test hook,
+    mirroring ``core.batch_progressive.jit_cache_sizes``): the number of
+    distinct dispatch rungs and the total jit traces behind them. A serving
+    pass that recompiles shows up as either number growing."""
+    traces = sum(int(f._cache_size()) for f in _RESUME_DISPATCH_FNS.values()
+                 if hasattr(f, "_cache_size"))
+    return dict(dispatch_fns=len(_RESUME_DISPATCH_FNS), traces=traces)
+
+
+def sharded_topk_resume(index: ShardedIndex, state: ShardedSearchState,
+                        qs: jnp.ndarray, lane_idx, fresh, K: int, L: int,
+                        mesh: Mesh, axis: str = "data",
+                        merge: str = "tournament"):
+    """Resume (or seed) the shard-local beams of the lanes in ``lane_idx``.
+
+    ``qs``/``fresh`` are the group's query rows and seed flags (``fresh``
+    is traced, so seeding vs resuming shares one compilation). Expands each
+    selected lane's beam until its first ``L`` entries are stable —
+    continuing from the carried frontier, never redoing prior expansions —
+    then harvests each shard's top-``K`` prefix and runs the same
+    tournament merge as the scratch path. Returns
+    ``(ids[g, K], scores[g, K], new_state)``; lanes outside ``lane_idx``
+    keep their bits. A freshly seeded lane's round is bit-exact with
+    ``sharded_topk`` at the same ``(K, L)``.
+    """
+    p = index.num_shards
+    fn = _resume_dispatch_fn(mesh, axis, index.metric, p, int(K),
+                             state.capacity, merge)
+    out = fn(index.vectors, index.neighbors, index.entries, index.bases,
+             state.ids, state.scores, state.stable, state.visited,
+             state.steps, jnp.asarray(qs, jnp.float32),
+             jnp.asarray(lane_idx, jnp.int32),
+             jnp.asarray(fresh, jnp.bool_),
+             jnp.asarray(L, jnp.int32),
+             jnp.asarray(4 * int(L) + 64, jnp.int32))
+    ids, scores, *leaves = out
+    return ids, scores, ShardedSearchState(*leaves)
+
+
+def _diversify_batch(all_vectors, metric: str, ids, scores, epss, k: int,
+                     K: int, method: str, max_expansions: int):
+    """Replicated diversify over merged candidates — the single stage both
+    the scratch and the resume paths run, so a freshly seeded resume round
+    stays bit-exact with ``sharded_diverse_search`` end to end."""
 
     def diversify(cand_ids, cand_scores, eps_q):
         vecs = all_vectors[jnp.maximum(cand_ids, 0)]
-        adj = kops.pairwise_adjacency(vecs, eps_q, index.metric, cand_ids >= 0)
+        adj = kops.pairwise_adjacency(vecs, eps_q, metric, cand_ids >= 0)
         if method == "greedy":
             sel, count = kops.greedy_diversify(cand_scores, adj, k,
                                                valid=cand_ids >= 0)
@@ -186,13 +373,70 @@ def sharded_diverse_search(index: ShardedIndex, all_vectors: jnp.ndarray,
     return jax.vmap(diversify)(ids, scores, epss)
 
 
+def sharded_diverse_search(index: ShardedIndex, all_vectors: jnp.ndarray,
+                           qs: jnp.ndarray, k: int, eps, K: int,
+                           mesh: Mesh, axis: str = "data",
+                           L_factor: int = 4, merge: str = "tournament",
+                           method: str = "div_astar",
+                           max_expansions: int = 100_000,
+                           with_expansions: bool = False):
+    """Distributed diverse search: sharded candidates + replicated diversify.
+
+    Returns (ids[B, k], scores[B, k], certified[B]) — plus the per-lane
+    shard-expansion totals as a fourth output with ``with_expansions``.
+    ``all_vectors`` [N, d] is the global database used to gather candidate
+    vectors for the adjacency build (replicated or resharded by the caller).
+    ``eps`` may be a scalar or a per-query ``[B]`` vector (the scheduler's
+    query-owned diversification level): lanes with different eps share one
+    dispatch because eps is traced, never baked into the compilation.
+    """
+    ids, scores, expansions = sharded_topk(index, qs, K, K * L_factor, mesh,
+                                           axis, merge, with_expansions=True)
+    epss = jnp.broadcast_to(jnp.asarray(eps, jnp.float32), (qs.shape[0],))
+    out = _diversify_batch(all_vectors, index.metric, ids, scores, epss, k,
+                           K, method, max_expansions)
+    if with_expansions:
+        return (*out, expansions)
+    return out
+
+
+def sharded_diverse_resume(index: ShardedIndex, all_vectors: jnp.ndarray,
+                           state: ShardedSearchState, qs: jnp.ndarray,
+                           lane_idx, fresh, k: int, eps, K: int,
+                           mesh: Mesh, axis: str = "data",
+                           L_factor: int = 4, merge: str = "tournament",
+                           method: str = "div_astar",
+                           max_expansions: int = 100_000):
+    """One resumable budget round: continue the selected lanes' shard-local
+    beams to the ``K * L_factor`` stable limit, merge, diversify.
+
+    Returns (ids[g, k], scores[g, k], cand_ids[g, K], cand_scores[g, K],
+    certified[g], new_state). The candidate frontier comes back so callers
+    can re-verify the Theorem-2 certificate independently of the engine.
+    Lanes dispatched with ``fresh`` seeds are bit-exact with
+    ``sharded_diverse_search`` at the same budget; resumed lanes instead
+    satisfy the certificate-soundness + recall contract (their candidate
+    frontier is at least as deep as a scratch one, but expansion order —
+    hence near-tie content — may differ).
+    """
+    ids, scores, new_state = sharded_topk_resume(
+        index, state, qs, lane_idx, fresh, K, K * L_factor, mesh, axis,
+        merge)
+    epss = jnp.broadcast_to(jnp.asarray(eps, jnp.float32), (qs.shape[0],))
+    out_ids, out_sc, cert = _diversify_batch(
+        all_vectors, index.metric, ids, scores, epss, k, K, method,
+        max_expansions)
+    return out_ids, out_sc, ids, scores, cert, new_state
+
+
 def sharded_progressive_diverse(index: ShardedIndex, all_vectors: jnp.ndarray,
                                 qs: jnp.ndarray, k: int, eps,
                                 mesh: Mesh, axis: str = "data",
                                 K0: int = 32, L_factor: int = 4,
                                 merge: str = "tournament",
                                 max_expansions: int = 100_000,
-                                max_rounds: int = 8):
+                                max_rounds: int = 8,
+                                resume: str = "beam"):
     """Progressive distributed diverse search (the paper's loop at mesh scale).
 
     The fixed-budget ``sharded_diverse_search`` can return uncertified lanes
@@ -209,10 +453,17 @@ def sharded_progressive_diverse(index: ShardedIndex, all_vectors: jnp.ndarray,
 
     Returns (ids[B, k], scores[B, k], certified[B], K_final[B]) with
     ``K_final`` the per-lane budget at which each lane stopped — always a
-    budget that was actually dispatched, so every lane's (ids, scores,
-    certified) equals ``sharded_diverse_search`` for that query at its
-    ``K_final``. (Previously a round-limited lane reported the doubled
-    budget it never ran.)
+    budget that was actually dispatched.
+
+    Resumption contract (``resume``): with the default ``"beam"`` each
+    budget-doubling round *continues* the shard-local beams from the
+    previous round's frontier (``ShardedSearchState``), so a lane that
+    finishes in its first round still equals ``sharded_diverse_search`` at
+    its ``K_final`` bit-exactly, while a multi-round lane reuses its prior
+    expansions and instead carries the certificate-soundness + recall
+    contract (see ``ShardedEngine``). ``resume="scratch"`` restarts every
+    round cold — the lockstep-parity mode in which *every* lane equals
+    ``sharded_diverse_search`` at its ``K_final``.
     """
     from repro.core.backend import LaneRequest
     from repro.sharded_search.engine import ShardedEngine
@@ -221,7 +472,7 @@ def sharded_progressive_diverse(index: ShardedIndex, all_vectors: jnp.ndarray,
     eng = ShardedEngine(index, all_vectors, mesh, num_lanes=B, axis=axis,
                         K0=K0, L_factor=L_factor, merge=merge,
                         max_expansions=max_expansions, max_rounds=max_rounds,
-                        max_k=k)
+                        max_k=k, resume=resume)
     qs_np = np.asarray(qs, np.float32)
     epss = np.broadcast_to(np.asarray(eps, np.float64), (B,))
     for lane in range(B):

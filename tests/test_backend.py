@@ -92,11 +92,15 @@ def test_sharded_engine_lifecycle(tiny_world):
 def test_scheduler_over_sharded_backend_parity(tiny_world):
     """The unmodified LaneScheduler serving queued requests over recycled
     mesh lanes: every result must equal sharded_diverse_search for that
-    query at the lane's final K-budget (the mesh parity contract)."""
+    query at the lane's final K-budget — the mesh parity contract, which
+    resume="scratch" guarantees for multi-round lanes too (the default
+    resume="beam" narrows it to single-round lanes; tests/
+    test_sharded_resume.py covers that contract)."""
     import jax.numpy as jnp
 
     x, index, mesh, qs = tiny_world
-    eng = ShardedEngine(index, x, mesh, num_lanes=2, K0=16, max_k=8)
+    eng = ShardedEngine(index, x, mesh, num_lanes=2, K0=16, max_k=8,
+                        resume="scratch")
     sched = LaneScheduler(backend=eng, prewarm=False, max_pending=8)
     reqs = [sched.submit(qs[i], 4, 4.0) for i in range(6)]   # 6 reqs, 2 lanes
     sched.drain()

@@ -1,0 +1,332 @@
+"""Resumable shard-local beams: the ShardedEngine resumption contract.
+
+``resume="beam"`` carries a fixed-shape ``ShardedSearchState`` across budget
+rounds. The contract under test:
+
+* a lane that finishes in its first round is bit-exact with
+  ``sharded_diverse_search`` at its final K-budget (both resume modes);
+* a multi-round lane under ``"beam"`` does strictly fewer cumulative shard
+  expansions than ``"scratch"`` at the same final K-budget;
+* every certified ``"beam"`` lane passes an independent Theorem-2 re-check
+  against its final candidate frontier;
+* recall vs the exact diverse oracle is no worse than the scratch path on
+  the 10k test graph (slow);
+* the prewarm ladder covers ``max_capacity > K0`` and repeat mixed-eps
+  traffic triggers zero recompiles.
+
+The 4-forced-host-device variant of the expansion/recall/certificate checks
+lives in ``tests/dist_scripts/sharded_scheduler_check.py``.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import make_mesh
+from repro.core.backend import LaneRequest
+from repro.core.theorems import theorem2_recheck
+from repro.sharded_search import (ShardedEngine, build_sharded_index,
+                                  resume_jit_cache_sizes,
+                                  sharded_diverse_search,
+                                  sharded_progressive_diverse, sharded_topk)
+
+
+@pytest.fixture(scope="module")
+def world():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(256, 12)).astype(np.float32)
+    index = build_sharded_index(x, 1, "ip", M=8)
+    mesh = make_mesh((1,), ("data",))
+    qs = rng.normal(size=(6, 12)).astype(np.float32)
+    return x, index, mesh, qs
+
+
+def _drive(eng, qs, k, epss, max_K=None):
+    """Admit one request per lane, run to completion, return lane results."""
+    for lane in range(qs.shape[0]):
+        eng.admit(lane, LaneRequest(q=qs[lane], k=k, eps=float(epss[lane]),
+                                    method="sharded", max_K=max_K))
+    out = {}
+    while eng.active_count():
+        eng.step()
+        for lane, res in eng.harvest():
+            out[lane] = res
+            eng.recycle(lane)
+    return out
+
+
+# -------------------------------------------------- single-round parity ----
+
+@pytest.mark.parametrize("resume", ["scratch", "beam"])
+def test_single_round_lanes_bit_exact(world, resume):
+    """Either resume mode: a lane certified in round 1 equals
+    sharded_diverse_search at its K_final, bit for bit — and its expansion
+    count equals the scratch reference's (the seeded round IS the scratch
+    computation)."""
+    x, index, mesh, qs = world
+    eng = ShardedEngine(index, x, mesh, num_lanes=6, K0=16, max_k=8,
+                        resume=resume)
+    out = _drive(eng, qs, 4, np.full(6, 4.0))
+    single = [lane for lane, r in out.items() if r.stats.search_calls == 1]
+    assert single, "fixture produced no single-round lane"
+    for lane in single:
+        r = out[lane]
+        ids, sc, cert, exp = sharded_diverse_search(
+            index, jnp.asarray(x), jnp.asarray(qs[lane][None]), 4, 4.0,
+            int(r.stats.K_final), mesh, with_expansions=True)
+        np.testing.assert_array_equal(np.asarray(ids)[0], r.ids)
+        np.testing.assert_array_equal(np.asarray(sc)[0], r.scores)
+        assert bool(np.asarray(cert)[0]) == r.stats.certified
+        assert int(np.asarray(exp)[0]) == r.stats.expansions
+
+
+def test_scratch_mode_full_ladder_parity(world):
+    """resume="scratch" is the lockstep-parity mode: EVERY lane (multi-round
+    included) equals sharded_diverse_search at its K_final."""
+    x, index, mesh, qs = world
+    eng = ShardedEngine(index, x, mesh, num_lanes=6, K0=16, max_k=8,
+                        resume="scratch")
+    out = _drive(eng, qs, 4, np.full(6, 4.0))
+    assert any(r.stats.search_calls > 1 for r in out.values())
+    for lane, r in out.items():
+        ids, sc, cert = sharded_diverse_search(
+            index, jnp.asarray(x), jnp.asarray(qs[lane][None]), 4, 4.0,
+            int(r.stats.K_final), mesh)
+        np.testing.assert_array_equal(np.asarray(ids)[0], r.ids)
+        np.testing.assert_array_equal(np.asarray(sc)[0], r.scores)
+        assert bool(np.asarray(cert)[0]) == r.stats.certified
+
+
+# ------------------------------------------------ multi-round resumption ----
+
+def test_multiround_beam_fewer_expansions_same_budget(world):
+    """The tentpole measurement: capped at two rounds, both modes retire
+    uncertified lanes at the same K-budget, and every multi-round beam lane
+    reports strictly fewer cumulative shard expansions than its scratch
+    twin. Real counters, not the old hardcoded expansions=0."""
+    x, index, mesh, qs = world
+    epss = np.full(6, 4.0)
+    outs = {}
+    for mode in ("scratch", "beam"):
+        eng = ShardedEngine(index, x, mesh, num_lanes=6, K0=16, max_k=8,
+                            resume=mode, max_rounds=2)
+        outs[mode] = _drive(eng, qs, 4, epss)
+    multi = [lane for lane, r in outs["scratch"].items()
+             if r.stats.search_calls > 1]
+    assert multi, "fixture produced no multi-round lane"
+    for lane in multi:
+        s, b = outs["scratch"][lane], outs["beam"][lane]
+        # round-1 results are bit-exact across modes, so the survivor sets
+        # match and the capped ladder pins both to the same final budget
+        assert b.stats.search_calls == s.stats.search_calls
+        assert b.stats.K_final == s.stats.K_final
+        assert b.stats.growths == s.stats.growths == 1
+        assert 0 < b.stats.expansions < s.stats.expansions
+
+
+def test_state_capacity_below_floor_rejected(world):
+    """A beam-state queue narrower than beam_state_capacity would silently
+    drop candidates and void the parity/soundness contract — the engine
+    must refuse it at construction."""
+    x, index, mesh, qs = world
+    with pytest.raises(ValueError, match="resumable-beam floor"):
+        ShardedEngine(index, x, mesh, num_lanes=2, K0=16, max_k=8,
+                      resume="beam", state_capacity=8)
+    # at or above the floor is fine
+    ShardedEngine(index, x, mesh, num_lanes=2, K0=16, max_k=8,
+                  resume="beam", state_capacity=512)
+
+
+def test_exhausted_flag_semantics(world):
+    """exhausted marks a ladder that hit its max_K cap without certifying;
+    a round-limited retirement is truncated, not exhausted."""
+    x, index, mesh, qs = world
+    # eps so low the diversity graph is complete (sim > eps everywhere):
+    # only singleton sets are diverse, so no certificate can ever fire
+    eng = ShardedEngine(index, x, mesh, num_lanes=2, K0=16, max_k=8,
+                        resume="beam", max_rounds=2)
+    out = _drive(eng, qs[:2], 4, np.full(2, -1e6))
+    for r in out.values():
+        assert not r.stats.certified and not r.stats.exhausted  # truncated
+    eng = ShardedEngine(index, x, mesh, num_lanes=2, K0=16, max_k=8,
+                        resume="beam")
+    out = _drive(eng, qs[:2], 4, np.full(2, -1e6), max_K=32)
+    for r in out.values():
+        assert not r.stats.certified and r.stats.exhausted
+        assert r.stats.K_final == 32
+
+
+# ------------------------------------------------- certificate soundness ----
+
+@pytest.mark.parametrize("resume", ["scratch", "beam"])
+def test_certified_lanes_pass_independent_recheck(world, resume):
+    """A certified lane's result must survive a Theorem-2 re-check run
+    independently (host-side div-A* over the lane's recorded final
+    candidate frontier) — the soundness half of the resumption contract."""
+    x, index, mesh, qs = world
+    eng = ShardedEngine(index, x, mesh, num_lanes=6, K0=16, max_k=8,
+                        resume=resume, record_candidates=True)
+    out = _drive(eng, qs, 4, np.full(6, 4.0))
+    certified = [lane for lane, r in out.items() if r.stats.certified]
+    assert certified
+    for lane in certified:
+        r = out[lane]
+        if resume == "scratch":
+            assert eng.last_candidates[lane] is None
+            cand_ids, cand_sc, _ = (np.asarray(a)[0] for a in sharded_topk(
+                index, jnp.asarray(qs[lane][None]), int(r.stats.K_final),
+                int(r.stats.K_final) * eng.L_factor, mesh,
+                with_expansions=True))
+        else:
+            cand_ids, cand_sc = eng.last_candidates[lane]
+        ok, sel_ids = theorem2_recheck(x, index.metric, cand_ids, cand_sc,
+                                       4.0, 4)
+        assert ok, f"lane {lane}: certificate does not re-verify"
+        np.testing.assert_array_equal(sel_ids, r.ids)
+
+
+# ------------------------------------------- scheduler over beam (default) --
+
+def test_scheduler_over_beam_backend(world):
+    """The shipped default path: LaneScheduler continuous batching over a
+    resume="beam" ShardedEngine, more requests than lanes so freed slots
+    are re-admitted (re-seeding recycled beam state). Single-round results
+    keep bit-exact parity; every result carries real counters and satisfies
+    the lane's K-budget ladder."""
+    from repro.serve.scheduler import LaneScheduler
+
+    x, index, mesh, qs = world
+    eng = ShardedEngine(index, x, mesh, num_lanes=2, K0=16, max_k=8,
+                        resume="beam")
+    sched = LaneScheduler(backend=eng, prewarm=False, max_pending=8)
+    reqs = [sched.submit(qs[i], 4, 4.0) for i in range(6)]  # 6 reqs, 2 lanes
+    sched.drain()
+    ladder = {min(16 << j, 256) for j in range(10)}
+    solo = _drive(ShardedEngine(index, x, mesh, num_lanes=6, K0=16, max_k=8,
+                                resume="beam"), qs, 4, np.full(6, 4.0))
+    for i, r in enumerate(reqs):
+        st = r.result.stats
+        assert st.expansions > 0 and st.K_final in ladder
+        # scheduler admission order must not leak into per-lane results:
+        # each request equals the same query driven solo through a beam lane
+        np.testing.assert_array_equal(r.result.ids, solo[i].ids)
+        np.testing.assert_array_equal(r.result.scores, solo[i].scores)
+        assert st.certified == solo[i].stats.certified
+        assert st.K_final == solo[i].stats.K_final
+        assert st.expansions == solo[i].stats.expansions
+        if st.search_calls == 1:
+            ids, sc, _ = sharded_diverse_search(
+                index, jnp.asarray(x), jnp.asarray(qs[i][None]), 4, 4.0,
+                int(st.K_final), mesh)
+            np.testing.assert_array_equal(np.asarray(ids)[0], r.result.ids)
+            np.testing.assert_array_equal(np.asarray(sc)[0], r.result.scores)
+    assert sched.latency_stats()["completed"] == 6
+
+
+# ------------------------------------------------------------- wrapper -----
+
+def test_wrapper_resume_modes(world):
+    """sharded_progressive_diverse threads the resume mode through: scratch
+    keeps every-lane parity, beam keeps single-round parity and dispatched
+    K_final budgets."""
+    x, index, mesh, qs = world
+    ladder = {min(16 << j, 256) for j in range(10)}
+    for mode in ("scratch", "beam"):
+        ids, sc, cert, K_final = sharded_progressive_diverse(
+            index, np.asarray(x), qs, k=4, eps=4.0, mesh=mesh, K0=16,
+            resume=mode)
+        assert set(int(K) for K in K_final) <= ladder
+        for i in range(qs.shape[0]):
+            if mode == "beam" and int(K_final[i]) > 16:
+                continue          # multi-round beam lanes: soundness, not bits
+            rids, rsc, rcert = sharded_diverse_search(
+                index, jnp.asarray(x), jnp.asarray(qs[i][None]), 4, 4.0,
+                int(K_final[i]), mesh)
+            np.testing.assert_array_equal(np.asarray(rids)[0], ids[i])
+            np.testing.assert_array_equal(np.asarray(rsc)[0], sc[i])
+            assert bool(np.asarray(rcert)[0]) == bool(cert[i])
+
+
+# ------------------------------------------------- prewarm / recompiles ----
+
+@pytest.mark.parametrize("resume", ["scratch", "beam"])
+def test_prewarm_walks_full_ladder_and_freezes(world, resume):
+    """prewarm(max_capacity > K0) walks every budget rung × pow2 group × k;
+    repeat mixed-(k, eps) traffic after freeze() triggers zero unplanned
+    signatures and zero new resume-dispatch compilations."""
+    x, index, mesh, qs = world
+    eng = ShardedEngine(index, x, mesh, num_lanes=4, K0=16, max_k=8,
+                        resume=resume)
+    warmed = eng.prewarm(max_capacity=64, ks=(4, 8))
+    rungs = {(g, K, k) for _, g, K, k in warmed}
+    assert rungs == {(g, K, k) for g in (1, 2, 4) for K in (16, 32, 64)
+                     for k in (4, 8)}
+    eng.signature_log.freeze()
+    sizes_after_warm = resume_jit_cache_sizes()
+    rng = np.random.default_rng(0)
+    for repeat in range(2):
+        reqs = list(rng.permutation(8))
+        ks = [4 if i % 2 else 8 for i in range(8)]
+        epss = [3.5 if i % 3 else 4.5 for i in range(8)]
+        lane_req = 0
+        served = 0
+        while served < len(reqs):
+            for lane in eng.free_lanes():
+                if lane_req >= len(reqs):
+                    break
+                i = reqs[lane_req]
+                eng.admit(int(lane), LaneRequest(
+                    q=qs[i % 6], k=ks[lane_req], eps=epss[lane_req],
+                    method="sharded", max_K=64))
+                lane_req += 1
+            eng.step()
+            for lane, _ in eng.harvest():
+                eng.recycle(lane)
+                served += 1
+        if resume == "beam":
+            assert resume_jit_cache_sizes() == sizes_after_warm, repeat
+    assert eng.signature_log.unplanned == [], eng.signature_log.unplanned
+
+
+# ------------------------------------------------------ 10k recall (slow) --
+
+@pytest.mark.slow
+def test_resume_recall_no_worse_than_scratch_10k():
+    """On the 10k test graph, beam-resumed lanes must reach recall vs the
+    exact diverse oracle no worse than the scratch path, at strictly fewer
+    cumulative expansions over the multi-round lanes."""
+    from repro.core.baselines import div_astar_oracle
+
+    rng = np.random.default_rng(5)
+    n, d = 10_000, 32
+    centers = rng.normal(size=(64, d)) * 0.25
+    x = centers[rng.integers(0, 64, n)] + rng.normal(size=(n, d))
+    x = (x / np.maximum(np.linalg.norm(x, axis=1, keepdims=True),
+                        1e-9)).astype(np.float32)
+    index = build_sharded_index(x, 1, "cos", M=8)
+    mesh = make_mesh((1,), ("data",))
+    qs = x[rng.integers(0, n, 6)] + 0.05 * rng.normal(size=(6, d))
+    qs = (qs / np.maximum(np.linalg.norm(qs, axis=1, keepdims=True),
+                          1e-9)).astype(np.float32)
+    k, eps = 5, 0.35   # dense enough G^eps that lanes need 3-4 rounds
+    outs = {}
+    for mode in ("scratch", "beam"):
+        eng = ShardedEngine(index, x, mesh, num_lanes=6, K0=16, max_k=8,
+                            resume=mode, max_rounds=4)
+        outs[mode] = _drive(eng, qs, k, np.full(6, eps))
+    multi = [lane for lane, r in outs["scratch"].items()
+             if r.stats.search_calls > 1]
+    assert multi, "10k fixture produced no multi-round lane"
+
+    def mean_recall(out):
+        recs = []
+        for lane, r in out.items():
+            o = div_astar_oracle(x, "cos", qs[lane], k, eps, X=512)
+            truth = set(int(i) for i in o.ids if i >= 0)
+            got = set(int(i) for i in r.ids if i >= 0)
+            recs.append(len(got & truth) / max(len(truth), 1))
+        return float(np.mean(recs))
+
+    assert mean_recall(outs["beam"]) >= mean_recall(outs["scratch"])
+    for lane in multi:
+        assert (outs["beam"][lane].stats.expansions
+                < outs["scratch"][lane].stats.expansions)
