@@ -37,10 +37,23 @@ Three modes:
   comes from ``repro.serve.scheduler`` so benchmark and scheduler stats
   cannot drift.
 
-``--json PATH`` appends the run to a stable-schema JSON trend file (see
-``BENCH_SCHEMA``): one ``modes`` entry per bench mode, merged across
-invocations, so CI can upload a single ``BENCH_pr4.json`` artifact with the
-skewed-admission and open-system numbers side by side.
+  ``--tenants N --policy {fifo,drr,slo_cost}`` turns the open mode into the
+  multi-tenant fairness bench: a skewed two-tenant mix (tenant ``heavy``
+  issues sparse heavy-eps / k=10 requests, tenant ``light`` floods cheap
+  low-eps / k=5 ones) is served under the chosen admission policy
+  (``serve.policies``). Per-tenant p50/p99/fairness, the cost model's
+  calibration error, and the full request conservation law (served + shed
+  + deferred == offered; violation exits nonzero — the CI ``policy-smoke``
+  gate) are reported per load point. With ``--policy slo_cost`` the
+  ``--slo`` value becomes the per-tenant latency budget (shed/defer at
+  submit) instead of installing the legacy callback.
+
+``--json PATH`` merges the run into a stable-schema JSON trend file
+(``schema_version`` 2 — see ``docs/BENCH_SCHEMA.md`` for the field map and
+the version-1 compatibility rule): one ``modes`` entry per bench mode,
+point entries merged by key across invocations, so CI can upload a single
+``BENCH_pr5.json`` artifact with skewed-admission, open-system, and
+policy/fairness numbers side by side.
 """
 from __future__ import annotations
 
@@ -203,20 +216,59 @@ def run_skewed(n: int = D.N_DEFAULT, requests: int = 64, lanes: int = 16,
 
 # ------------------------------------------------------------- open mode ----
 
+def make_tenant_workload(x, metric, requests: int, tenants: int = 2,
+                         heavy_frac: float = 1 / 16, seed: int = 7):
+    """Skewed multi-tenant request stream for the fairness bench.
+
+    Tenant ``heavy`` issues *sparse* heavy-diversification requests
+    (phi ~ medium eps, k=10) — the expensive tail the paper's cost
+    asymmetry produces; tenant ``light`` floods cheap low-eps k=5 requests.
+    Under FIFO the sparse tenant's occasional request queues behind the
+    flood; a fair policy should not let the flood starve it. The default
+    ``heavy_frac`` keeps the heavy tenant's *work* share (request rate x
+    per-request expansions, ~8x a light request's) well under half the
+    system, so a work-fair scheduler has slack to insulate it — a heavy
+    tenant offering *more* than its fair share gets throttled instead,
+    which is the policy working as designed, not the showcase. With
+    ``tenants > 2`` the extra tenants round-robin over the light stream
+    (generic smoke shape). Returns (queries, ks, epss, heavy_mask, names).
+    """
+    rng = np.random.default_rng(seed)
+    queries = D.queries_for(x, requests)
+    eps_light = D.calibrate_eps(x, metric, D.PHI_TARGETS["low"])
+    eps_heavy = D.calibrate_eps(x, metric, D.PHI_TARGETS["medium"])
+    heavy = rng.random(requests) < heavy_frac
+    if not heavy.any():
+        heavy[requests // 2] = True   # the bench needs both tenants present
+    ks = np.where(heavy, 10, 5)
+    epss = np.where(heavy, eps_heavy, eps_light)
+    if tenants <= 2:
+        names = np.where(heavy, "heavy", "light")
+    else:
+        light_name = np.array([f"light{i % (tenants - 1)}"
+                               for i in range(requests)])
+        names = np.where(heavy, "heavy", light_name)
+    return queries, ks, epss, heavy, names
+
+
 def _backend_scheduler_factory(kind: str, graph, x, metric, lanes: int,
                                max_k: int, ef: int, max_pending: int,
-                               history: int, mesh_world: dict):
+                               history: int, mesh_world: dict,
+                               policy=lambda: "fifo"):
     """Returns ``make(shed) -> LaneScheduler`` for one backend kind — the
     LaneBackend protocol in action: same scheduler, different engine.
     ``kind`` is ``engine`` or ``sharded-{scratch,beam}`` (the ShardedEngine
     resume mode). The sharded index/mesh are built once into ``mesh_world``,
     not per load point (jit caches are process-global, so later points also
-    start warm)."""
+    start warm). ``policy`` is a zero-arg factory returning a policy spec
+    (name or configured ``AdmissionPolicy``), called once per scheduler —
+    policies hold per-scheduler queue state, so load points never share an
+    instance."""
     if kind == "engine":
         return lambda shed: LaneScheduler(
             graph, num_lanes=lanes, max_k=max_k, default_ef=ef,
             max_pending=max_pending, history=history, prewarm=False,
-            shed=shed)
+            shed=shed, policy=policy())
     resume = kind.split("-", 1)[1]
     if not mesh_world:
         import jax
@@ -236,7 +288,8 @@ def _backend_scheduler_factory(kind: str, graph, x, metric, lanes: int,
         backend=ShardedEngine(mesh_world["index"], mesh_world["xs"],
                               mesh_world["mesh"], num_lanes=lanes,
                               max_k=max_k, resume=resume),
-        max_pending=max_pending, history=history, prewarm=False, shed=shed)
+        max_pending=max_pending, history=history, prewarm=False, shed=shed,
+        policy=policy())
 
 
 def make_slo_shed(slo: float):
@@ -255,14 +308,35 @@ def make_slo_shed(slo: float):
 
 def run_open(n: int, requests: int, lanes: int, ef: int, qps_list,
              backends=("engine",), slo: float | None = None,
-             seed: int = 7) -> dict:
+             tenants: int = 1, policy: str = "fifo",
+             heavy_frac: float = 1 / 16, seed: int = 7) -> dict:
     if "engine" in backends:
         graph, x, metric = D.load_graph("deep-like", n=n)
     else:   # sharded-only: the single-host graph would be dead weight
         graph, (x, metric) = None, D.make_dataset("deep-like", n=n)
-    queries, ks, epss, heavy = make_skewed_workload(x, metric, requests, seed)
+    multi = tenants > 1 or policy != "fifo"
+    if multi:
+        queries, ks, epss, heavy, names = make_tenant_workload(
+            x, metric, requests, tenants=max(tenants, 2),
+            heavy_frac=heavy_frac, seed=seed)
+    else:   # the PR 4 trace, unchanged — trend numbers stay comparable
+        queries, ks, epss, heavy = make_skewed_workload(x, metric, requests,
+                                                        seed)
+        names = np.full(requests, "default")
     max_k = int(ks.max())
     warmup = min(lanes, requests)
+    # --policy slo_cost repurposes --slo as the per-tenant latency budget;
+    # otherwise --slo installs the legacy shed-at-submit callback
+    slo_budget = slo if slo is not None else 2.0
+    if policy == "slo_cost":
+        from repro.serve.policies import SloCostPolicy
+        if slo is None:
+            print(f"# --policy slo_cost without --slo: using the default "
+                  f"{slo_budget:g}s per-tenant budget", flush=True)
+        policy_spec, shed_cb = lambda: SloCostPolicy(budget=slo_budget), None
+    else:
+        policy_spec = lambda: policy
+        shed_cb = make_slo_shed(slo) if slo else None
     out = {}
     # the sharded backend runs once per resume mode: scratch restarts every
     # budget round cold, beam resumes the shard-local beams — the
@@ -276,53 +350,110 @@ def run_open(n: int, requests: int, lanes: int, ef: int, qps_list,
         # the served count below undercounts and trips a false violation
         make_sched = _backend_scheduler_factory(
             kind, graph, x, metric, lanes, max_k, ef, max_pending=requests,
-            history=requests + warmup, mesh_world=mesh_world)
+            history=requests + warmup, mesh_world=mesh_world,
+            policy=policy_spec)
+        if multi:
+            # absorb the XLA compiles in a throwaway fifo pass first (jit
+            # caches are process-global): the measured schedulers' cost
+            # models must learn *warm* seconds-per-expansion, or slo_cost
+            # sheds everything off compile-time-polluted predictions
+            throwaway = _backend_scheduler_factory(
+                kind, graph, x, metric, lanes, max_k, ef,
+                max_pending=requests, history=warmup,
+                mesh_world=mesh_world)(None)
+            throwaway.run(queries[:warmup], ks[:warmup], epss[:warmup],
+                          efs=ef)
         for qps in qps_list:
-            sched = make_sched(make_slo_shed(slo) if slo else None)
+            sched = make_sched(shed_cb)
             # warm the compile caches outside the timed open-loop run so the
-            # first arrivals don't pay XLA traces
-            sched.run(queries[:warmup], ks[:warmup], epss[:warmup], efs=ef)
+            # first arrivals don't pay XLA traces (it also calibrates the
+            # cost model's seconds-per-expansion before real load arrives)
+            sched.run(queries[:warmup], ks[:warmup], epss[:warmup], efs=ef,
+                      tenants=names[:warmup])
             rng = np.random.default_rng(seed)
             arrivals = np.cumsum(rng.exponential(1.0 / qps, requests))
+            shed_n = 0
+            deferred_n = 0          # terminally deferred (never admitted)
+            defer_retry: list = []  # [request index, giving-up deadline]
+            # rid -> absolute first-offer time: a deferred-then-retried
+            # request gets a fresh Request (fresh t_submit) on resubmit, so
+            # client-perceived latency must be measured from the *first*
+            # offer or slo_cost's deferrals would be excluded from p50/p99
+            first_offer: dict = {}
+
+            def offer(j) -> str:
+                s0, d0 = sched.total_shed, sched.total_deferred
+                r = sched.try_submit(queries[j], int(ks[j]), float(epss[j]),
+                                     ef=ef, tenant=str(names[j]))
+                if r is not None:
+                    first_offer[r.rid] = t0 + arrivals[j]
+                    return "ok"
+                if sched.total_shed > s0:
+                    return "shed"
+                if sched.total_deferred > d0:
+                    return "deferred"
+                return "saturated"   # max_pending == requests: unreachable
+
             t0 = time.monotonic()
             i = 0
-            while i < requests or sched.pending or sched.inflight:
+            while (i < requests or defer_retry or sched.pending
+                   or sched.inflight):
                 now = time.monotonic() - t0
                 while i < requests and arrivals[i] <= now:
-                    sched.try_submit(queries[i], int(ks[i]), float(epss[i]),
-                                     ef=ef)
+                    got = offer(i)
+                    if got == "shed":
+                        shed_n += 1
+                    elif got in ("deferred", "saturated"):
+                        defer_retry.append([i, arrivals[i] + slo_budget])
                     i += 1
+                still = []
+                for j, deadline in defer_retry:
+                    if now > deadline:
+                        deferred_n += 1   # gave up: SLO unmeetable anyway
+                        continue
+                    got = offer(j)
+                    if got == "shed":
+                        shed_n += 1
+                    elif got != "ok":
+                        still.append([j, deadline])
+                defer_retry = still
                 if sched.pending or sched.inflight:
                     sched.pump()
                 elif i < requests:
                     time.sleep(min(max(arrivals[i] - now, 0.0), 0.01))
+                elif defer_retry:
+                    time.sleep(0.001)   # drained: only deadlines remain
             stats = sched.latency_stats()
             # percentiles over *this run's* requests only (the warmup pass
             # sits in the scheduler's history window too) — computed with
             # the exact helpers the scheduler itself uses (both timestamps
             # come from time.monotonic), so the two can never drift
             open_reqs = [r for r in sched.completed if r.t_submit >= t0]
-            lats = [r.latency for r in open_reqs]
-            waits = [r.wait for r in open_reqs]
+            # latency/wait from the request's *first* offer (== t_submit
+            # except for deferred-then-retried requests, whose resubmitted
+            # Request would otherwise hide the time spent deferred)
+            lats = [r.t_done - first_offer.get(r.rid, r.t_submit)
+                    for r in open_reqs]
+            waits = [r.t_admit - first_offer.get(r.rid, r.t_submit)
+                     for r in open_reqs]
             served = len(open_reqs)
-            shed_n = stats["shed"]
             # real per-lane counters out of the harvested SearchStats (the
             # sharded backend threads them from the resumable beam state)
             exp_total = sum(int(r.result.stats.expansions)
                             for r in open_reqs if r.result is not None)
             rounds_total = sum(int(r.result.stats.search_calls)
                                for r in open_reqs if r.result is not None)
-            tag = f"open/{kind}/qps{qps:g}"
+            tag = f"open/{kind}/qps{qps:g}" + (f"/{policy}" if multi else "")
             emit(f"{tag}/p50_latency", percentile(lats, 50) * 1e3, "ms")
             emit(f"{tag}/p99_latency", percentile(lats, 99) * 1e3,
                  f"ms;p99_wait_ms={percentile(waits, 99) * 1e3:.1f};"
                  f"fairness={jain_fairness(lats):.3f}")
             emit(f"{tag}/served", served,
-                 f"of {requests} offered;shed={shed_n}")
+                 f"of {requests} offered;shed={shed_n};deferred={deferred_n}")
             emit(f"{tag}/expansions", exp_total,
                  f"cumulative;rounds={rounds_total};per_round="
                  f"{exp_total / max(rounds_total, 1):.1f}")
-            out[(kind, qps)] = dict(
+            point = dict(
                 p50=percentile(lats, 50), p99=percentile(lats, 99),
                 p99_wait=percentile(waits, 99), served=served, shed=shed_n,
                 expansions_total=exp_total, rounds_total=rounds_total,
@@ -330,16 +461,44 @@ def run_open(n: int, requests: int, lanes: int, ef: int, qps_list,
                 throughput=(served / max(max(r.t_done or 0.0
                                              for r in open_reqs) - t0, 1e-9)
                             if open_reqs else 0.0))
-            if served + shed_n != requests:
+            if multi:
+                per_tenant = {}
+                for tname in sorted(set(str(t) for t in names)):
+                    trs = [r for r in open_reqs if r.tenant == tname]
+                    tl = [r.t_done - first_offer.get(r.rid, r.t_submit)
+                          for r in trs]
+                    per_tenant[tname] = dict(
+                        served=len(trs),
+                        p50=percentile(tl, 50), p99=percentile(tl, 99),
+                        mean=float(np.mean(tl)) if tl else 0.0,
+                        fairness=jain_fairness(tl))
+                    emit(f"{tag}/tenant/{tname}/p99",
+                         percentile(tl, 99) * 1e3,
+                         f"ms;served={len(trs)};"
+                         f"jain={jain_fairness(tl):.3f}")
+                t_means = [t["mean"] for t in per_tenant.values()
+                           if t["served"]]
+                point.update(
+                    policy=policy, deferred=deferred_n,
+                    tenants=per_tenant,
+                    tenant_fairness=jain_fairness(t_means),
+                    calibration_error=stats["cost_calibration_error"])
+                emit(f"{tag}/tenant_fairness",
+                     jain_fairness(t_means),
+                     f"jain_over_tenant_means;calibration_error="
+                     f"{stats['cost_calibration_error']:.3f}")
+            if served + shed_n + deferred_n != requests:
                 print(f"# OPEN-LOOP ACCOUNTING VIOLATION {kind}@{qps}: "
-                      f"{served} served + {shed_n} shed != {requests}")
-                out[(kind, qps)]["violation"] = True
+                      f"{served} served + {shed_n} shed + {deferred_n} "
+                      f"deferred != {requests}")
+                point["violation"] = True
+            out[(kind, qps)] = point
     return out
 
 
 # -------------------------------------------------------------- trend json --
 
-BENCH_SCHEMA = 1
+BENCH_SCHEMA = 2
 
 _SKEWED_KEYS = ("p50_latency", "p99_latency", "p50_wait", "p99_wait",
                 "throughput", "fairness", "certified_frac", "signatures")
@@ -348,14 +507,20 @@ _SKEWED_KEYS = ("p50_latency", "p99_latency", "p50_wait", "p99_wait",
 def write_trend_json(path: str, mode: str, payload: dict) -> None:
     """Merge one mode's summary into the stable-schema trend file.
 
-    Schema (``schema_version`` gates compat): top-level ``modes`` maps a
-    bench mode to its summary dict — ``skewed`` keys the two admission
-    policies plus ``parity_violations``; ``open`` keys ``<kind>@qps<q>``
-    load points, each with p50/p99/p99_wait seconds, served/shed counts,
-    throughput, and the expansion counters (``expansions_total``,
-    ``rounds_total``, ``expansions_per_round``) that separate
-    sharded-scratch from sharded-beam. Repeated invocations with the same
-    path accumulate modes, so one artifact carries the whole trend entry.
+    The full field map lives in ``docs/BENCH_SCHEMA.md`` (version 2 since
+    PR 5; ``schema_version`` gates compat — a file written under a
+    different version is reset, never half-merged). Top-level ``modes``
+    maps a bench mode to its summary dict — ``skewed`` keys the two
+    admission regimes plus ``parity_violations``; ``open`` keys
+    ``<kind>@qps<q>[@<policy>]`` load points, each with p50/p99/p99_wait
+    seconds, served/shed counts, throughput, the expansion counters
+    (``expansions_total``, ``rounds_total``, ``expansions_per_round``)
+    that separate sharded-scratch from sharded-beam, and — for
+    multi-tenant/policy points — ``policy``, ``deferred``, per-``tenants``
+    latency/fairness, ``tenant_fairness`` and the cost model's
+    ``calibration_error``. Repeated invocations with the same path
+    accumulate modes, and points within a mode merge by key, so one
+    artifact carries fifo and drr runs of the same load point side by side.
     """
     doc = {"schema_version": BENCH_SCHEMA, "bench": "batch_bench",
            "modes": {}}
@@ -364,7 +529,7 @@ def write_trend_json(path: str, mode: str, payload: dict) -> None:
             old = json.load(f)
         if old.get("schema_version") == BENCH_SCHEMA:
             doc = old
-    doc["modes"][mode] = payload
+    doc["modes"].setdefault(mode, {}).update(payload)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -379,7 +544,11 @@ def _skewed_payload(res: dict) -> dict:
 
 
 def _open_payload(res: dict) -> dict:
-    return {f"{kind}@qps{qps:g}": point
+    """Point key: ``<kind>@qps<q>``, suffixed ``@<policy>`` for
+    multi-tenant/policy runs so fifo/drr runs of the same load point
+    coexist in one file (re-running the same policy overwrites its key)."""
+    return {f"{kind}@qps{qps:g}"
+            + (f"@{point['policy']}" if "policy" in point else ""): point
             for (kind, qps), point in sorted(res.items())}
 
 
@@ -404,7 +573,20 @@ def main(argv=None):
                     help="LaneBackend(s) for --mode open")
     ap.add_argument("--slo", type=float, default=None,
                     help="latency SLO in seconds: installs the shed-at-"
-                         "submit callback (--mode open)")
+                         "submit callback, or — with --policy slo_cost — "
+                         "the per-tenant latency budget (default 2.0 "
+                         "for slo_cost; --mode open)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="tenant count for --mode open: >1 switches to the "
+                         "skewed heavy/light tenant mix and per-tenant "
+                         "fairness reporting")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "drr", "slo_cost"],
+                    help="admission policy for --mode open "
+                         "(serve.policies)")
+    ap.add_argument("--heavy-frac", type=float, default=1 / 16,
+                    help="heavy tenant's request-rate share of the "
+                         "multi-tenant mix (--mode open --tenants >1)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="merge this run's summary into a stable-schema "
                          "trend JSON (skewed/open modes)")
@@ -428,7 +610,8 @@ def main(argv=None):
                     else (args.backend,))
         res = run_open(n=n, requests=requests, lanes=lanes, ef=args.ef,
                        qps_list=qps_list, backends=backends, slo=args.slo,
-                       seed=args.seed)
+                       tenants=args.tenants, policy=args.policy,
+                       heavy_frac=args.heavy_frac, seed=args.seed)
         if args.json:
             write_trend_json(args.json, "open", _open_payload(res))
         return 1 if any(v.get("violation") for v in res.values()) else 0

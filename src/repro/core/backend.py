@@ -36,6 +36,18 @@ pre-protocol lockstep path — which discards the unharvested result).
 ``step()`` advances *every* occupied lane one round; lanes are independent,
 so admission order can never leak into results (each backend documents and
 tests its own parity contract against its per-query reference path).
+
+Stats contract: the ``DiverseResult.stats`` a backend hands back from
+``harvest`` must carry *real* per-lane counters — ``expansions`` is the
+work actually performed for that request (cumulative under beam resumption,
+re-counted restarts under scratch) and ``search_calls`` its progressive
+round count. These are not just telemetry: the serving layer's
+``ExpansionCostModel`` (``serve.policies``) learns per-``(k, eps, method)``
+cost from them, and cost-aware admission (``drr``/``slo_cost``) schedules
+by those predictions — a backend reporting fake counters would skew
+multi-tenant fairness, not just a dashboard. Pinned for the mesh backend by
+``tests/test_sharded_resume.py``
+(``test_multiround_beam_fewer_expansions_same_budget``).
 """
 from __future__ import annotations
 
@@ -45,13 +57,16 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class LaneRequest:
     """One diverse-search request, the way a backend sees it.
 
     ``ef`` <= 0 means "backend default" (the sharded backend has no beam-ef
     knob at all — its beam width follows the candidate budget). ``max_K``
     caps the progressive candidate budget (the paper's N/A guard).
+    Compares by identity (``eq=False``): ``q`` is an array, so generated
+    field equality would be ill-defined, and the scheduler's policy layer
+    tracks requests by object identity through its queues.
     """
     q: np.ndarray
     k: int

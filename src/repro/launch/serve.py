@@ -6,7 +6,10 @@
 Requests flow through the continuous-batching lane scheduler
 (``serve.scheduler.LaneScheduler``): per-request (k, eps), lane recycling on
 certification, pre-warmed compile ladder; per-request latency and fairness
-stats are printed after the run.
+stats are printed after the run. ``--tenants N`` labels requests round-robin
+across N tenants and ``--policy {fifo,drr,slo_cost}`` picks the cost-aware
+admission policy scheduling across them (``serve.policies``); per-tenant
+p50/p99 and the cross-tenant Jain index are printed when N > 1.
 
 ``--mesh-shards P`` serves retrieval off a P-way sharded device mesh
 instead of the single-host engine: the corpus is partitioned across the
@@ -57,6 +60,12 @@ def main():
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--engine", default="scheduler",
                     choices=["scheduler", "lockstep", "fixed_k"])
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "drr", "slo_cost"],
+                    help="admission policy for the lane scheduler")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="label requests round-robin across N tenants "
+                         "(per-tenant stats printed when N > 1)")
     ap.add_argument("--mesh-shards", type=int, default=0,
                     help="serve retrieval from a P-way sharded mesh backend "
                          "(0 = single-host engine)")
@@ -80,12 +89,20 @@ def main():
     params = M.init_params(cfg, jax.random.key(0))
     pipe = RagPipeline(cfg, params, graph, k=args.k, eps=args.eps,
                        engine=args.engine, num_lanes=args.lanes,
-                       prewarm=args.prewarm, backend=backend)
+                       prewarm=args.prewarm, backend=backend,
+                       policy=args.policy)
     qs = docs[rng.integers(0, len(docs), args.requests)]
+    tenants = ([f"t{i % args.tenants}" for i in range(args.requests)]
+               if args.tenants > 1 else None)
+    if args.engine != "scheduler" and (tenants is not None
+                                       or args.policy != "fifo"):
+        # the lockstep/fixed_k paths never build a LaneScheduler, so these
+        # flags would be silently ignored — refuse instead
+        raise SystemExit("--tenants/--policy require --engine scheduler")
     t0 = time.time()
     tokens, ids, cert = pipe.generate(qs, np.ones((args.requests, 2),
                                                   np.int32),
-                                      steps=args.steps)
+                                      steps=args.steps, tenants=tenants)
     dt = time.time() - t0
     print(f"{args.requests} requests in {dt:.2f}s; "
           f"certified={cert.tolist()}")
@@ -94,12 +111,20 @@ def main():
         stats = pipe.scheduler.latency_stats()
         where = (f"mesh[{args.mesh_shards}]" if args.mesh_shards
                  else "single-host")
-        print(f"scheduler[{where}]: "
+        print(f"scheduler[{where}|{stats['policy']}]: "
               f"p50={stats['p50_latency'] * 1e3:.1f}ms "
               f"p99={stats['p99_latency'] * 1e3:.1f}ms "
               f"fairness={stats['fairness']:.3f} "
               f"throughput={stats['throughput']:.1f} req/s "
               f"signatures={stats['signatures']}")
+        if tenants is not None:
+            for name, t in stats["tenants"].items():
+                print(f"  tenant[{name}]: completed={t['completed']} "
+                      f"shed={t['shed']} deferred={t['deferred']} "
+                      f"p50={t['p50_latency'] * 1e3:.1f}ms "
+                      f"p99={t['p99_latency'] * 1e3:.1f}ms")
+            print(f"  tenant_fairness={stats['tenant_fairness']:.3f} "
+                  f"calibration_error={stats['cost_calibration_error']:.3f}")
 
 
 if __name__ == "__main__":

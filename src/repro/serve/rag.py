@@ -19,7 +19,13 @@ The scheduler is backend-neutral: pass ``backend=`` (any
 ``core.backend.LaneBackend``, e.g. a mesh-sharded
 ``sharded_search.engine.ShardedEngine``) to serve retrieval off a device
 mesh instead of the single-host graph — the rest of the pipeline is
-unchanged (``launch/serve.py --mesh-shards`` wires this up).
+unchanged (``launch/serve.py --mesh-shards`` wires this up). Multi-tenant
+serving rides the same path: ``policy=`` picks the scheduler's admission
+policy (``"fifo"`` / ``"drr"`` / ``"slo_cost"`` or a configured
+``serve.policies.AdmissionPolicy``) and ``retrieve(..., tenants=...)``
+labels each query's tenant, so one pipeline can serve several tenants'
+retrieval traffic under cost-fair scheduling (``launch/serve.py
+--policy/--tenants``).
 """
 from __future__ import annotations
 
@@ -51,43 +57,52 @@ class RagPipeline:
     num_lanes: int = 8
     prewarm: bool = False
     backend: object | None = None   # LaneBackend override (e.g. ShardedEngine)
+    policy: object = "fifo"     # admission policy name or AdmissionPolicy
     _scheduler: LaneScheduler | None = dataclasses.field(
         default=None, repr=False)
 
     @property
     def scheduler(self) -> LaneScheduler:
         """The pipeline's lane scheduler (built lazily, reused across calls
-        so the backend's compile cache and lane state persist)."""
+        so the backend's compile cache, lane state, and the admission
+        policy's cost model persist)."""
         if self._scheduler is None:
             if self.backend is not None:
                 self._scheduler = LaneScheduler(
-                    backend=self.backend, prewarm=self.prewarm)
+                    backend=self.backend, prewarm=self.prewarm,
+                    policy=self.policy)
             else:
                 self._scheduler = LaneScheduler(
                     self.graph, num_lanes=self.num_lanes,
                     max_k=max(self.k, 16), default_ef=self.ef,
-                    prewarm=self.prewarm)
+                    prewarm=self.prewarm, policy=self.policy)
         return self._scheduler
 
-    def retrieve(self, query_embeds, ks=None, epss=None
+    def retrieve(self, query_embeds, ks=None, epss=None, tenants=None
                  ) -> tuple[np.ndarray, np.ndarray]:
         """Diverse document ids per query + per-lane certificate flags.
 
         ``ks``/``epss`` optionally override the pipeline defaults per
-        request (scheduler engine only) — the paper's query-owned
-        diversification level, end to end.
+        request and ``tenants`` labels each request's tenant for the
+        admission policy and per-tenant stats (scheduler engine only) —
+        the paper's query-owned diversification level, end to end, now
+        with per-tenant fair scheduling on top. A request shed by the
+        policy yields an all ``-1`` id row with ``certified=False``.
         """
         qs = jnp.asarray(query_embeds, jnp.float32)
         if self.engine == "scheduler":
             results = self.scheduler.run(
                 np.asarray(qs), ks if ks is not None else self.k,
-                epss if epss is not None else self.eps, efs=self.ef)
+                epss if epss is not None else self.eps, efs=self.ef,
+                tenants=tenants)
             k_max = int(np.max(np.broadcast_to(
                 np.asarray(ks if ks is not None else self.k),
                 (qs.shape[0],))))
             ids = np.full((qs.shape[0], k_max), -1, np.int32)
             cert = np.zeros(qs.shape[0], bool)
             for i, r in enumerate(results):
+                if r is None:   # shed by the admission policy
+                    continue
                 ids[i, :r.ids.shape[0]] = r.ids
                 cert[i] = r.stats.certified
             return ids, cert
@@ -106,10 +121,11 @@ class RagPipeline:
         return ids, cert
 
     def generate(self, query_embeds, prompt_tokens, steps: int = 16,
-                 max_seq: int | None = None):
+                 max_seq: int | None = None, tenants=None):
         """Retrieve diverse context, prepend retrieved ids as context tokens
-        (toy fusion — document tokens would be spliced here), decode."""
-        ids, cert = self.retrieve(query_embeds)
+        (toy fusion — document tokens would be spliced here), decode.
+        ``tenants`` flows through to ``retrieve`` (per-tenant scheduling)."""
+        ids, cert = self.retrieve(query_embeds, tenants=tenants)
         b, p = prompt_tokens.shape
         max_seq = max_seq or (p + steps + self.k)
         ctx = jnp.asarray(ids % self.cfg.vocab_size, jnp.int32)

@@ -1,6 +1,6 @@
 """Continuous-batching lane scheduler — the serving layer over a LaneBackend.
 
-Top layer of the lane-state / backend / scheduler split. A backend
+Top layer of the lane-state / backend / scheduler / policy split. A backend
 (``core.backend.LaneBackend``) advances a fixed set of lanes one progressive
 round per ``step()``; this module decides *which request occupies which lane
 when* — and it is backend-neutral: the same scheduler drives the single-host
@@ -9,36 +9,46 @@ when* — and it is backend-neutral: the same scheduler drives the single-host
 
 * **Admission queue** — requests carry their own ``(k, eps, ef, method)``
   (the paper's Definition 1: the query owns its diversification level; no
-  index rebuild). ``submit`` enqueues; a bounded queue gives backpressure
-  (``SchedulerSaturated``) so callers can shed or defer load, and an
-  optional ``shed`` callback lets a latency-SLO policy drop requests at
-  submit time before they ever occupy a lane.
+  index rebuild) plus a ``tenant`` label. ``submit`` enqueues; a bounded
+  queue gives backpressure (``SchedulerSaturated``) so callers can shed or
+  defer load, and an optional ``shed`` callback lets a custom policy drop
+  requests at submit time before they ever occupy a lane.
+* **Admission policies** (``serve.policies``) — the queue is drained by a
+  pluggable, cost-aware policy: ``"fifo"`` (default — submission order,
+  bit-exactly the historical behavior), ``"drr"`` (deficit round-robin
+  across tenants, deficit charged in *predicted expansions*), or
+  ``"slo_cost"`` (shed / defer / earliest-deadline-first from predicted
+  service time vs per-tenant SLO budgets). Policies read an online
+  ``ExpansionCostModel`` that the scheduler updates from every harvested
+  result's real ``SearchStats`` counters.
 * **Continuous batching** — whenever a lane certifies (or exhausts), its
-  slot is recycled for the next queued request *between backend steps*,
-  while sibling lanes keep their in-flight state. Div-A* trip counts are
-  heavy-tailed by design, so under lockstep admission one hard query stalls
-  a whole batch; continuous admission keeps every lane busy and cuts p99
-  latency and raises throughput on skewed workloads
-  (``benchmarks/batch_bench.py --mode skewed`` measures both policies —
-  they share this scheduler, differing only in ``admission``; ``--mode
-  open`` drives Poisson arrivals against either backend).
+  slot is recycled for the next policy-selected request *between backend
+  steps*, while sibling lanes keep their in-flight state. Div-A* trip
+  counts are heavy-tailed by design, so under lockstep admission one hard
+  query stalls a whole batch; continuous admission keeps every lane busy
+  and cuts p99 latency on skewed workloads
+  (``benchmarks/batch_bench.py --mode skewed`` measures both policies;
+  ``--mode open`` drives Poisson arrivals against either backend with any
+  admission policy).
 * **Compile-signature-aware startup** — backends compile per shape
   signature (lane count x capacity for single-host bursts, group x budget
   for mesh dispatches); the scheduler pre-warms the backend's power-of-two
   ladder at construction so mid-serving growth never pays an XLA trace, and
   exposes the backend's ``SignatureLog`` for recompile auditing.
 * **Per-request stats** — wait (submit→admit), service (admit→done), and
-  total latency per request, with p50/p99 summaries and Jain's fairness
-  index over total latencies.
+  total latency per request, with p50/p99 summaries, Jain's fairness index,
+  and the same broken out per tenant.
 
 Parity contract (single-host backend): a request's result is bit-identical
 to a fresh per-query driver (``pss``/``pgs``/``pds``) for that query on the
 CPU reference path — lane recycling starts from exactly
 ``beam_search.init_state`` and every engine op is lane-separable, so
-admission order cannot leak between requests (``tests/test_scheduler.py``).
-The sharded backend's contract is budget-parity: a harvested lane equals
-``sharded_diverse_search`` for that query at the lane's final K-budget
-(``tests/dist_scripts/sharded_scheduler_check.py``).
+admission order cannot leak between requests (``tests/test_scheduler.py``;
+this is also why switching admission *policies* can change latencies but
+never results). The sharded backend's contract is budget-parity: a
+harvested lane equals ``sharded_diverse_search`` for that query at the
+lane's final K-budget (``tests/dist_scripts/sharded_scheduler_check.py``).
+See ``docs/ARCHITECTURE.md`` for the full contract map.
 """
 from __future__ import annotations
 
@@ -53,25 +63,63 @@ from repro.core.backend import LaneBackend, LaneRequest
 from repro.core.batch_progressive import ProgressiveEngine
 from repro.core.graph import FlatGraph
 from repro.core.pgs import DiverseResult
+from repro.serve import policies as P
+from repro.serve.policies import ExpansionCostModel, make_policy
 
 
 class SchedulerSaturated(RuntimeError):
-    """Admission queue is full — pump the scheduler (or defer) and retry."""
+    """Admission queue is full — pump the scheduler (or defer) and retry.
+
+    Raised by ``submit`` when ``len(pending) >= max_pending``. This is
+    *backpressure*, not a verdict on the request: the same request is
+    expected to succeed after ``pump()`` frees queue slots."""
 
 
 class RequestShed(RuntimeError):
-    """The scheduler's SLO-shed policy dropped this request at submit.
+    """The scheduler's shed policy dropped this request at submit.
 
     Deliberately *not* a ``SchedulerSaturated``: saturation means "retry
     after pumping", shed means "never retry" — a retry loop catching
     ``SchedulerSaturated`` must not spin on a deterministically-shed
-    request."""
+    request. Raised either by the legacy ``shed`` callback or by an
+    admission policy returning ``SHED`` (e.g. ``slo_cost`` when a
+    request's predicted service time alone exceeds its tenant's SLO
+    budget)."""
 
 
-@dataclasses.dataclass
+class RequestDeferred(RuntimeError):
+    """The admission policy declined this request *for now*.
+
+    The middle ground between ``SchedulerSaturated`` (queue mechanics —
+    retry immediately after a pump) and ``RequestShed`` (never retry):
+    ``slo_cost`` defers a request whose predicted queue wait + service
+    exceeds its SLO budget but whose service alone fits — once backlog
+    drains, a retried submit is expected to admit. The request was *not*
+    enqueued; ``total_deferred`` counts these decisions."""
+
+
+@dataclasses.dataclass(eq=False)
 class Request(LaneRequest):
     """One diverse-search request: a ``LaneRequest`` plus scheduler-side
-    bookkeeping (id, timing trace, lane assignment, result)."""
+    bookkeeping. Compares by identity (``eq=False``): two requests are
+    never "the same request" just because their parameters match, and the
+    policies' queue bookkeeping (``deque.remove``) relies on it.
+
+    Fields added over ``LaneRequest`` (all scheduler-owned — backends never
+    read them):
+
+    * ``tenant`` — fairness/accounting label; admission policies (``drr``,
+      ``slo_cost``) schedule *across* tenants, and ``latency_stats()``
+      reports per-tenant percentiles. The default ``"default"`` keeps
+      single-tenant callers unchanged.
+    * ``rid`` — unique per-scheduler request id, assigned at submit (shed
+      and deferred requests consume ids too, so traces stay unambiguous).
+    * ``t_submit`` / ``t_admit`` / ``t_done`` — clock readings at submit,
+      lane admission, and harvest (``None`` until reached).
+    * ``lane`` — the backend lane that served it (``None`` until admitted).
+    * ``result`` — the harvested ``DiverseResult`` (``None`` until done).
+    """
+    tenant: str = "default"
     rid: int = -1
     t_submit: float = 0.0
     t_admit: float | None = None
@@ -81,14 +129,17 @@ class Request(LaneRequest):
 
     @property
     def wait(self) -> float:
+        """Submit-to-admission seconds (0.0 until admitted)."""
         return (self.t_admit or 0.0) - self.t_submit
 
     @property
     def service(self) -> float:
+        """Admission-to-completion seconds (0.0 until done)."""
         return (self.t_done or 0.0) - (self.t_admit or 0.0)
 
     @property
     def latency(self) -> float:
+        """Submit-to-completion seconds (0.0 until done)."""
         return (self.t_done or 0.0) - self.t_submit
 
 
@@ -117,7 +168,7 @@ class LaneScheduler:
     ``ShardedEngine``); everything above the backend — admission policies,
     backpressure, shed, stats — is identical.
 
-    ``admission`` picks the batching policy:
+    ``admission`` picks the batching regime:
 
     * ``"continuous"`` (default) — refill any freed lane before every step;
       a certified lane's slot goes to the next queued request immediately.
@@ -126,10 +177,20 @@ class LaneScheduler:
       controlled baseline for the skewed-workload benchmark; results are
       identical either way, only latency/throughput differ.
 
+    ``policy`` picks the admission-*order* policy draining the queue:
+    ``"fifo"`` (default; submission order — bit-exactly the pre-policy
+    scheduler), ``"drr"``, ``"slo_cost"``, or any
+    ``serve.policies.AdmissionPolicy`` instance. ``cost_model`` optionally
+    supplies a pre-calibrated (possibly frozen) ``ExpansionCostModel``; by
+    default a fresh model is created and learns online from every
+    harvested result regardless of policy, so ``latency_stats()`` always
+    reports calibration.
+
     ``shed`` is an optional callback ``(request, scheduler) -> bool`` run at
-    submit time; returning True drops the request (``RequestShed``) — the
-    hook for latency-SLO admission control (e.g. shed heavy-eps requests
-    once the queue's expected wait exceeds the SLO).
+    submit time; returning True drops the request (``RequestShed``). It
+    predates the policy layer and stays supported — it runs *before* the
+    policy's own decision, so existing SLO callbacks keep working verbatim
+    (``slo_cost`` subsumes the common case with per-tenant budgets).
     """
 
     def __init__(self, graph: FlatGraph | None = None, num_lanes: int = 8, *,
@@ -141,6 +202,8 @@ class LaneScheduler:
                  max_iters: int = 64, max_expansions: int = 400_000,
                  max_signatures: int | None = 1024,
                  admission: str = "continuous",
+                 policy: str | P.AdmissionPolicy = "fifo",
+                 cost_model: ExpansionCostModel | None = None,
                  shed: Callable[[Request, "LaneScheduler"], bool] | None = None,
                  prewarm: bool = True,
                  prewarm_capacity: int | None = None,
@@ -180,6 +243,8 @@ class LaneScheduler:
         self.num_lanes = int(backend.num_lanes)
         self.admission = admission
         self.shed = shed
+        self.cost_model = cost_model or ExpansionCostModel()
+        self.policy = make_policy(policy).bind(self)
         self.max_pending = (max_pending if max_pending is not None
                             else 4 * self.num_lanes)
         self.clock = clock
@@ -192,6 +257,15 @@ class LaneScheduler:
             maxlen=history)
         self.total_completed = 0
         self.total_shed = 0
+        self.total_deferred = 0
+        #: lifetime per-tenant counters (mirroring the totals above).
+        #: One entry per distinct tenant label, forever — like any labeled
+        #: telemetry, keep tenant cardinality bounded (label by tenant,
+        #: not by user/request); the policies' own queue state is
+        #: proportional to tenants with *pending* work only
+        self.tenant_completed: collections.Counter = collections.Counter()
+        self.tenant_shed: collections.Counter = collections.Counter()
+        self.tenant_deferred: collections.Counter = collections.Counter()
         self._next_rid = 0
         self.steps = 0
         if prewarm:
@@ -200,12 +274,25 @@ class LaneScheduler:
 
     # -- admission ----------------------------------------------------------
     def submit(self, q, k: int, eps: float, ef: int | None = None,
-               method: str | None = None, max_K: int | None = None) -> Request:
-        """Enqueue a request; raises ``SchedulerSaturated`` on backpressure
-        or ``RequestShed`` if the shed policy drops it (``try_submit`` is the
-        non-raising variant). ``method`` defaults to the backend's native
-        method. Invalid parameters are rejected here, not at admission — a
-        bad request must never dequeue and then abort serving mid-pump."""
+               method: str | None = None, max_K: int | None = None,
+               tenant: str = "default") -> Request:
+        """Enqueue one request; returns its ``Request`` handle.
+
+        ``q`` is the query vector; ``(k, eps)`` the paper's per-request
+        diversification parameters; ``ef`` defaults to the backend's
+        ``default_ef``; ``method`` defaults to the backend's native method
+        (``backend.methods[0]``); ``max_K`` caps the progressive candidate
+        budget; ``tenant`` labels the request for fair scheduling and
+        per-tenant stats.
+
+        Raises ``SchedulerSaturated`` on backpressure (retry after
+        ``pump()``), ``RequestShed`` if the shed callback or the admission
+        policy drops it (never retry), ``RequestDeferred`` if the policy
+        declines it for now (retry once load drains), or ``ValueError`` for
+        invalid parameters — rejected here, not at admission, because a bad
+        request must never dequeue and then abort serving mid-pump.
+        ``try_submit`` is the non-raising variant.
+        """
         if method is None:
             method = self.backend.methods[0]
         if method not in self.backend.methods:
@@ -221,29 +308,47 @@ class LaneScheduler:
                 f"{self.max_pending}; pump() or shed load")
         req = Request(rid=self._next_rid, q=np.asarray(q, np.float32),
                       k=k, eps=eps, ef=int(ef or self.backend.default_ef),
-                      method=method, max_K=max_K, t_submit=self.clock())
-        self._next_rid += 1   # shed requests keep their rid (unique traces)
+                      method=method, max_K=max_K, tenant=tenant,
+                      t_submit=self.clock())
+        self._next_rid += 1   # dropped requests keep their rid (unique traces)
         if self.shed is not None and self.shed(req, self):
             self.total_shed += 1
-            raise RequestShed(f"request {req.rid} shed by SLO policy")
+            self.tenant_shed[tenant] += 1
+            raise RequestShed(f"request {req.rid} shed by SLO callback")
+        decision = self.policy.on_submit(req)
+        if decision == P.SHED:
+            self.total_shed += 1
+            self.tenant_shed[tenant] += 1
+            raise RequestShed(
+                f"request {req.rid} shed by {self.policy.name} policy")
+        if decision == P.DEFER:
+            self.total_deferred += 1
+            self.tenant_deferred[tenant] += 1
+            raise RequestDeferred(
+                f"request {req.rid} deferred by {self.policy.name} policy "
+                "(retry once backlog drains)")
         self.pending.append(req)
+        self.policy.note_enqueued(req)
         return req
 
     def try_submit(self, q, k: int, eps: float, **kw) -> Request | None:
-        """``submit`` returning None instead of raising, for both drop
-        reasons (inspect ``total_shed`` to tell them apart)."""
+        """``submit`` returning ``None`` instead of raising, for all three
+        drop reasons — saturation, shed, and deferral. Callers that need to
+        tell them apart compare ``total_shed`` / ``total_deferred`` across
+        the call (a saturated submit moves neither counter); parameter
+        ``ValueError``s still raise."""
         try:
             return self.submit(q, k, eps, **kw)
-        except (SchedulerSaturated, RequestShed):
+        except (SchedulerSaturated, RequestShed, RequestDeferred):
             return None
 
     def _refill(self) -> None:
         if self.admission == "lockstep" and self.inflight:
             return  # whole-batch regime: wait for the wave's straggler
         for lane in self.backend.free_lanes():
-            if not self.pending:
+            req = self.policy.pop_next()
+            if req is None:
                 break
-            req = self.pending.popleft()
             self.backend.admit(int(lane), req)
             req.t_admit = self.clock()
             req.lane = int(lane)
@@ -251,8 +356,12 @@ class LaneScheduler:
 
     # -- serving loop -------------------------------------------------------
     def pump(self) -> list[Request]:
-        """Refill freed lanes, advance the backend one step, harvest and
-        recycle finished lanes; returns the requests that completed."""
+        """Refill freed lanes (in policy order), advance the backend one
+        step, harvest and recycle finished lanes; returns the requests that
+        completed. Every harvested result's real ``SearchStats`` counters
+        (expansions, rounds) and measured service time are folded into the
+        cost model before the next refill, so policy predictions track the
+        live workload."""
         self._refill()
         done: list[Request] = []
         if self.backend.active_count():
@@ -265,6 +374,13 @@ class LaneScheduler:
             self.backend.recycle(lane)
             self.completed.append(req)
             self.total_completed += 1
+            self.tenant_completed[req.tenant] += 1
+            self.cost_model.observe(
+                req.k, req.eps, req.method,
+                expansions=result.stats.expansions,
+                rounds=result.stats.search_calls,
+                service=req.service)
+            self.policy.on_complete(req)
             done.append(req)
         return done
 
@@ -276,15 +392,17 @@ class LaneScheduler:
             self._refill()
         return out
 
-    def run(self, qs, ks, epss, efs=None, method: str | None = None
-            ) -> list[DiverseResult | None]:
+    def run(self, qs, ks, epss, efs=None, method: str | None = None,
+            tenants=None) -> list[DiverseResult | None]:
         """Serve a closed batch of requests; results in submission order.
 
-        Per-request parameters may be scalars or per-request sequences.
-        Oversubmission is handled by pumping whenever the queue saturates;
-        a request dropped by the shed policy yields ``None`` in its slot
-        (it is *not* retried — a deterministic policy would shed it again
-        forever).
+        Per-request parameters (``ks``, ``epss``, ``efs``, ``tenants``) may
+        be scalars or per-request sequences. Oversubmission is handled by
+        pumping whenever the queue saturates, and a policy-deferred request
+        is retried after a pump (deferral is load-dependent, so draining
+        backlog un-defers it); a request dropped by the shed policy yields
+        ``None`` in its slot (it is *not* retried — a deterministic policy
+        would shed it again forever).
         """
         qs = np.asarray(qs, np.float32)
         B = qs.shape[0]
@@ -293,36 +411,92 @@ class LaneScheduler:
         efs = np.broadcast_to(
             np.asarray(efs if efs is not None else self.backend.default_ef),
             (B,))
+        tenants = np.broadcast_to(
+            np.asarray(tenants if tenants is not None else "default"), (B,))
         reqs: list[Request | None] = []
         for i in range(B):
             while True:
                 try:
                     reqs.append(self.submit(qs[i], int(ks[i]),
                                             float(epss[i]), ef=int(efs[i]),
-                                            method=method))
+                                            method=method,
+                                            tenant=str(tenants[i])))
                     break
                 except RequestShed:
                     reqs.append(None)
                     break
-                except SchedulerSaturated:
-                    self.pump()   # backpressure: free a slot and retry
+                except (SchedulerSaturated, RequestDeferred):
+                    self.pump()   # free queue slots / drain backlog, retry
         self.drain()
         return [r.result if r is not None else None for r in reqs]
 
     # -- reporting ----------------------------------------------------------
     def latency_stats(self) -> dict:
-        """p50/p99 wait/service/total latency, Jain fairness, throughput
-        (percentiles/throughput over the retained ``history`` window;
-        ``completed``/``shed`` count the scheduler's lifetime)."""
+        """Serving stats snapshot.
+
+        Percentiles and throughput cover the retained ``history`` window of
+        completed requests; ``completed`` / ``shed`` / ``deferred`` count
+        the scheduler's lifetime. Keys:
+
+        * ``completed`` / ``shed`` — lifetime request counts: finished,
+          dropped-never-retry. ``deferred`` — lifetime count of *defer
+          decisions* (a request resubmitted after deferral and deferred
+          again counts each time).
+        * ``pending`` / ``inflight`` — current queue depth and occupied
+          lanes; ``steps`` — lifetime backend steps.
+        * ``p50_latency`` / ``p99_latency`` — submit→done seconds over the
+          window; ``p50_wait`` / ``p99_wait`` — submit→admit;
+          ``p50_service`` / ``p99_service`` — admit→done.
+        * ``fairness`` — Jain's index over the window's total latencies
+          (all tenants pooled); ``tenant_fairness`` — Jain's index over
+          *per-tenant mean* latencies (1.0 = tenants see equal means).
+        * ``tenants`` — per-tenant sub-dicts (window percentiles +
+          lifetime counters): ``completed``, ``shed``, ``deferred``,
+          ``p50_latency``, ``p99_latency``, ``p99_wait``, ``mean_latency``,
+          ``fairness`` (within-tenant Jain).
+        * ``throughput`` — window completions / window span (req/s).
+        * ``certified_frac`` — fraction of window results whose Theorem-2
+          certificate fired.
+        * ``policy`` — the admission policy name;
+          ``cost_calibration_error`` — the cost model's EWMA relative
+          expansion-prediction error (see
+          ``ExpansionCostModel.calibration_error``).
+        * ``signatures`` / ``unplanned_signatures`` — backend compile
+          signatures seen / seen after a freeze (recompile audit).
+        """
         reqs = list(self.completed)
         lats = [r.latency for r in reqs]
         waits = [r.wait for r in reqs]
         svcs = [r.service for r in reqs]
         span = (max(r.t_done for r in reqs) - min(r.t_submit for r in reqs)
                 if reqs else 0.0)
+        by_tenant: dict[str, list[Request]] = {}
+        for r in reqs:
+            by_tenant.setdefault(r.tenant, []).append(r)
+        tenants = {}
+        for name in sorted(set(by_tenant) | set(self.tenant_completed)
+                           | set(self.tenant_shed)
+                           | set(self.tenant_deferred)):
+            trs = by_tenant.get(name, [])
+            tl = [r.latency for r in trs]
+            tenants[name] = dict(
+                completed=self.tenant_completed.get(name, 0),
+                shed=self.tenant_shed.get(name, 0),
+                deferred=self.tenant_deferred.get(name, 0),
+                p50_latency=_pctl(tl, 50), p99_latency=_pctl(tl, 99),
+                p99_wait=_pctl([r.wait for r in trs], 99),
+                mean_latency=float(np.mean(tl)) if tl else 0.0,
+                fairness=jain_fairness(tl),
+            )
+        # cross-tenant fairness over tenants *in the window* only: a tenant
+        # whose completions aged out of `history` would otherwise inject a
+        # spurious 0.0 mean and report unfairness on an idle tenant
+        tenant_means = [t["mean_latency"] for name, t in tenants.items()
+                       if by_tenant.get(name)]
         return dict(
             completed=self.total_completed,
             shed=self.total_shed,
+            deferred=self.total_deferred,
             pending=len(self.pending),
             inflight=len(self.inflight),
             steps=self.steps,
@@ -330,9 +504,13 @@ class LaneScheduler:
             p50_wait=_pctl(waits, 50), p99_wait=_pctl(waits, 99),
             p50_service=_pctl(svcs, 50), p99_service=_pctl(svcs, 99),
             fairness=jain_fairness(lats),
+            tenant_fairness=jain_fairness(tenant_means),
+            tenants=tenants,
             throughput=len(reqs) / span if span > 0 else 0.0,
             certified_frac=(float(np.mean([r.result.stats.certified
                                            for r in reqs])) if reqs else 0.0),
+            policy=self.policy.name,
+            cost_calibration_error=self.cost_model.calibration_error(),
             signatures=len(self.backend.signature_log),
             unplanned_signatures=len(self.backend.signature_log.unplanned),
         )

@@ -1,0 +1,110 @@
+"""Execute the fenced Python blocks in README.md and docs/*.md.
+
+Documentation snippets rot silently: an API rename passes every test while
+the README still shows the old spelling. This checker makes the docs part
+of CI — every ```python fence is executed, per file, top to bottom, in one
+shared namespace (so a later block may use names an earlier block in the
+same file defined, exactly as a reader would run them).
+
+    python tools/docs_check.py README.md docs/*.md
+
+Conventions:
+* Only ``python`` fences run; ``bash``/``json``/``text`` fences are
+  documentation-only.
+* A fence whose info string contains ``no-run`` (e.g. ```` ```python
+  no-run ````) is skipped — for snippets that need hardware or external
+  services. Use sparingly: a skipped snippet is an unchecked snippet.
+* Blocks run from the repo root (snippets may open checked-in files by
+  relative path).
+* A forced 4-device host platform is set up before jax loads, so
+  mesh-serving snippets work on CPU-only hosts.
+
+Exit status: nonzero on the first failing block, with the file, block
+index, and traceback. No failure output means every snippet ran green.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+import time
+import traceback
+
+# before any snippet (or transitively jax) is imported: mesh snippets need
+# devices, CPU-only CI hosts need them forced
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+FENCE_RE = re.compile(r"^```(\S*)[ \t]*(.*)$")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def python_blocks(path: str) -> list[tuple[int, str, str]]:
+    """(start line, info string, source) for each fenced code block."""
+    blocks, info, buf, start = [], None, [], 0
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            m = FENCE_RE.match(line.rstrip())
+            if m and info is None:
+                info, buf, start = (m.group(1) + " " + m.group(2)).strip(), \
+                    [], ln
+            elif line.rstrip() == "```" and info is not None:
+                blocks.append((start, info, "".join(buf)))
+                info = None
+            elif info is not None:
+                buf.append(line)
+    if info is not None:
+        raise SystemExit(f"{path}:{start}: unterminated code fence")
+    return blocks
+
+
+def run_file(path: str) -> tuple[int, int]:
+    """Execute a file's python fences in one namespace; (ran, skipped)."""
+    namespace: dict = {"__name__": f"docscheck:{os.path.basename(path)}"}
+    ran = skipped = 0
+    for idx, (ln, info, src) in enumerate(python_blocks(path)):
+        words = info.split()
+        if not words or words[0] not in ("python", "py"):
+            continue
+        if "no-run" in words[1:]:
+            skipped += 1
+            print(f"  SKIP  {path}:{ln} (no-run)")
+            continue
+        t0 = time.monotonic()
+        try:
+            exec(compile(src, f"{path}:block{idx}(line {ln})", "exec"),
+                 namespace)
+        except Exception:
+            print(f"  FAIL  {path}:{ln} (block {idx})", flush=True)
+            traceback.print_exc()
+            raise SystemExit(1) from None
+        ran += 1
+        print(f"  ok    {path}:{ln} ({time.monotonic() - t0:.1f}s)",
+              flush=True)
+    return ran, skipped
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or ["README.md",
+                     *sorted(os.path.join("docs", p)
+                             for p in os.listdir(os.path.join(REPO_ROOT,
+                                                              "docs"))
+                             if p.endswith(".md"))]
+    os.chdir(REPO_ROOT)   # snippets open checked-in files by relative path
+    total = skipped = 0
+    for path in paths:
+        print(f"docs-check: {path}", flush=True)
+        r, s = run_file(path)
+        total += r
+        skipped += s
+    print(f"docs-check: {total} blocks ran green, {skipped} skipped "
+          f"across {len(paths)} files")
+    if total == 0:
+        print("docs-check: no runnable blocks found — check the fences",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
