@@ -1,7 +1,8 @@
 """Serving-path benchmark: engine vs per-query loop, continuous vs lockstep
-admission on skewed workloads, and open-system (Poisson) load curves.
+admission on skewed workloads, open-system (Poisson) load curves, and the
+fused-round kernel microbench.
 
-Three modes:
+Four modes:
 
 * ``--mode engine`` (default) — PR 1's headline comparison: at serving batch
   sizes the per-query pause/inspect/resume loop pays its host round-trips
@@ -48,12 +49,19 @@ Three modes:
   ``--slo`` value becomes the per-tenant latency budget (shed/defer at
   submit) instead of installing the legacy callback.
 
+* ``--mode kernel`` — PR 6's fused-round point: one ``fused_round_batch``
+  dispatch vs the per-stage chain it replaced in the engine's PGS round
+  (prefix-mask, adjacency, greedy, host extraction), at serving (prefix
+  width, k) shapes, with bit-parity cross-checks (fused vs staged, and
+  interpret-mode Pallas vs the jnp oracle) that exit nonzero on any
+  violation — the CI ``kernel-parity`` gate.
+
 ``--json PATH`` merges the run into a stable-schema JSON trend file
 (``schema_version`` 2 — see ``docs/BENCH_SCHEMA.md`` for the field map and
 the version-1 compatibility rule): one ``modes`` entry per bench mode,
 point entries merged by key across invocations, so CI can upload a single
-``BENCH_pr5.json`` artifact with skewed-admission, open-system, and
-policy/fairness numbers side by side.
+``BENCH_pr6.json`` artifact with skewed-admission, open-system,
+policy/fairness, and fused-kernel numbers side by side.
 """
 from __future__ import annotations
 
@@ -74,7 +82,9 @@ from benchmarks import datasets as D
 from benchmarks.common import emit, timed
 from repro.core.api import diverse_search
 from repro.core.batch import batch_greedy_diverse, batch_optimal_diverse
-from repro.core.batch_progressive import batch_pss
+from repro.core.batch_progressive import (_batched_adjacency, _mask_prefix,
+                                          batch_pss)
+from repro.kernels import ops as kops
 from repro.serve.scheduler import LaneScheduler, jain_fairness, percentile
 
 
@@ -212,6 +222,112 @@ def run_skewed(n: int = D.N_DEFAULT, requests: int = 64, lanes: int = 16,
     print(f"# parity check: {violations} violations", flush=True)
     return dict(lockstep=ls, continuous=cs, p99_win=p99_win,
                 tput_win=tput_win, parity_violations=violations)
+
+
+# ----------------------------------------------------------- kernel mode ----
+
+def _prefix_tiles(x, metric, B: int, width: int, seed: int = 7):
+    """Realistic fused-round inputs: per-lane sorted top-``width`` prefixes
+    of real query/corpus scores, with ragged per-lane budgets."""
+    rng = np.random.default_rng(seed)
+    qs = jnp.asarray(D.queries_for(x, B))
+    sims = np.asarray(kops.batch_similarity_many(qs, jnp.asarray(x), metric,
+                                                 impl="ref"))
+    order = np.argsort(-sims, axis=1, kind="stable")[:, :width]
+    ids = order.astype(np.int32)
+    scores = np.take_along_axis(sims, order, axis=1).astype(np.float32)
+    # ragged budgets: half the lanes run a partial prefix (exercises the
+    # in-kernel masking the engine's _mask_prefix stage used to do)
+    Ks = np.where(np.arange(B) % 2 == 0, width,
+                  rng.integers(width // 2, width, size=B)).astype(np.int32)
+    return jnp.asarray(ids), jnp.asarray(scores), Ks
+
+
+def run_kernel(n: int = D.N_DEFAULT, B: int = 16,
+               widths: tuple = (128, 256), ks: tuple = (5, 10),
+               reps: int = 20, seed: int = 7) -> dict:
+    """Fused round kernel vs the per-stage dispatch chain it replaced.
+
+    For each (prefix width, k) point, times ``kops.fused_round_batch`` (one
+    dispatch) against the engine's pre-PR-6 chain — ``_mask_prefix`` ->
+    ``_batched_adjacency`` -> ``greedy_diversify_batch`` -> host extraction
+    (3 dispatches + the same host gather) — on identical inputs, and
+    cross-checks both for bit-equal results. Each point also runs the
+    interpret-mode Pallas kernel on a sub-tile and asserts bit-parity with
+    the jnp oracle, so a CPU-only CI run still exercises the kernel's own
+    code path. Any mismatch counts as a parity violation (nonzero exit).
+    """
+    graph, x, metric = D.load_graph("deep-like", n=n)
+    vectors = graph.vectors
+    eps_val = D.calibrate_eps(x, metric, D.PHI_TARGETS["medium"])
+    out: dict = {"parity_violations": 0}
+    impl = kops._resolve(None)
+    for width in widths:
+        ids, scores, Ks = _prefix_tiles(x, metric, B, width, seed)
+        eps = jnp.full(B, eps_val, jnp.float32)
+        Ks_j = jnp.asarray(Ks)
+        for k in ks:
+            def fused():
+                sid, ssc, cnt, _ = kops.fused_round_batch(
+                    vectors, ids, scores, Ks_j, eps, k, metric)
+                return np.asarray(sid), np.asarray(ssc), np.asarray(cnt)
+
+            def staged():
+                ids_m, sc_m = _mask_prefix(ids, scores, Ks_j)
+                adj = _batched_adjacency(vectors, ids_m, eps, metric)
+                sel, cnt = kops.greedy_diversify_batch(sc_m, adj, k,
+                                                       valid=ids_m >= 0)
+                s, i_np, s_np = (np.asarray(sel), np.asarray(ids_m),
+                                 np.asarray(sc_m))
+                g = np.maximum(s, 0)
+                return (np.where(s >= 0, np.take_along_axis(i_np, g, 1), -1),
+                        np.where(s >= 0, np.take_along_axis(s_np, g, 1), 0.0)
+                        .astype(np.float32),
+                        np.asarray(cnt))
+
+            fres, dt_f = timed(fused, warmup=1, reps=reps)
+            sres, dt_s = timed(staged, warmup=1, reps=reps)
+            violations = 0
+            for name, a, b in zip(("ids", "scores", "count"), fres, sres):
+                if not np.array_equal(a, b):
+                    print(f"# PARITY VIOLATION fused!=staged W={width} "
+                          f"k={k}: {name}")
+                    violations += 1
+            # interpret-mode kernel vs oracle on a sub-tile (CPU-friendly)
+            sub = min(4, B)
+            want = kops.fused_round_batch(vectors, ids[:sub], scores[:sub],
+                                          Ks_j[:sub], eps[:sub], k, metric,
+                                          impl="ref")
+            got = kops.fused_round_batch(vectors, ids[:sub], scores[:sub],
+                                         Ks_j[:sub], eps[:sub], k, metric,
+                                         impl="interpret")
+            for name, a, b in zip(("ids", "scores", "count", "cert"),
+                                  got, want):
+                if not np.array_equal(np.asarray(a), np.asarray(b)):
+                    print(f"# PARITY VIOLATION interpret!=ref W={width} "
+                          f"k={k}: {name}")
+                    violations += 1
+            speedup = dt_s / dt_f
+            emit(f"kernel/W{width}k{k}/fused", dt_f * 1e6,
+                 f"us_per_round;impl={impl}")
+            emit(f"kernel/W{width}k{k}/staged", dt_s * 1e6,
+                 f"us_per_round;speedup={speedup:.2f}x;"
+                 f"violations={violations}")
+            out[(width, k)] = dict(
+                fused_s=dt_f, staged_s=dt_s, speedup=speedup,
+                lanes=B, impl=impl, parity_violations=violations)
+            out["parity_violations"] += violations
+    return out
+
+
+def _kernel_payload(res: dict) -> dict:
+    """Point key: ``kernel@W<width>k<k>`` (mirrors the open mode's
+    ``<kind>@...`` convention); ``parity_violations`` totals the file-level
+    gate CI trips on."""
+    points = sorted(kv for kv in res.items() if isinstance(kv[0], tuple))
+    out = {f"kernel@W{w}k{k}": point for (w, k), point in points}
+    out["parity_violations"] = res["parity_violations"]
+    return out
 
 
 # ------------------------------------------------------------- open mode ----
@@ -555,7 +671,7 @@ def _open_payload(res: dict) -> dict:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="engine",
-                    choices=["engine", "skewed", "open"])
+                    choices=["engine", "skewed", "open", "kernel"])
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke sizes (small n, few requests)")
     ap.add_argument("--n", type=int, default=None)
@@ -603,6 +719,13 @@ def main(argv=None):
     n = args.n or (2000 if args.tiny else D.N_DEFAULT)
     requests = args.batch or (16 if args.tiny else 64)
     lanes = args.lanes or (4 if args.tiny else 16)
+    if args.mode == "kernel":
+        res = run_kernel(n=n, B=(8 if args.tiny else 16),
+                         widths=((128,) if args.tiny else (128, 256)),
+                         reps=(5 if args.tiny else 20), seed=args.seed)
+        if args.json:
+            write_trend_json(args.json, "kernel", _kernel_payload(res))
+        return 1 if res["parity_violations"] else 0
     if args.mode == "open":
         qps_list = [float(q) for q in
                     (args.qps or ("4" if args.tiny else "2,8,32")).split(",")]

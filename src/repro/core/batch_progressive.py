@@ -30,9 +30,13 @@ Device-side structure (unchanged from the original engine):
 * **Bucketed growth** — lanes whose candidate budget outgrows their capacity
   are rebuilt together per power-of-two target with the exact rebuild of
   ``beam_search.rebuild_for_growth`` (one vmapped rebuild per bucket).
-* **Batched diversify + verify** — adjacency builds, greedy selection (the
-  (B, K)-grid Pallas kernel), Theorem-1 degree schedules, and div-A* run
-  per (prefix width, k) group; Theorem-2 certificates come back per lane.
+* **Batched diversify + verify** — the PGS/warm-start round is ONE fused
+  dispatch per (prefix width, k) group (``kops.fused_round_batch``: prefix
+  masking, candidate gather, G^eps adjacency, greedy selection and output
+  extraction in a single ``pallas_call`` on the kernel paths — see
+  ``kernels/fused_round.py``); the remaining verify stages (Theorem-1
+  degree schedules, div-A*) run per-group from masked prefixes, with
+  Theorem-2 certificates coming back per lane.
 
 Compile-signature discipline: every jitted call site is logged in a
 ``SignatureLog`` keyed by its shape/static signature — ``(lane count,
@@ -180,7 +184,8 @@ def jit_cache_sizes() -> dict[str, int]:
     hook: a serving pass that recompiles shows up as a growing entry)."""
     fns = dict(search=_batched_search_loop, rebuild=_rebuild_lanes,
                prefix=_mask_prefix, adjacency=_batched_adjacency,
-               div_astar=_batched_div_astar, theorem1=_batched_theorem1)
+               div_astar=_batched_div_astar, theorem1=_batched_theorem1,
+               fused_round=kops._ref_fused_round_batch)
     return {name: int(f._cache_size()) for name, f in fns.items()
             if hasattr(f, "_cache_size")}
 
@@ -531,20 +536,13 @@ class BatchProgressiveDriver:
             np.maximum(64, np.array([_next_pow2(int(K)) for K in Ks])),
             self.caps)
 
-    def prefix_groups(self, Ks: np.ndarray, active: np.ndarray, ks=None):
-        """Yield (lane_indices, ids, scores) per (width bucket[, k]) group.
-
-        The diversify/verify stages consume prefixes through this: lanes
-        whose prefix lands in the same power-of-two bucket (and, when ``ks``
-        is given, share the same ``k``) are processed together at exactly
-        that width. Width changes div-A*'s cursor-step accounting (padding
-        slots consume budget), so running each lane at its own per-query
-        bucket width — not the batch max — is what keeps div-A* results
-        identical to the per-query driver. Groups are padded to a
-        power-of-two lane count with empty-sentinel rows (id=-1, -inf) so
-        compile signatures stay bounded; only the first ``len(lane_indices)``
-        rows are real.
-        """
+    def _group_lanes(self, Ks: np.ndarray, active: np.ndarray, ks=None):
+        """Group active lanes by (width bucket[, k]) — shared by the masked
+        and raw prefix generators. Yields (lane_indices, width,
+        padded_jnp_indices, Ks_pad): groups are padded to a power-of-two
+        lane count (pad rows keep K=0 -> all-sentinel) so compile
+        signatures stay bounded; only the first ``len(lane_indices)`` rows
+        are real."""
         Ks = np.minimum(np.asarray(Ks, np.int64), self.caps)
         buckets = self._buckets(Ks)
         groups: dict[tuple, list[int]] = {}
@@ -553,18 +551,45 @@ class BatchProgressiveDriver:
             groups.setdefault(key, []).append(i)
         for (width, _k), idx in sorted(groups.items()):
             idx = np.asarray(idx)
-            m = len(idx)
             padded = pow2_padded_indices(idx)
-            g = len(padded)
-            jidx = jnp.asarray(padded)
-            Ks_pad = np.zeros(g, np.int64)
-            Ks_pad[:m] = Ks[idx]     # pad rows keep K=0 -> all-sentinel
-            self.signatures.note("prefix", g, width)
+            Ks_pad = np.zeros(len(padded), np.int64)
+            Ks_pad[:len(idx)] = Ks[idx]
+            yield idx, width, jnp.asarray(padded), Ks_pad
+
+    def prefix_groups(self, Ks: np.ndarray, active: np.ndarray, ks=None):
+        """Yield (lane_indices, ids, scores) per (width bucket[, k]) group.
+
+        The multi-dispatch diversify/verify stages (PDS, PDS-final, PSS)
+        consume prefixes through this: lanes whose prefix lands in the same
+        power-of-two bucket (and, when ``ks`` is given, share the same
+        ``k``) are processed together at exactly that width. Width changes
+        div-A*'s cursor-step accounting (padding slots consume budget), so
+        running each lane at its own per-query bucket width — not the batch
+        max — is what keeps div-A* results identical to the per-query
+        driver. Rows are ``_mask_prefix``-masked: positions >= K carry the
+        id=-1 / -inf sentinels.
+        """
+        for idx, width, jidx, Ks_pad in self._group_lanes(Ks, active, ks):
+            self.signatures.note("prefix", len(jidx), width)
             ids, scores = _mask_prefix(
                 self.state.queue.ids[jidx, :width],
                 self.state.queue.scores[jidx, :width],
                 jnp.asarray(Ks_pad, jnp.int32))
             yield idx, ids, scores
+
+    def prefix_groups_raw(self, Ks: np.ndarray, active: np.ndarray, ks=None):
+        """Like ``prefix_groups`` but yields the *raw* queue rows plus the
+        per-lane budgets: (lane_indices, ids, scores, Ks_pad).
+
+        For consumers that fold the prefix masking into their own dispatch —
+        the fused round kernel (``kops.fused_round_batch``) takes the raw
+        sorted rows and ``Ks`` and performs masking, gather, adjacency and
+        greedy diversification in one call, so a separate ``_mask_prefix``
+        launch here would be a wasted round trip.
+        """
+        for idx, width, jidx, Ks_pad in self._group_lanes(Ks, active, ks):
+            yield (idx, self.state.queue.ids[jidx, :width],
+                   self.state.queue.scores[jidx, :width], Ks_pad)
 
 
 # ----------------------------------------------------------------- engine ----
@@ -608,8 +633,12 @@ class ProgressiveEngine:
                  capacity0: int | None = None,
                  max_capacity: int | None = None,
                  max_iters: int = 64, max_expansions: int = 400_000,
-                 max_signatures: int | None = 1024):
+                 max_signatures: int | None = 1024,
+                 kernel_impl: str | None = None):
         self.graph = graph
+        # backend for the fused PGS round ("auto"/"ref"/"interpret"/
+        # "pallas"); None defers to kops.set_default_impl / "auto".
+        self.kernel_impl = kernel_impl
         if driver is None:
             if num_lanes is None:
                 raise ValueError("need num_lanes or driver")
@@ -751,7 +780,8 @@ class ProgressiveEngine:
         immediately after the PGS warm start with no search in between):
 
         1. search burst — PGS/PDS lanes stabilize their first K*ef.
-        2. PGS round    — greedy diversify; grow K / warm-start PSS / finish.
+        2. PGS round    — one fused diversify dispatch per group; grow K /
+           warm-start PSS / finish.
         3. PDS round    — Theorem-1 degree schedule; update K / go final.
         4. PDS final    — one certified div-A*.
         5. PSS round    — div-A* + Theorem-2 certificate; uncertified lanes
@@ -794,31 +824,30 @@ class ProgressiveEngine:
         self._unharvested.append(int(lane))
         finished.append(int(lane))
 
-    # Alg. 2 round: greedy diversification over the stabilized prefix.
+    # Alg. 2 round: one fused diversification dispatch over the stabilized
+    # prefix — masking, gather, G^eps adjacency, greedy selection and output
+    # extraction all inside kops.fused_round_batch (a single pallas_call on
+    # the kernel paths; see kernels/fused_round.py).
     def _pgs_round(self, gmask, stable, finished) -> None:
         d, n = self.driver, self.graph.size
         exhausted = gmask & (stable < np.minimum(self.K * self.efs, n))
         self.K = np.where(exhausted, np.maximum(self.K, stable), self.K)
         count = np.zeros(self.B, np.int64)
-        for idx, ids, scores in d.prefix_groups(self.K, gmask, ks=self.ks):
+        for idx, ids, scores, Ks_pad in d.prefix_groups_raw(self.K, gmask,
+                                                            ks=self.ks):
             k_g = int(self.ks[idx[0]])
             g, width = ids.shape
-            d.signatures.note("adjacency", g, width)
-            adj = _batched_adjacency(self.graph.vectors, ids,
-                                     self._group_eps(idx, g),
-                                     self.graph.metric)
-            d.signatures.note("greedy", g, width, k_g)
-            sel, cnt = kops.greedy_diversify_batch(scores, adj, k_g,
-                                                   valid=ids >= 0)
-            cnt_np, sel_np = np.asarray(cnt), np.asarray(sel)
-            ids_np, sc_np = np.asarray(ids), np.asarray(scores)
+            d.signatures.note("fused_round", g, width, k_g)
+            sel_ids, sel_sc, cnt, _cert = kops.fused_round_batch(
+                self.graph.vectors, ids, scores, Ks_pad,
+                self._group_eps(idx, g), k_g, self.graph.metric,
+                impl=self.kernel_impl)
+            cnt_np = np.asarray(cnt)
+            sid_np, ssc_np = np.asarray(sel_ids), np.asarray(sel_sc)
             for gi, lane in enumerate(idx):
                 count[lane] = cnt_np[gi]
-                s = sel_np[gi]
-                self.out_ids[lane, :k_g] = np.where(
-                    s >= 0, ids_np[gi][np.maximum(s, 0)], -1)
-                self.out_sc[lane, :k_g] = np.where(
-                    s >= 0, sc_np[gi][np.maximum(s, 0)], 0.0)
+                self.out_ids[lane, :k_g] = sid_np[gi]
+                self.out_sc[lane, :k_g] = ssc_np[gi]
         d.stats.div_calls[gmask] += 1
         success = gmask & (count >= self.ks)
         ex_term = gmask & ~success & exhausted
@@ -1014,6 +1043,12 @@ class ProgressiveEngine:
                                              self.graph.metric)
                     note("greedy", g, width, k)
                     kops.greedy_diversify_batch(sc, adj, k, valid=ids >= 0)
+                    note("fused_round", g, width, k)
+                    kops.fused_round_batch(self.graph.vectors, ids, sc,
+                                           np.zeros(g, np.int64),
+                                           jnp.zeros(g, jnp.float32),
+                                           k, self.graph.metric,
+                                           impl=self.kernel_impl)
                     note("theorem1", g, width, k)
                     _batched_theorem1(adj, ids >= 0, k)
                     note("div_astar", g, width, k)
@@ -1026,14 +1061,16 @@ class ProgressiveEngine:
 def _run_lockstep(graph: FlatGraph, qs, k: int, eps: float, ef: int,
                   method: str, max_iters: int, max_expansions: int,
                   driver: BatchProgressiveDriver | None = None,
-                  max_K: int | None = None
+                  max_K: int | None = None,
+                  kernel_impl: str | None = None
                   ) -> tuple[BatchDiverseResult, ProgressiveEngine]:
     qs = jnp.asarray(qs, jnp.float32)
     if driver is None:
         driver = BatchProgressiveDriver(graph, qs, ef, k)
     engine = ProgressiveEngine(graph, driver=driver, max_k=k, default_ef=ef,
                                max_iters=max_iters,
-                               max_expansions=max_expansions)
+                               max_expansions=max_expansions,
+                               kernel_impl=kernel_impl)
     for lane in range(driver.B):
         engine.admit_in_place(lane, k=k, eps=eps, ef=ef, method=method,
                               max_K=max_K)
@@ -1074,7 +1111,8 @@ def _concat_results(parts: list[BatchDiverseResult]) -> BatchDiverseResult:
 
 def batch_pss(graph: FlatGraph, qs, k: int, eps: float, ef: int = 40,
               max_iters: int = 64, max_expansions: int = 400_000,
-              streams: int = 1) -> BatchDiverseResult:
+              streams: int = 1,
+              kernel_impl: str | None = None) -> BatchDiverseResult:
     """Batched Alg. 4 — the lockstep engine entry point.
 
     Phase 1 runs batched PGS (warm start + a size-k diverse set exists among
@@ -1097,10 +1135,11 @@ def batch_pss(graph: FlatGraph, qs, k: int, eps: float, ef: int = 40,
                                min(streams, qs.shape[0]))
         with concurrent.futures.ThreadPoolExecutor(len(parts)) as ex:
             futs = [ex.submit(batch_pss, graph, qs[jnp.asarray(c)], k, eps,
-                              ef, max_iters, max_expansions) for c in parts]
+                              ef, max_iters, max_expansions, 1, kernel_impl)
+                    for c in parts]
             return _concat_results([f.result() for f in futs])
     res, _ = _run_lockstep(graph, qs, k, eps, ef, "pss", max_iters,
-                           max_expansions)
+                           max_expansions, kernel_impl=kernel_impl)
     return res
 
 

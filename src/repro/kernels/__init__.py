@@ -1,3 +1,15 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels + jnp oracles behind one `impl` dispatch layer
+# (`ops.py`: auto / ref / interpret / pallas — docs/KERNELS.md is the
+# per-kernel catalog). Five kernels:
+#
+#   batch_similarity   — query-tile x database-tile scoring (ip/cos/l2)
+#   pairwise_adjacency — candidate Gram tiles -> G^eps adjacency (int8)
+#   topk_merge         — bitonic merge of sorted score/id runs
+#   greedy_diversify   — lane-grid greedy diversification over G^eps
+#   fused_round        — PR 6: score -> adjacency (VMEM scratch) ->
+#                        greedy -> Theorem-2 certificate inputs, one
+#                        pallas_call per engine PGS round
+#
+# `ref.py` holds the bit-parity jnp oracles; each kernel module owns its
+# pallas_call. Add a kernel ONLY for a compute hot-spot the paper's
+# serving path actually exercises.

@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: one fused progressive-round diversify stage per lane.
+
+The progressive serving loop's hot path (``ProgressiveEngine._pgs_round``)
+used to be a chain of separate dispatches per prefix group — prefix-mask,
+gather + G^eps adjacency build, greedy diversification, output extraction —
+each bouncing the (K, K) candidate tile through HBM between stages. This
+kernel fuses the whole per-lane round into one ``pallas_call``:
+
+* **grid** — one program per occupied lane (``grid=(B,)``), exactly like
+  ``greedy_diversify_batch_pallas``: each program sees its own lane's
+  ``(1, W)`` score row and ``(W, d)`` gathered candidate tile.
+* **similarity scoring** — the candidate tile's pairwise similarities are
+  one MXU Gram block (``dot_general`` + the metric transform, the same math
+  as ``batch_similarity``/``pairwise_adjacency``).
+* **eps-adjacency** — thresholded against the lane's own ``eps`` and stored
+  in **kernel scratch memory** (a ``(W, W)`` int8 VMEM buffer): the
+  adjacency matrix never exists in HBM at all.
+* **greedy diversification** — the k sequential steps of paper §II-B-2 run
+  on-chip against the scratch adjacency: masked argmax, ban the picked
+  row's neighbors, repeat. Picks and their scores stream straight to the
+  outputs.
+
+Outputs per lane: ``sel`` (local candidate indices, -1 padded) and
+``selsc`` (the picked scores — zero where no pick). The wrapper in
+``ops.fused_round_batch`` derives global ids, the pick count, and the
+Theorem-2 certificate inputs ``(total, s_K)`` from these plus the masked
+score row (kept outside the kernel so both the ref and Pallas paths share
+one bit-exact reduction).
+
+VMEM budget per program at W=1024, d<=512, f32:
+  scores 4KB + tile 2MB + scratch adj 1MB + outputs 1KB  < 4MB   (OK)
+
+Parity contract: identical greedy decisions to ``ref.fused_round`` given
+identical adjacency; the adjacency itself is a thresholded Gram tile whose
+edges can flip vs the jnp oracle only for pairs within one float rounding
+step of ``eps`` (the repo-wide documented near-eps tie caveat) — bit-exact
+on tie-free inputs, which is what ``tests/test_fused_round.py`` pins.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(eps_ref, scores_ref, vecs_ref, sel_ref, selsc_ref, adj_ref, *,
+            k: int, metric: str):
+    W = scores_ref.shape[1]
+    x = vecs_ref[...].astype(jnp.float32)                 # (W, d) tile
+    eps = eps_ref[0, 0]
+
+    # -- similarity scoring: one Gram block on the MXU ------------------------
+    dots = jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (W, W)
+    if metric == "ip":
+        sims = dots
+    elif metric == "cos":
+        n = jnp.sqrt(jnp.maximum(jnp.sum(x * x, axis=1, keepdims=True), 1e-12))
+        sims = dots / (n * n.T)
+    elif metric == "l2":
+        sq = jnp.sum(x * x, axis=1, keepdims=True)
+        d2 = jnp.maximum(sq + sq.T - 2.0 * dots, 0.0)
+        sims = 1.0 - jnp.sqrt(d2)
+    else:
+        raise ValueError(metric)
+
+    # -- eps-adjacency, thresholded straight into VMEM scratch ----------------
+    # (The diagonal and invalid rows/columns are NOT masked here: the greedy
+    # loop below bans the picked index explicitly, and invalid candidates
+    # carry -inf scores so they are banned from step zero — banning them
+    # again through a spurious edge is a no-op. This keeps the kernel free
+    # of global-index bookkeeping, like pairwise_adjacency_pallas.)
+    adj_ref[...] = (sims > eps).astype(jnp.int8)
+
+    # -- greedy diversification over the scratch tile -------------------------
+    scores = scores_ref[...]                              # (1, W), -inf = invalid
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+
+    def body(t, banned):
+        avail = jnp.where(banned, -jnp.inf, scores)
+        j = jnp.argmax(avail, axis=1)[0]
+        ok = avail[0, j] > -jnp.inf
+        pick = jnp.where(ok, j, -1).astype(jnp.int32)
+        pl.store(sel_ref, (slice(0, 1), pl.dslice(t, 1)), pick[None, None])
+        psc = jnp.where(ok, avail[0, j], 0.0).astype(jnp.float32)
+        pl.store(selsc_ref, (slice(0, 1), pl.dslice(t, 1)), psc[None, None])
+        row = pl.load(adj_ref, (pl.dslice(j, 1), slice(None)))   # (1, W)
+        new_banned = banned | (row > 0) | (lane == j)
+        return jnp.where(ok, new_banned, banned)
+
+    jax.lax.fori_loop(0, k, body, ~jnp.isfinite(scores))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "interpret"))
+def fused_round_batch_pallas(vectors: jnp.ndarray, ids: jnp.ndarray,
+                             scores: jnp.ndarray, Ks: jnp.ndarray,
+                             eps: jnp.ndarray, k: int, metric: str,
+                             interpret: bool = False):
+    """Fused round over a lane batch: one grid program per lane.
+
+    ``ids``/``scores`` are the raw ``(B, W)`` queue prefix rows (sorted,
+    -1 / -inf sentinels), ``Ks`` int32[B] the per-lane candidate budgets
+    (positions >= Ks[b] are masked off — the fused equivalent of the
+    engine's ``_mask_prefix`` stage), ``eps`` f32[B] the per-lane
+    diversification thresholds. The candidate gather stays outside the
+    kernel (one XLA gather feeding the flattened ``(B*W, d)`` row blocks),
+    inside the same jit, so the whole round is still a single dispatch.
+
+    Returns ``(sel int32[B, k] local indices -1-padded,
+    selsc f32[B, k] picked scores, ids_m int32[B, W] the masked prefix,
+    scores_m f32[B, W] the masked scores)`` — callers derive global ids,
+    counts and certificate inputs from these (see ``ops.fused_round_batch``).
+    """
+    B, W = ids.shape
+    pos = jnp.arange(W)[None, :]
+    keep = pos < Ks[:, None]
+    ids_m = jnp.where(keep, ids, -1)
+    scores_m = jnp.where(keep, scores, -jnp.inf)
+    valid = ids_m >= 0
+    s_in = jnp.where(valid, scores_m, -jnp.inf)
+    vecs = vectors[jnp.maximum(ids_m, 0)]                 # (B, W, d)
+
+    d = vectors.shape[1]
+    Wp = -(-W // 128) * 128
+    dp = -(-d // 128) * 128
+    kp = -(-k // 128) * 128
+    s_p = jnp.full((B, Wp), -jnp.inf, jnp.float32).at[:, :W].set(
+        s_in.astype(jnp.float32))
+    v_p = jnp.zeros((B, Wp, dp), jnp.float32).at[:, :W, :d].set(
+        vecs.astype(jnp.float32))
+    # flatten the lane axis into rows so each program's tile stays 2D
+    v_rows = v_p.reshape(B * Wp, dp)
+    eps_col = jnp.asarray(eps, jnp.float32).reshape(B, 1)
+
+    sel, selsc = pl.pallas_call(
+        functools.partial(_kernel, k=k, metric=metric),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, Wp), lambda b: (b, 0)),
+            pl.BlockSpec((Wp, dp), lambda b: (b, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, kp), lambda b: (b, 0)),
+            pl.BlockSpec((1, kp), lambda b: (b, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, kp), jnp.int32),
+            jax.ShapeDtypeStruct((B, kp), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.VMEM((Wp, Wp), jnp.int8)],
+        interpret=interpret,
+    )(eps_col, s_p, v_rows)
+    return sel[:, :k], selsc[:, :k], ids_m, scores_m

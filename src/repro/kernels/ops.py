@@ -16,12 +16,14 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.batch_similarity import batch_similarity_many_pallas
+from repro.kernels.fused_round import fused_round_batch_pallas
 from repro.kernels.greedy_diversify import (greedy_diversify_batch_pallas,
                                             greedy_diversify_pallas)
 from repro.kernels.pairwise_adjacency import pairwise_adjacency_pallas
 from repro.kernels.topk_merge import topk_merge_pallas
 
 _DEFAULT_IMPL = None  # overridable for tests via set_default_impl
+_IMPLS = ("auto", "ref", "interpret", "pallas")
 
 # jitted oracle entry points — eager lax.scan/sort would otherwise re-trace
 # (and on cache-unfriendly closures re-compile) on every driver call.
@@ -37,6 +39,17 @@ _ref_greedy_diversify = jax.jit(_ref.greedy_diversify,
 
 
 def set_default_impl(impl: str | None) -> None:
+    """Set the process-wide default backend (None restores "auto").
+
+    Ops entry points in this module resolve their backend at *call* time, so
+    flipping the default redirects every subsequent ops-level call. Jitted
+    callers that bake an op into their own traced function (e.g. the
+    engine's ``_batched_adjacency``) resolve at first trace — set the
+    default before the first engine call to affect those.
+    """
+    if impl is not None and impl not in _IMPLS:
+        raise ValueError(
+            f"unknown kernel impl {impl!r}; expected one of {_IMPLS} or None")
     global _DEFAULT_IMPL
     _DEFAULT_IMPL = impl
 
@@ -44,6 +57,9 @@ def set_default_impl(impl: str | None) -> None:
 def _resolve(impl: str | None) -> str:
     if impl is None:
         impl = _DEFAULT_IMPL or "auto"
+    if impl not in _IMPLS:
+        raise ValueError(
+            f"unknown kernel impl {impl!r}; expected one of {_IMPLS}")
     if impl == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "ref"
     return impl
@@ -125,3 +141,63 @@ def greedy_diversify_batch(scores, adj, k: int, valid=None,
     sel = greedy_diversify_batch_pallas(s, adj, k,
                                         interpret=(impl == "interpret"))
     return sel, jnp.sum(sel >= 0, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _ref_fused_round_batch(vectors, ids, scores, Ks, eps, k, metric):
+    return jax.vmap(
+        lambda i, s, K, e: _ref.fused_round(vectors, i, s, K, e, k, metric)
+    )(ids, scores, Ks, eps)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "interpret"))
+def _fused_round_batch_kernel(vectors, ids, scores, Ks, eps, k, metric,
+                              interpret):
+    sel, selsc, ids_m, scores_m = fused_round_batch_pallas(
+        vectors, ids, scores, Ks, eps, k, metric, interpret=interpret)
+    picked = sel >= 0
+    gidx = jnp.maximum(sel, 0)
+    sel_ids = jnp.where(picked, jnp.take_along_axis(ids_m, gidx, axis=1), -1)
+    count = jnp.sum(picked, axis=1).astype(jnp.int32)
+    valid = ids_m >= 0
+    total = jnp.sum(selsc, axis=1)
+    s_K = jnp.min(jnp.where(valid, scores_m, jnp.inf), axis=1)
+    s_K = jnp.where(jnp.any(valid, axis=1), s_K, -jnp.inf)
+    cert = jnp.stack([total, s_K], axis=1)
+    return sel_ids, selsc, count, cert
+
+
+def fused_round_batch(vectors, ids, scores, Ks, eps, k: int, metric: str,
+                      impl: str | None = None):
+    """One fused progressive round over a lane batch — a single dispatch.
+
+    Replaces the per-round chain prefix-mask -> gather -> adjacency ->
+    greedy -> extract with one call (one ``pallas_call`` on the kernel
+    paths, one jitted vmap of ``ref.fused_round`` on the oracle path).
+
+    vectors (n, d) corpus, ids int32 (B, W) raw sorted queue prefixes
+    (-1 sentinels), scores f32 (B, W) (-inf sentinels), Ks int (B,)
+    per-lane candidate budgets, eps f32 (B,) per-lane thresholds.
+
+    Returns ``(sel_ids int32[B, k] global ids -1-padded,
+    sel_scores f32[B, k] zero-padded, count int32[B],
+    cert f32[B, 2] = (total, s_K) Theorem-2 certificate inputs)``.
+
+    Backend dispatch happens here at call time (not trace time), so
+    ``set_default_impl`` redirects the engine's hot path without a retrace.
+    Parity: kernel paths are bit-exact vs "ref" on tie-free inputs (no
+    candidate pair within float rounding of its lane's eps) — the greedy
+    decisions consume the queue scores as-is and the certificate
+    reductions run outside the kernel, so the adjacency threshold is the
+    only place a kernel/oracle bit can differ.
+    """
+    impl = _resolve(impl)
+    ids = jnp.asarray(ids, jnp.int32)
+    scores = jnp.asarray(scores, jnp.float32)
+    Ks = jnp.asarray(Ks, jnp.int32)
+    eps = jnp.asarray(eps, jnp.float32)
+    if impl == "ref":
+        return _ref_fused_round_batch(vectors, ids, scores, Ks, eps, k,
+                                      metric)
+    return _fused_round_batch_kernel(vectors, ids, scores, Ks, eps, k,
+                                     metric, impl == "interpret")

@@ -75,3 +75,41 @@ def greedy_diversify(scores: jnp.ndarray, adj: jnp.ndarray, k: int,
     (banned, count), picks = jax.lax.scan(step, (banned, jnp.int32(0)),
                                           None, length=k)
     return picks, count
+
+
+def fused_round(vectors: jnp.ndarray, ids: jnp.ndarray, scores: jnp.ndarray,
+                K: jnp.ndarray, eps: jnp.ndarray, k: int, metric: str):
+    """One lane's fused progressive-round stage (semantic ground truth).
+
+    Composes the stages ``ProgressiveEngine._pgs_round`` used to dispatch
+    separately — prefix masking, candidate gather, eps-adjacency build,
+    greedy diversification, output extraction — exactly, so the fused
+    Pallas kernel has a single bit-parity oracle:
+
+    ``ids``/``scores`` are one raw queue prefix row (sorted, -1 / -inf
+    sentinels), ``K`` the lane's candidate budget (positions >= K masked
+    off), ``eps`` the lane's diversification threshold.
+
+    Returns ``(sel_ids int32[k] global ids -1-padded,
+    sel_scores f32[k] zero-padded, count int32,
+    cert f32[2] = (total, s_K))`` where ``total`` is the diversified set's
+    score sum and ``s_K`` the K-th (worst kept) candidate score — the
+    Theorem-2 certificate inputs (``theorem2_holds(minValue, s_K)``).
+    """
+    W = ids.shape[0]
+    keep = jnp.arange(W) < K
+    ids_m = jnp.where(keep, ids, -1)
+    scores_m = jnp.where(keep, scores, -jnp.inf)
+    valid = ids_m >= 0
+    x = vectors[jnp.maximum(ids_m, 0)]
+    adj = pairwise_adjacency(x, eps, metric, valid)
+    sel, count = greedy_diversify(scores_m, adj, k, valid)
+    picked = sel >= 0
+    gidx = jnp.maximum(sel, 0)
+    sel_ids = jnp.where(picked, ids_m[gidx], -1)
+    sel_scores = jnp.where(picked, scores_m[gidx], 0.0).astype(jnp.float32)
+    total = jnp.sum(sel_scores)
+    s_K = jnp.min(jnp.where(valid, scores_m, jnp.inf))
+    s_K = jnp.where(jnp.any(valid), s_K, -jnp.inf)
+    cert = jnp.stack([total, s_K])
+    return sel_ids, sel_scores, count, cert

@@ -1,0 +1,156 @@
+"""Fused round kernel: bit-parity vs the jnp oracle (interpret mode), the
+old per-stage dispatch chain, and the engine (ARCHITECTURE.md contract #12).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.batch_progressive import (_batched_adjacency, _mask_prefix,
+                                          batch_pss)
+from repro.index.flat import build_knn_graph
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _normalize(v):
+    return (v / np.maximum(np.linalg.norm(v, axis=-1, keepdims=True),
+                           1e-9)).astype(np.float32)
+
+
+def _lane_batch(n=600, d=24, B=8, W=96, seed=11):
+    """Random sorted queue-prefix rows with ragged fill and budgets."""
+    rng = np.random.default_rng(seed)
+    vectors = jnp.asarray(_normalize(rng.normal(size=(n, d))))
+    ids = np.full((B, W), -1, np.int32)
+    scores = np.full((B, W), -np.inf, np.float32)
+    Ks = rng.integers(8, W + 1, size=B).astype(np.int32)
+    for b in range(B):
+        m = int(rng.integers(5, W + 1))
+        ids[b, :m] = rng.choice(n, size=m, replace=False)
+        scores[b, :m] = np.sort(rng.normal(size=m))[::-1]
+    return vectors, ids, scores, Ks
+
+
+def _assert_rounds_equal(got, want):
+    for name, g, w in zip(("sel_ids", "sel_scores", "count", "cert"),
+                          got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+
+
+@pytest.mark.parametrize("eps", [0.5, 0.8])
+@pytest.mark.parametrize("k", [5, 10])
+def test_fused_round_interpret_bit_parity(eps, k):
+    """The ISSUE-6 acceptance sweep: interpret-mode kernel == jnp oracle,
+    bit-exact, for eps in {0.5, 0.8} x k in {5, 10}."""
+    vectors, ids, scores, Ks = _lane_batch()
+    eps_v = np.full(ids.shape[0], eps, np.float32)
+    want = ops.fused_round_batch(vectors, ids, scores, Ks, eps_v, k, "cos",
+                                 impl="ref")
+    got = ops.fused_round_batch(vectors, ids, scores, Ks, eps_v, k, "cos",
+                                impl="interpret")
+    _assert_rounds_equal(got, want)
+
+
+@pytest.mark.parametrize("metric", ["ip", "l2"])
+def test_fused_round_interpret_parity_metrics(metric):
+    vectors, ids, scores, Ks = _lane_batch(seed=12)
+    eps_v = np.asarray(RNG.uniform(0.2, 0.7, size=ids.shape[0]), np.float32)
+    want = ops.fused_round_batch(vectors, ids, scores, Ks, eps_v, 5, metric,
+                                 impl="ref")
+    got = ops.fused_round_batch(vectors, ids, scores, Ks, eps_v, 5, metric,
+                                impl="interpret")
+    _assert_rounds_equal(got, want)
+
+
+def test_fused_round_matches_per_stage_chain():
+    """The fused op reproduces the per-stage dispatch chain it replaced in
+    ``ProgressiveEngine._pgs_round`` bit-for-bit: _mask_prefix ->
+    _batched_adjacency -> greedy_diversify_batch -> host extraction."""
+    vectors, ids, scores, Ks = _lane_batch(seed=13)
+    B, W = ids.shape
+    k = 6
+    eps_v = jnp.asarray(RNG.uniform(0.3, 0.8, size=B), jnp.float32)
+
+    sel_ids, sel_sc, count, cert = ops.fused_round_batch(
+        vectors, ids, scores, Ks, eps_v, k, "cos", impl="ref")
+
+    ids_m, sc_m = _mask_prefix(jnp.asarray(ids), jnp.asarray(scores),
+                               jnp.asarray(Ks, jnp.int32))
+    adj = _batched_adjacency(vectors, ids_m, eps_v, "cos")
+    sel, cnt = ops.greedy_diversify_batch(sc_m, adj, k, valid=ids_m >= 0,
+                                          impl="ref")
+    sel_np, ids_np, sc_np = (np.asarray(sel), np.asarray(ids_m),
+                             np.asarray(sc_m))
+    for b in range(B):
+        s = sel_np[b]
+        np.testing.assert_array_equal(
+            np.asarray(sel_ids)[b],
+            np.where(s >= 0, ids_np[b][np.maximum(s, 0)], -1))
+        np.testing.assert_array_equal(
+            np.asarray(sel_sc)[b],
+            np.where(s >= 0, sc_np[b][np.maximum(s, 0)], 0.0))
+    np.testing.assert_array_equal(np.asarray(count), np.asarray(cnt))
+    # certificate inputs: total = selected-score sum, s_K = worst kept score
+    np.testing.assert_array_equal(
+        np.asarray(cert)[:, 0],
+        np.asarray(jnp.sum(jnp.asarray(np.asarray(sel_sc)), axis=1)))
+    valid = ids_np >= 0
+    want_sK = np.where(valid.any(1),
+                       np.min(np.where(valid, sc_np, np.inf), axis=1),
+                       -np.inf)
+    np.testing.assert_array_equal(np.asarray(cert)[:, 1], want_sK)
+
+
+def test_fused_round_lane_oracle_consistency():
+    """Batched ref path rows == the documented per-lane ``ref.fused_round``
+    oracle applied lane by lane."""
+    vectors, ids, scores, Ks = _lane_batch(B=4, seed=14)
+    eps_v = np.asarray([0.4, 0.5, 0.6, 0.7], np.float32)
+    got = ops.fused_round_batch(vectors, ids, scores, Ks, eps_v, 5, "cos",
+                                impl="ref")
+    for b in range(4):
+        want = ref.fused_round(vectors, jnp.asarray(ids[b]),
+                               jnp.asarray(scores[b]), int(Ks[b]),
+                               float(eps_v[b]), 5, "cos")
+        for name, g, w in zip(("sel_ids", "sel_scores", "count", "cert"),
+                              got, want):
+            np.testing.assert_array_equal(np.asarray(g)[b], np.asarray(w),
+                                          err_msg=f"lane {b}: {name}")
+
+
+def test_fused_round_empty_and_tiny_lanes():
+    """All-sentinel lanes pick nothing; a one-candidate lane picks it."""
+    vectors, ids, scores, Ks = _lane_batch(B=4, seed=15)
+    ids[0], scores[0], Ks[0] = -1, -np.inf, 0           # empty lane
+    ids[1, 1:], scores[1, 1:], Ks[1] = -1, -np.inf, 1   # single candidate
+    eps_v = np.full(4, 0.5, np.float32)
+    for impl in ("ref", "interpret"):
+        sel_ids, sel_sc, count, cert = ops.fused_round_batch(
+            vectors, ids, scores, Ks, eps_v, 5, "cos", impl=impl)
+        assert int(np.asarray(count)[0]) == 0
+        assert np.all(np.asarray(sel_ids)[0] == -1)
+        assert np.asarray(cert)[0, 1] == -np.inf
+        assert int(np.asarray(count)[1]) == 1
+        assert int(np.asarray(sel_ids)[1, 0]) == int(ids[1, 0])
+
+
+def test_engine_interpret_matches_ref_oracle():
+    """Contract #12 pinning test: end-to-end engine results with the fused
+    round on the interpret-mode Pallas kernel are bit-identical to the jnp
+    oracle path."""
+    rng = np.random.default_rng(21)
+    x = _normalize(rng.normal(size=(400, 16)))
+    graph = build_knn_graph(x, metric="cos", M=8)
+    qs = _normalize(x[rng.integers(0, 400, 4)]
+                    + 0.05 * rng.normal(size=(4, 16)).astype(np.float32))
+    want = batch_pss(graph, qs, 5, 0.5, ef=10)
+    got = batch_pss(graph, qs, 5, 0.5, ef=10, kernel_impl="interpret")
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
+    np.testing.assert_array_equal(np.asarray(want.scores),
+                                  np.asarray(got.scores))
+    np.testing.assert_array_equal(np.asarray(want.totals),
+                                  np.asarray(got.totals))
+    np.testing.assert_array_equal(np.asarray(want.stats.certified),
+                                  np.asarray(got.stats.certified))

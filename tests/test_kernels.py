@@ -88,3 +88,81 @@ def test_greedy_diversify_sweep(k, K):
         for j in sel:
             if i != j:
                 assert not a[i, j]
+
+
+# ---------------------------------------------------- impl dispatch (ops) ----
+
+def _op_calls():
+    """One representative call per public op, as (name, fn(impl))."""
+    q = jnp.asarray(RNG.normal(size=12), jnp.float32)
+    qs = jnp.asarray(RNG.normal(size=(3, 12)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(50, 12)), jnp.float32)
+    scores = jnp.asarray(RNG.normal(size=50), jnp.float32)
+    adj = ref.pairwise_adjacency(x, 0.2, "cos")
+    bsc = jnp.asarray(RNG.normal(size=(2, 50)), jnp.float32)
+    badj = jnp.stack([adj, adj])
+    sa = jnp.asarray(np.sort(RNG.normal(size=16))[::-1].copy(), jnp.float32)
+    sb = jnp.asarray(np.sort(RNG.normal(size=16))[::-1].copy(), jnp.float32)
+    ia = jnp.arange(16, dtype=jnp.int32)
+    ib = jnp.arange(100, 116, dtype=jnp.int32)
+    fids = np.full((2, 50), -1, np.int32)
+    fids[:, :40] = np.stack([RNG.choice(50, 40, replace=False)
+                             for _ in range(2)])
+    fsc = np.full((2, 50), -np.inf, np.float32)
+    fsc[:, :40] = np.sort(RNG.normal(size=(2, 40)))[:, ::-1]
+    fKs = np.asarray([40, 25], np.int32)
+    feps = np.asarray([0.4, 0.6], np.float32)
+    return [
+        ("batch_similarity",
+         lambda impl: ops.batch_similarity(q, x, "cos", impl=impl)),
+        ("batch_similarity_many",
+         lambda impl: ops.batch_similarity_many(qs, x, "cos", impl=impl)),
+        ("pairwise_adjacency",
+         lambda impl: ops.pairwise_adjacency(x, 0.2, "cos", impl=impl)),
+        ("topk_merge",
+         lambda impl: ops.topk_merge(ia, sa, ib, sb, impl=impl)),
+        ("greedy_diversify",
+         lambda impl: ops.greedy_diversify(scores, adj, 5, impl=impl)),
+        ("greedy_diversify_batch",
+         lambda impl: ops.greedy_diversify_batch(bsc, badj, 5, impl=impl)),
+        ("fused_round",
+         lambda impl: ops.fused_round_batch(x, fids, fsc, fKs, feps, 5,
+                                            "cos", impl=impl)),
+    ]
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_set_default_impl_sweep(impl):
+    """Every op honors the process default: calling with no impl= under
+    set_default_impl(impl) matches an explicit impl="ref" call (bit-exact
+    for the index-valued ops; allclose for the similarity scores)."""
+    calls = _op_calls()
+    try:
+        ops.set_default_impl(impl)
+        defaulted = [(name, fn(None)) for name, fn in calls]
+    finally:
+        ops.set_default_impl(None)
+    for (name, got), (_, want) in zip(defaulted,
+                                      [(n, f("ref")) for n, f in calls]):
+        got = got if isinstance(got, tuple) else (got,)
+        want = want if isinstance(want, tuple) else (want,)
+        for g, w in zip(got, want):
+            g, w = np.asarray(g), np.asarray(w)
+            if np.issubdtype(g.dtype, np.floating):
+                np.testing.assert_allclose(g, w, rtol=2e-5, atol=2e-5,
+                                           err_msg=name)
+            else:
+                np.testing.assert_array_equal(g, w, err_msg=name)
+
+
+def test_unknown_impl_raises():
+    """_resolve rejects unknown impl strings instead of falling through."""
+    for name, fn in _op_calls():
+        with pytest.raises(ValueError, match="unknown kernel impl"):
+            fn("jnp")
+
+
+def test_set_default_impl_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown kernel impl"):
+        ops.set_default_impl("cuda")
+    assert ops._DEFAULT_IMPL is None
