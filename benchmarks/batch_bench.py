@@ -1,8 +1,8 @@
 """Serving-path benchmark: engine vs per-query loop, continuous vs lockstep
-admission on skewed workloads, open-system (Poisson) load curves, and the
-fused-round kernel microbench.
+admission on skewed workloads, open-system (Poisson) load curves, the
+fused-round kernel microbench, and the compressed-corpus scoring bench.
 
-Four modes:
+Five modes:
 
 * ``--mode engine`` (default) — PR 1's headline comparison: at serving batch
   sizes the per-query pause/inspect/resume loop pays its host round-trips
@@ -48,6 +48,13 @@ Four modes:
   gate) are reported per load point. With ``--policy slo_cost`` the
   ``--slo`` value becomes the per-tenant latency budget (shed/defer at
   submit) instead of installing the legacy callback.
+
+* ``--mode quantized`` — PR 7's compressed-corpus point: int8/PQ quantized
+  similarity scoring vs full-float scoring, plus the score-then-verify
+  shape (quantized prefilter of a ``4k`` frontier, exact float rerank,
+  recall@k vs the exact float top-k). Every ``quant@<scheme>W<width>k<k>``
+  point carries ``bytes_per_vector``; interpret-mode Pallas parity and the
+  recall floor gate the exit code (the CI ``quantized-parity`` job).
 
 * ``--mode kernel`` — PR 6's fused-round point: one ``fused_round_batch``
   dispatch vs the per-stage chain it replaced in the engine's PGS round
@@ -326,6 +333,101 @@ def _kernel_payload(res: dict) -> dict:
     gate CI trips on."""
     points = sorted(kv for kv in res.items() if isinstance(kv[0], tuple))
     out = {f"kernel@W{w}k{k}": point for (w, k), point in points}
+    out["parity_violations"] = res["parity_violations"]
+    return out
+
+
+# --------------------------------------------------------- quantized mode ---
+
+def run_quantized(n: int = D.N_DEFAULT, B: int = 16, ks: tuple = (5, 10),
+                  schemes: tuple = ("int8", "pq"), rerank_factor: int = 4,
+                  reps: int = 10, recall_floor: float = 0.95,
+                  seed: int = 7) -> dict:
+    """Compressed-corpus scoring: quantized similarity kernels + exact
+    float rerank vs full-float scoring.
+
+    For each scheme, times the batched quantized op against
+    ``batch_similarity_many`` on the float corpus, then runs the PR 7
+    score-then-verify shape per ``k``: quantized scores pick a
+    ``rerank_factor * k`` frontier, ``index.flat.exact_rerank`` re-scores
+    it in float, and the top-k after rerank is compared against the exact
+    float top-k (``recall_at_k``). Each scheme also cross-checks the
+    interpret-mode Pallas kernel bitwise against the jnp oracle
+    (CPU-friendly — the same parity contract ``tests/test_quant.py``
+    pins), and every point carries ``bytes_per_vector`` — the memory
+    knob this trade buys. A parity mismatch or a point under
+    ``recall_floor`` counts as a violation (nonzero exit — the CI
+    ``quantized-parity`` gate).
+    """
+    from repro import quant
+    from repro.index.flat import exact_rerank, exact_topk
+
+    x, metric = D.make_dataset("deep-like", n=n)
+    queries = D.queries_for(x, B, seed)
+    qs = jnp.asarray(queries)
+    xs = jnp.asarray(x)
+    impl = kops._resolve(None)
+    out: dict = {"parity_violations": 0}
+    f32_bpv = 4.0 * x.shape[1]
+
+    def float_score():
+        return np.asarray(kops.batch_similarity_many(qs, xs, metric))
+    sims_f, dt_f = timed(float_score, warmup=1, reps=reps)
+    truth = {k: exact_topk(queries, x, k, metric)[0] for k in ks}
+
+    for scheme in schemes:
+        corpus = quant.quantize_corpus(x, scheme, seed=seed)
+        bpv = float(quant.corpus_bytes_per_vector(corpus))
+
+        def quant_score():
+            return np.asarray(kops.quantized_similarity_many(qs, corpus,
+                                                             metric))
+        sims_q, dt_q = timed(quant_score, warmup=1, reps=reps)
+
+        violations = 0
+        sub = min(4, B)
+        want = np.asarray(kops.quantized_similarity_many(
+            qs[:sub], corpus, metric, impl="ref"))
+        got = np.asarray(kops.quantized_similarity_many(
+            qs[:sub], corpus, metric, impl="interpret"))
+        if not np.array_equal(want, got):
+            print(f"# PARITY VIOLATION interpret!=ref scheme={scheme}: "
+                  f"max|d|={np.abs(want - got).max()}")
+            violations += 1
+
+        for k in ks:
+            width = rerank_factor * k
+            # quantized prefilter (deterministic id tie-break, same
+            # lexicographic order exact_topk uses) -> exact float rerank
+            pre = np.lexsort((np.arange(n)[None, :].repeat(B, 0), -sims_q),
+                             axis=1)[:, :width].astype(np.int32)
+            rr_ids, _ = exact_rerank(queries, pre, x, metric)
+            hits = [len(set(rr_ids[r, :k].tolist())
+                        & set(truth[k][r].tolist())) / k for r in range(B)]
+            rec = float(np.mean(hits))
+            if rec < recall_floor:
+                print(f"# RECALL VIOLATION {scheme}@W{width}k{k}: "
+                      f"{rec:.3f} < floor {recall_floor}")
+                violations += 1
+            emit(f"quant/{scheme}W{width}k{k}", dt_q / B * 1e6,
+                 f"us_per_query;bytes_per_vector={bpv:.1f};"
+                 f"recall={rec:.3f};speedup_vs_float={dt_f / dt_q:.2f}x")
+            out[(scheme, width, k)] = dict(
+                quantized_s=dt_q, float_s=dt_f, speedup=dt_f / dt_q,
+                bytes_per_vector=bpv, compression=f32_bpv / bpv,
+                recall_at_k=rec, impl=impl,
+                parity_violations=violations)
+        out["parity_violations"] += violations
+    return out
+
+
+def _quantized_payload(res: dict) -> dict:
+    """Point key: ``quant@<scheme>W<width>k<k>`` (the kernel mode's
+    ``@W<width>k<k>`` convention, prefixed by scheme); every point carries
+    ``bytes_per_vector``, and ``parity_violations`` totals the file-level
+    gate CI trips on."""
+    points = sorted(kv for kv in res.items() if isinstance(kv[0], tuple))
+    out = {f"quant@{s}W{w}k{k}": point for (s, w, k), point in points}
     out["parity_violations"] = res["parity_violations"]
     return out
 
@@ -671,7 +773,8 @@ def _open_payload(res: dict) -> dict:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="engine",
-                    choices=["engine", "skewed", "open", "kernel"])
+                    choices=["engine", "skewed", "open", "kernel",
+                             "quantized"])
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke sizes (small n, few requests)")
     ap.add_argument("--n", type=int, default=None)
@@ -719,6 +822,14 @@ def main(argv=None):
     n = args.n or (2000 if args.tiny else D.N_DEFAULT)
     requests = args.batch or (16 if args.tiny else 64)
     lanes = args.lanes or (4 if args.tiny else 16)
+    if args.mode == "quantized":
+        res = run_quantized(n=n, B=(8 if args.tiny else 16),
+                            ks=((5,) if args.tiny else (5, 10)),
+                            reps=(3 if args.tiny else 10), seed=args.seed)
+        if args.json:
+            write_trend_json(args.json, "quantized",
+                             _quantized_payload(res))
+        return 1 if res["parity_violations"] else 0
     if args.mode == "kernel":
         res = run_kernel(n=n, B=(8 if args.tiny else 16),
                          widths=((128,) if args.tiny else (128, 256)),

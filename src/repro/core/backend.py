@@ -85,6 +85,19 @@ class LaneBackend(Protocol):
     default_ef: int
     #: methods this backend can serve; methods[0] is the scheduler default
     methods: tuple
+    #: True when search rounds score a compressed (quantized) corpus — the
+    #: exact-rerank stage then guards every certificate (contract 13). The
+    #: serving layer's ``ExpansionCostModel`` keys its buckets on this flag
+    #: so quantized and float tenants are priced separately.
+    compressed: bool
+
+    @property
+    def bytes_per_vector(self) -> float:
+        """Stored corpus bytes per vector on a device (f32: ``4 * d``;
+        quantized: codes + amortized sidecars) — the memory-scaling stat
+        surfaced through ``LaneScheduler.latency_stats()`` and the
+        ``quant@`` bench-trend points."""
+        ...
 
     @property
     def signature_log(self):

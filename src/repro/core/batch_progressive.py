@@ -77,6 +77,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import quant
 from repro.core import beam_search as bs
 from repro.core import div_astar as da
 from repro.core import lane_state
@@ -666,11 +667,19 @@ class ProgressiveEngine:
         self.out_ids = np.full((self.B, max_k), -1, np.int32)
         self.out_sc = np.zeros((self.B, max_k), np.float32)
         self._unharvested: list[int] = []
+        # LaneBackend contract 13: the single-host engine always scores the
+        # exact float corpus, so its certificates need no rerank stage
+        self.compressed = bool(quant.is_quantized(graph.vectors))
 
     # -- admission ----------------------------------------------------------
     @property
     def num_lanes(self) -> int:
         return self.B
+
+    @property
+    def bytes_per_vector(self) -> float:
+        """Stored corpus bytes per vector (f32 graph: ``4 * d``)."""
+        return quant.corpus_bytes_per_vector(self.graph.vectors)
 
     @property
     def signatures(self) -> SignatureLog:

@@ -25,6 +25,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import quant
 from repro.core import queue as qmod
 from repro.core.graph import FlatGraph, descend
 from repro.core.queue import Queue
@@ -42,7 +43,13 @@ def init_state(graph: FlatGraph, q: jnp.ndarray, capacity: int,
                use_descent: bool = True) -> SearchState:
     """Start state: queue seeded with the entry point (after HNSW descent)."""
     entry = descend(graph, q) if use_descent and graph.num_upper_levels else graph.entry
-    s0 = kops.batch_similarity(q, graph.vectors[entry][None, :], graph.metric)[0]
+    if quant.is_quantized(graph.vectors):
+        qprep = quant.prepare_query(graph.vectors, q, graph.metric)
+        s0 = quant.score_rows(qprep, graph.vectors,
+                              entry.astype(jnp.int32)[None], graph.metric)[0]
+    else:
+        s0 = kops.batch_similarity(q, graph.vectors[entry][None, :],
+                                   graph.metric)[0]
     queue = qmod.make_queue(capacity)
     queue = Queue(
         ids=queue.ids.at[0].set(entry.astype(jnp.int32)),
@@ -56,7 +63,19 @@ def init_state(graph: FlatGraph, q: jnp.ndarray, capacity: int,
 @functools.partial(jax.jit, static_argnames=("graph_metric",))
 def _search_loop(vectors, neighbors, qvec, state: SearchState,
                  stable_limit, min_value, max_steps, graph_metric: str):
-    """Shared while-loop. ``stable_limit``/``min_value``/``max_steps`` traced."""
+    """Shared while-loop. ``stable_limit``/``min_value``/``max_steps`` traced.
+
+    ``vectors`` is either the float corpus (scored by the batch-similarity
+    kernel, byte-identical to the pre-quantization trace) or a quantized
+    corpus (``quant.Int8Corpus``/``quant.PQCorpus``), in which case the
+    per-search query view is prepared once here, outside the loop, and
+    every expansion scores the gathered *compressed* neighbor block.
+    The branch is resolved at trace time — the corpus type is part of the
+    jit signature.
+    """
+    compressed = quant.is_quantized(vectors)
+    qprep = (quant.prepare_query(vectors, qvec, graph_metric)
+             if compressed else None)
 
     def cond(st: SearchState):
         p, exists = qmod.first_unstable(st.queue, stable_limit)
@@ -73,8 +92,11 @@ def _search_loop(vectors, neighbors, qvec, state: SearchState,
         nbrs = neighbors[node]                       # int32[M0]
         safe = jnp.maximum(nbrs, 0)
         fresh = (nbrs >= 0) & ~visited[safe]
-        vecs = vectors[safe]                         # [M0, d]
-        sims = kops.batch_similarity(qvec, vecs, graph_metric)
+        if compressed:
+            sims = quant.score_rows(qprep, vectors, safe, graph_metric)
+        else:
+            vecs = vectors[safe]                     # [M0, d]
+            sims = kops.batch_similarity(qvec, vecs, graph_metric)
         queue = qmod.insert(queue, nbrs, sims, fresh)
         return SearchState(queue, visited, steps + 1)
 
@@ -156,7 +178,12 @@ def rebuild_for_growth(graph: FlatGraph, q: jnp.ndarray, state: SearchState,
     visited = state.visited
     n = graph.size
     all_ids = jnp.arange(n, dtype=jnp.int32)
-    vis_scores = kops.batch_similarity(q, graph.vectors, graph.metric)
+    if quant.is_quantized(graph.vectors):
+        qprep = quant.prepare_query(graph.vectors, q, graph.metric)
+        vis_scores = quant.score_rows(qprep, graph.vectors, all_ids,
+                                      graph.metric)
+    else:
+        vis_scores = kops.batch_similarity(q, graph.vectors, graph.metric)
     # queue membership of every node (to keep 'unstable' flags of frontier);
     # add-scatter because several empty sentinels all map to slot 0, and a
     # .set scatter with duplicate indices has undefined winner order

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import quant
 from repro.core.similarity import query_sim
 
 
@@ -50,7 +51,17 @@ class FlatGraph:
 
 def make_flat_graph(vectors: Any, neighbors: Any, upper: Any | None,
                     entry: int, metric: str) -> FlatGraph:
-    vectors = jnp.asarray(vectors, dtype=jnp.float32)
+    """``vectors`` may be a float array OR a quantized corpus
+    (``quant.Int8Corpus`` / ``quant.PQCorpus``): the beam search scores
+    whichever representation the graph carries. Quantized graphs are
+    level-0 only (the greedy upper-level descent reads float rows)."""
+    if quant.is_quantized(vectors):
+        if upper is not None and getattr(upper, "shape", (0,))[0] != 0:
+            raise ValueError(
+                "quantized corpora do not support upper HNSW levels; "
+                "build a level-0 (knng) graph instead")
+    else:
+        vectors = jnp.asarray(vectors, dtype=jnp.float32)
     neighbors = jnp.asarray(neighbors, dtype=jnp.int32)
     if upper is None or (hasattr(upper, "shape") and upper.shape[0] == 0):
         upper = jnp.zeros((0, vectors.shape[0], 1), dtype=jnp.int32)

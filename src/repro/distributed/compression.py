@@ -10,26 +10,21 @@ construction that preserves convergence.
 axis. Quantize -> psum(int32) -> dequantize; scales psum'd alongside. The
 approximation: blocks share the max-abs scale across the axis (max-reduced),
 so the reconstruction error stays bounded by one quantization step.
+
+The quantizer itself lives in ``repro.quant`` (:data:`~repro.quant.BLOCK`,
+:func:`~repro.quant.quantize_blocks`, :func:`~repro.quant.block_view`) so
+gradient sync and the compressed search corpus share one audited
+implementation; this module keeps its wire format bit-exact.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-BLOCK = 2048
+from ..quant import BLOCK, block_view as _block_view, \
+    quantize_blocks as _quantize
 
-
-def _quantize(x, scale):
-    """scale is the per-step size (amax/127); q = round(x / scale)."""
-    q = jnp.clip(jnp.round(x / scale), -127, 127)
-    return q.astype(jnp.int8)
-
-
-def _block_view(flat):
-    n = flat.shape[0]
-    nb = -(-n // BLOCK)
-    pad = nb * BLOCK - n
-    return jnp.pad(flat, (0, pad)).reshape(nb, BLOCK), n
+__all__ = ["BLOCK", "compressed_psum", "tree_compressed_psum"]
 
 
 def compressed_psum(grad: jnp.ndarray, axis: str,

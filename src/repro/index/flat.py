@@ -44,6 +44,35 @@ def exact_topk(queries: np.ndarray, x: np.ndarray, k: int, metric: str,
     return out_ids, out_scores
 
 
+def exact_rerank(queries: np.ndarray, cand_ids: np.ndarray, x: np.ndarray,
+                 metric: str) -> tuple[np.ndarray, np.ndarray]:
+    """Exact float rerank of candidate frontiers (the quantized path's
+    score-then-verify stage).
+
+    ``queries`` f32[B, d], ``cand_ids`` int[B, K] (-1 padded), ``x``
+    f32[N, d] the float corpus. Each row's valid candidates are re-scored
+    with exact float similarity and re-sorted descending by score with
+    ascending-id tie-break (the same order ``exact_topk`` and the
+    tournament merge use); -1 entries keep score -inf and sink to the
+    tail. Returns ``(ids int32[B, K], scores f32[B, K])``.
+    """
+    queries = np.atleast_2d(np.asarray(queries, np.float32))
+    cand_ids = np.asarray(cand_ids, np.int64)
+    b, k = cand_ids.shape
+    out_ids = np.full((b, k), -1, np.int32)
+    out_scores = np.full((b, k), -np.inf, np.float32)
+    for r in range(b):
+        valid = cand_ids[r] >= 0
+        ids = cand_ids[r][valid]
+        if ids.size == 0:
+            continue
+        sims = _sims_block(queries[r][None], x[ids], metric)[0]
+        order = np.lexsort((ids, -sims))
+        out_ids[r, : ids.size] = ids[order]
+        out_scores[r, : ids.size] = sims[order]
+    return out_ids, out_scores
+
+
 def build_knn_graph(vectors: np.ndarray, metric: str = "l2", M: int = 16,
                     alpha_sim: float = 1.0, block: int = 512,
                     seed: int = 0) -> FlatGraph:

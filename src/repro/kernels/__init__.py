@@ -1,6 +1,6 @@
 # Pallas TPU kernels + jnp oracles behind one `impl` dispatch layer
 # (`ops.py`: auto / ref / interpret / pallas — docs/KERNELS.md is the
-# per-kernel catalog). Five kernels:
+# per-kernel catalog). Seven kernels:
 #
 #   batch_similarity   — query-tile x database-tile scoring (ip/cos/l2)
 #   pairwise_adjacency — candidate Gram tiles -> G^eps adjacency (int8)
@@ -9,6 +9,12 @@
 #   fused_round        — PR 6: score -> adjacency (VMEM scratch) ->
 #                        greedy -> Theorem-2 certificate inputs, one
 #                        pallas_call per engine PGS round
+#   int8_similarity    — PR 7: exact int32 Gram of int8 codes (the
+#                        compressed-corpus scorer; float postprocess
+#                        shared with the oracle in repro/quant.py)
+#   pq_lut_similarity  — PR 7: PQ ADC gather-sum as per-subspace
+#                        LUT x one-hot(code) matmuls (bitwise vs the
+#                        quant.pq_lut_sum oracle)
 #
 # `ref.py` holds the bit-parity jnp oracles; each kernel module owns its
 # pallas_call. Add a kernel ONLY for a compute hot-spot the paper's

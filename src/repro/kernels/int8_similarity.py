@@ -1,0 +1,61 @@
+"""Pallas int8 similarity: the compressed-corpus scoring matmul.
+
+The kernel is deliberately *only* the integer part — a tiled int8 x int8
+matmul with **int32 accumulation** (``preferred_element_type=jnp.int32``,
+so the MXU accumulates exactly). Everything float — scale products,
+squared-norm dequantization, the metric transform — happens outside the
+``pallas_call`` in ``quant.int8_score_from_dots``, shared verbatim with
+the jnp oracle. Since the integer dot is exact on both paths, ref /
+interpret / pallas outputs are **bitwise identical** (see
+``docs/KERNELS.md``).
+
+Tiling follows ``batch_similarity.py``: zero-padded operands (zero codes
+contribute exact zero to every accumulator), grid over (query, corpus)
+tiles, full padded depth per tile. int8 minimum tile on TPU is (32, 128),
+so query tiles are 32-row-aligned and the depth pad is 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, x_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        q_ref[...], x_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "interpret"))
+def int8_dot_pallas(q_codes: jnp.ndarray, x_codes: jnp.ndarray,
+                    bq: int = 32, bn: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Exact integer dots ``q_codes[b, d] . x_codes[n, d]^T -> int32[b, n]``.
+
+    Both operands int8; accumulation is int32 and therefore exact (values
+    bounded by ``127^2 * d``), which is what makes the quantized ladder's
+    bit-parity contract possible.
+    """
+    b, d = q_codes.shape
+    n = x_codes.shape[0]
+    bq = min(bq, max(32, -(-b // 32) * 32))
+    bn = min(bn, max(128, -(-n // 128) * 128))
+    dp = -(-d // 128) * 128
+    bp = -(-b // bq) * bq
+    np_ = -(-n // bn) * bn
+    qp = jnp.zeros((bp, dp), jnp.int8).at[:b, :d].set(q_codes)
+    xp = jnp.zeros((np_, dp), jnp.int8).at[:n, :d].set(x_codes)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(bp // bq, np_ // bn),
+        in_specs=[pl.BlockSpec((bq, dp), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bn, dp), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, np_), jnp.int32),
+        interpret=interpret,
+    )(qp, xp)
+    return out[:b, :n]

@@ -14,12 +14,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import quant as _quant
 from repro.kernels import ref as _ref
 from repro.kernels.batch_similarity import batch_similarity_many_pallas
 from repro.kernels.fused_round import fused_round_batch_pallas
 from repro.kernels.greedy_diversify import (greedy_diversify_batch_pallas,
                                             greedy_diversify_pallas)
+from repro.kernels.int8_similarity import int8_dot_pallas
 from repro.kernels.pairwise_adjacency import pairwise_adjacency_pallas
+from repro.kernels.pq_lut_similarity import pq_lut_sum_pallas
 from repro.kernels.topk_merge import topk_merge_pallas
 
 _DEFAULT_IMPL = None  # overridable for tests via set_default_impl
@@ -32,6 +35,10 @@ _ref_batch_similarity = jax.jit(_ref.batch_similarity,
 _ref_batch_similarity_many = jax.jit(_ref.batch_similarity_many,
                                      static_argnames=("metric",))
 _ref_pairwise_adjacency = jax.jit(_ref.pairwise_adjacency,
+                                  static_argnames=("metric",))
+_ref_int8_similarity_many = jax.jit(_ref.int8_similarity_many,
+                                    static_argnames=("metric",))
+_ref_pq_similarity_many = jax.jit(_ref.pq_similarity_many,
                                   static_argnames=("metric",))
 _ref_topk_merge = jax.jit(_ref.topk_merge)
 _ref_greedy_diversify = jax.jit(_ref.greedy_diversify,
@@ -84,6 +91,48 @@ def batch_similarity_many(qs: jnp.ndarray, x: jnp.ndarray, metric: str,
         return _ref_batch_similarity_many(qs, x, metric)
     return batch_similarity_many_pallas(qs, x, metric,
                                         interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def _int8_similarity_many_kernel(qs, corpus, metric, interpret):
+    q_codes, q_scales = _quant.quantize_queries(qs)
+    dots = int8_dot_pallas(q_codes, corpus.codes, interpret=interpret)
+    return _quant.int8_score_from_dots(dots, q_codes, q_scales, corpus,
+                                       metric)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def _pq_similarity_many_kernel(qs, corpus, metric, interpret):
+    T, S, qn = _quant.pq_luts_many(qs, corpus.codebooks, metric)
+    sumT = pq_lut_sum_pallas(T, corpus.codes, interpret=interpret)
+    sumS = _quant.pq_lut_sum(S, corpus.codes)
+    return _quant.pq_postprocess(sumT, sumS[None, :], qn[:, None], metric)
+
+
+def quantized_similarity_many(qs: jnp.ndarray, corpus, metric: str,
+                              impl: str | None = None) -> jnp.ndarray:
+    """sim(qs[b, d], compressed corpus[n]) -> f32[b, n].
+
+    ``corpus`` is a ``quant.Int8Corpus`` (int8 x int8 dot with int32
+    accumulation) or ``quant.PQCorpus`` (per-subspace LUT gather-sum).
+    All rungs are **bit-exact** against the ``ref`` oracle: the kernels
+    compute only exact arithmetic (integer dots / one-hot float matmuls)
+    and share their float postprocess with the oracle (``repro.quant``).
+    """
+    impl = _resolve(impl)
+    if isinstance(corpus, _quant.Int8Corpus):
+        if impl == "ref":
+            return _ref_int8_similarity_many(qs, corpus, metric)
+        return _int8_similarity_many_kernel(qs, corpus, metric,
+                                            impl == "interpret")
+    if isinstance(corpus, _quant.PQCorpus):
+        if impl == "ref":
+            return _ref_pq_similarity_many(qs, corpus, metric)
+        return _pq_similarity_many_kernel(qs, corpus, metric,
+                                          impl == "interpret")
+    raise TypeError(
+        f"quantized_similarity_many needs a quantized corpus, got "
+        f"{type(corpus).__name__}")
 
 
 def pairwise_adjacency(x: jnp.ndarray, eps, metric: str,

@@ -1,0 +1,78 @@
+"""Pallas PQ similarity: LUT gather-sum as per-subspace one-hot matmuls.
+
+The asymmetric-distance score of PQ row ``r`` is
+``sum_m T[q, m, codes[r, m]]`` — a gather the TPU has no native fast path
+for. The kernel instead expands each corpus tile's subspace codes into a
+one-hot (BN, C) matrix with ``broadcasted_iota`` (TPU needs >= 2D iota)
+and contracts it against the query tile's LUT slab on the MXU:
+
+    partial_m[q, r] = sum_c T[q, m, c] * onehot(codes[r, m])[r, c]
+
+Each partial is *bitwise* the gathered entry — every non-selected addend
+is ``T * 0.0``, an exact float zero, and adding exact zeros is exact — and
+partials accumulate in subspace order m = 0..M-1, matching the jnp
+oracle's explicitly left-to-right ``quant.pq_lut_sum``. So the kernel is
+bit-exact vs the oracle, not merely allclose (``docs/KERNELS.md``).
+
+The query LUT slab lives in VMEM flattened to (BQ, M*Cp) f32 (Cp = C
+padded to a 128 lane multiple, zero-filled — codes never index the pad);
+codes ride transposed as (Mp, BN) int32 tiles so the lane dimension is the
+corpus axis. Metric postprocessing (sqrt / norm division) happens outside
+the pallas_call in ``quant.pq_postprocess``, shared with the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(t_ref, c_ref, o_ref, *, m: int, cp: int):
+    bn = o_ref.shape[1]
+    acc = None
+    for j in range(m):
+        tm = t_ref[:, j * cp:(j + 1) * cp]                       # (bq, cp)
+        code = c_ref[j, :]                                       # (bn,)
+        oh = (jax.lax.broadcasted_iota(jnp.int32, (bn, cp), 1)
+              == code[:, None]).astype(jnp.float32)
+        part = jax.lax.dot_general(tm, oh, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        acc = part if acc is None else acc + part
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "interpret"))
+def pq_lut_sum_pallas(T: jnp.ndarray, codes: jnp.ndarray,
+                      bq: int = 8, bn: int = 128,
+                      interpret: bool = False) -> jnp.ndarray:
+    """``sum_m T[b, m, codes[n, m]] -> f32[b, n]`` via one-hot matmuls.
+
+    ``T`` f32[b, M, C] per-query per-subspace lookup tables
+    (``quant.pq_luts_many``), ``codes`` uint8/int[n, M] corpus codes.
+    Bit-exact vs ``quant.pq_lut_sum`` on the same inputs.
+    """
+    T = jnp.asarray(T, jnp.float32)
+    b, m, c = T.shape
+    n = codes.shape[0]
+    cp = -(-c // 128) * 128
+    bq = min(bq, max(8, -(-b // 8) * 8))
+    bn = min(bn, max(128, -(-n // 128) * 128))
+    mp = max(8, -(-m // 8) * 8)
+    bp = -(-b // bq) * bq
+    np_ = -(-n // bn) * bn
+    tp = jnp.zeros((bp, m, cp), jnp.float32).at[:b, :, :c].set(T)
+    tp = tp.reshape(bp, m * cp)
+    ct = jnp.zeros((mp, np_), jnp.int32).at[:m, :n].set(
+        codes.astype(jnp.int32).T)
+    out = pl.pallas_call(
+        functools.partial(_kernel, m=m, cp=cp),
+        grid=(bp // bq, np_ // bn),
+        in_specs=[pl.BlockSpec((bq, m * cp), lambda i, j: (i, 0)),
+                  pl.BlockSpec((mp, bn), lambda i, j: (0, j))],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, np_), jnp.float32),
+        interpret=interpret,
+    )(tp, ct)
+    return out[:b, :n]

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import quant
 from repro.core.similarity import pairwise_sim, query_sim
 
 
@@ -20,6 +21,37 @@ def batch_similarity(q: jnp.ndarray, x: jnp.ndarray, metric: str) -> jnp.ndarray
 def batch_similarity_many(qs: jnp.ndarray, x: jnp.ndarray, metric: str) -> jnp.ndarray:
     """Scores of rows of x[n, d] against queries qs[b, d] -> f32[b, n]."""
     return pairwise_sim(qs, x, metric)
+
+
+def int8_similarity_many(qs: jnp.ndarray, corpus, metric: str) -> jnp.ndarray:
+    """Quantized scores of an :class:`repro.quant.Int8Corpus` against float
+    queries qs[b, d] -> f32[b, n].
+
+    Bit-parity anchor for ``kernels/int8_similarity.py``: the integer dot is
+    exact on both paths and the float postprocess
+    (``quant.int8_score_from_dots``) is literally shared, so kernel rungs
+    match this oracle bitwise.
+    """
+    q_codes, q_scales = quant.quantize_queries(qs)
+    dots = jax.lax.dot_general(
+        q_codes.astype(jnp.int32), corpus.codes.astype(jnp.int32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+    return quant.int8_score_from_dots(dots, q_codes, q_scales, corpus, metric)
+
+
+def pq_similarity_many(qs: jnp.ndarray, corpus, metric: str) -> jnp.ndarray:
+    """Quantized scores of a :class:`repro.quant.PQCorpus` against float
+    queries qs[b, d] -> f32[b, n].
+
+    The LUT gather-sum accumulates subspaces left-to-right
+    (``quant.pq_lut_sum``) in the exact order the Pallas one-hot-matmul
+    kernel adds its partials, so this oracle is also bitwise ground truth
+    for ``kernels/pq_lut_similarity.py``.
+    """
+    T, S, qn = quant.pq_luts_many(qs, corpus.codebooks, metric)
+    sumT = quant.pq_lut_sum(T, corpus.codes)
+    sumS = quant.pq_lut_sum(S, corpus.codes)
+    return quant.pq_postprocess(sumT, sumS[None, :], qn[:, None], metric)
 
 
 def pairwise_adjacency(x: jnp.ndarray, eps: jnp.ndarray, metric: str,

@@ -1,0 +1,448 @@
+"""Shared quantization: one audited quantizer for gradient sync AND corpus
+compression, plus the quantized corpus representations the search path scores.
+
+Two consumers, one quantizer
+----------------------------
+
+* ``distributed.compression.compressed_psum`` (gradient all-reduce) uses the
+  flat block quantizer — :data:`BLOCK`, :func:`quantize_blocks`,
+  :func:`block_view` — exactly as it always did (they simply moved here, so
+  wire-format and corpus quantization share one audited implementation).
+* The search path uses the *corpus* representations below: every search
+  round scores compressed vectors; the final merged frontier is re-scored
+  with exact float similarities before diversification (see
+  ``sharded_search.search``), so quantization is a memory knob, never a
+  certificate knob (``docs/ARCHITECTURE.md`` contract 13).
+
+Corpus representations
+----------------------
+
+* :class:`Int8Corpus` — symmetric int8 with one f32 scale per
+  ``scale_rows`` consecutive rows (the corpus analog of the gradient path's
+  per-block shared scale). Codes are exactly 4x smaller than f32; the scale
+  sidecar adds ``4 / scale_rows`` bytes per vector, so end-to-end
+  bytes/vector is ``d + 4/scale_rows`` vs ``4d`` — 3.97x at d=64 with the
+  default ``scale_rows=8`` (any nonzero sidecar makes a strict 4.0x total
+  mathematically unreachable; the 4x is exact on the code payload).
+* :class:`PQCorpus` — product quantization: ``d`` split into ``M``
+  subspaces, each vector stored as ``M`` uint8 codebook indices (``C <=
+  256`` centroids per subspace, k-means trained at index build). Strictly
+  smaller than int8: ``M + codebook_bytes/n`` bytes per vector.
+
+Scoring semantics (the parity contract)
+---------------------------------------
+
+Quantized similarity is defined by the *shared jnp arithmetic in this
+module*, which both the ``kernels/ref.py`` oracles and the Pallas kernels
+consume:
+
+* int8 — the query is symmetrically quantized per row (``amax/127``), the
+  dot runs int8 x int8 with **int32 accumulation** (exact integers, so the
+  Pallas ``dot_general`` and the jnp oracle agree bitwise), and
+  :func:`int8_postprocess` applies the scale products + metric transform —
+  one implementation, so ref / interpret / pallas are bit-exact.
+* PQ — asymmetric distance computation: :func:`pq_luts_many` builds
+  per-subspace lookup tables from the *float* query, and scores are the
+  LUT gather-sum :func:`pq_lut_sum` (accumulated subspace-by-subspace,
+  left to right — the Pallas LUT kernel's one-hot matmuls reproduce each
+  gather exactly, so the same accumulation order gives bit parity).
+
+The shard-local beam search scores gathered *compressed* neighbor blocks
+with the same arithmetic via :func:`prepare_query` / :func:`score_rows`
+(``core.beam_search`` dispatches on the corpus type), so in-loop scores and
+the batched ``kernels.ops.quantized_similarity_many`` scores agree to ~1
+ulp on the same rows (bitwise within an op's ladder; across compilation
+contexts XLA's fusion freedom allows the last bit to differ).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EPS = 1e-12          # norm guard, mirrors core.similarity._EPS
+
+# --------------------------------------------------------------------------
+# The flat block quantizer (shared with distributed.compression)
+# --------------------------------------------------------------------------
+
+BLOCK = 2048
+
+
+def quantize_blocks(x, scale):
+    """Symmetric int8: ``scale`` is the per-step size (amax/127);
+    ``q = clip(round(x / scale), -127, 127)``."""
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q.astype(jnp.int8)
+
+
+def block_view(flat):
+    """Pad a flat vector to whole :data:`BLOCK`-sized rows.
+
+    Returns ``(blocks[nb, BLOCK], n)`` with ``n`` the original length."""
+    n = flat.shape[0]
+    nb = -(-n // BLOCK)
+    pad = nb * BLOCK - n
+    return jnp.pad(flat, (0, pad)).reshape(nb, BLOCK), n
+
+
+# --------------------------------------------------------------------------
+# Corpus representations
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Int8Corpus:
+    """Symmetric int8 corpus with one f32 scale per ``scale_rows`` rows.
+
+    ``codes[i] = round(x[i] / scales[i // scale_rows])`` — reconstruction
+    error is bounded by half a step per element (one step at the clip
+    boundary), the same bound the gradient path's EF buffer relies on.
+    """
+    codes: jnp.ndarray    # int8[n, d]
+    scales: jnp.ndarray   # f32[nb], nb = ceil(n / scale_rows)
+    scale_rows: int = dataclasses.field(metadata=dict(static=True), default=8)
+
+    @property
+    def shape(self) -> tuple:
+        return tuple(self.codes.shape)
+
+    def row_scales(self) -> jnp.ndarray:
+        """Per-row step sizes f32[n] (the scale sidecar, expanded)."""
+        n = self.codes.shape[0]
+        return self.scales[jnp.arange(n) // self.scale_rows]
+
+    def dequantize(self) -> jnp.ndarray:
+        """Reconstructed f32[n, d] corpus (the scoring oracle's target)."""
+        return self.codes.astype(jnp.float32) * self.row_scales()[:, None]
+
+    def bytes_per_vector(self) -> float:
+        n, d = self.codes.shape
+        return (n * d * 1 + self.scales.shape[0] * 4) / n
+
+    def code_bytes_per_vector(self) -> float:
+        """Code payload only — exactly ``d`` bytes (4x smaller than f32)."""
+        return float(self.codes.shape[1])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PQCorpus:
+    """Product-quantized corpus: per-subspace codebook indices.
+
+    ``d`` is split into ``M`` contiguous subspaces of ``d // M`` dims; each
+    row stores the nearest centroid index per subspace (uint8, ``C <= 256``).
+    """
+    codes: jnp.ndarray      # uint8[n, M]
+    codebooks: jnp.ndarray  # f32[M, C, d // M]
+
+    @property
+    def shape(self) -> tuple:
+        m, _, ds = self.codebooks.shape
+        return (int(self.codes.shape[0]), m * ds)
+
+    def dequantize(self) -> jnp.ndarray:
+        idx = self.codes.astype(jnp.int32)
+        m = self.codebooks.shape[0]
+        parts = [self.codebooks[j, idx[:, j]] for j in range(m)]
+        return jnp.concatenate(parts, axis=-1)
+
+    def bytes_per_vector(self) -> float:
+        n, m = self.codes.shape
+        return (n * m * 1 + self.codebooks.size * 4) / n
+
+    def code_bytes_per_vector(self) -> float:
+        return float(self.codes.shape[1])
+
+
+QUANT_SCHEMES = ("int8", "pq")
+
+
+def is_quantized(corpus) -> bool:
+    return isinstance(corpus, (Int8Corpus, PQCorpus))
+
+
+def corpus_bytes_per_vector(corpus) -> float:
+    """Stored bytes per vector: quantized corpora report their real payload
+    (codes + amortized sidecars); a float array reports ``itemsize * d``."""
+    if is_quantized(corpus):
+        return float(corpus.bytes_per_vector())
+    return float(np.dtype(corpus.dtype).itemsize * corpus.shape[-1])
+
+
+# --------------------------------------------------------------------------
+# Builders (host-side, at index build)
+# --------------------------------------------------------------------------
+
+def quantize_int8(x, scale_rows: int = 8) -> Int8Corpus:
+    """Quantize a corpus to :class:`Int8Corpus`.
+
+    One shared scale per ``scale_rows`` consecutive rows (amax of the whole
+    row block / 127 — the corpus analog of ``compressed_psum``'s cross-axis
+    shared block scale), so the sidecar stays at ``4 / scale_rows`` bytes
+    per vector.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    n, d = x.shape
+    nb = -(-n // scale_rows)
+    pad = nb * scale_rows - n
+    xb = jnp.pad(x, ((0, pad), (0, 0))).reshape(nb, scale_rows * d)
+    amax = jnp.max(jnp.abs(xb), axis=1)
+    scales = jnp.maximum(amax, _EPS) / 127.0
+    codes = quantize_blocks(xb, scales[:, None]).reshape(nb * scale_rows,
+                                                         d)[:n]
+    return Int8Corpus(codes=codes, scales=scales, scale_rows=int(scale_rows))
+
+
+def _kmeans(sub: np.ndarray, c: int, iters: int,
+            rng: np.random.Generator) -> np.ndarray:
+    """Plain seeded k-means (squared-L2) for one PQ subspace."""
+    n = sub.shape[0]
+    cb = sub[rng.choice(n, size=c, replace=False)].copy()
+    for _ in range(iters):
+        d2 = (np.einsum("nd,nd->n", sub, sub)[:, None]
+              - 2.0 * (sub @ cb.T)
+              + np.einsum("cd,cd->c", cb, cb)[None, :])
+        assign = np.argmin(d2, axis=1)
+        for j in range(c):
+            members = sub[assign == j]
+            if members.shape[0]:       # empty cluster keeps its centroid
+                cb[j] = members.mean(axis=0)
+    return cb
+
+
+def pq_encode(x: np.ndarray, codebooks: np.ndarray) -> np.ndarray:
+    """Nearest-centroid codes uint8[n, M] for ``x`` under ``codebooks``."""
+    x = np.asarray(x, np.float32)
+    m, c, ds = codebooks.shape
+    codes = np.empty((x.shape[0], m), np.uint8)
+    for j in range(m):
+        sub = x[:, j * ds:(j + 1) * ds]
+        cb = codebooks[j]
+        d2 = (np.einsum("nd,nd->n", sub, sub)[:, None]
+              - 2.0 * (sub @ cb.T)
+              + np.einsum("cd,cd->c", cb, cb)[None, :])
+        codes[:, j] = np.argmin(d2, axis=1).astype(np.uint8)
+    return codes
+
+
+def default_pq_m(d: int, max_m: int = 16) -> int:
+    """Default PQ subspace count: the largest ``m <= max_m`` that splits
+    ``d`` evenly with subspace width ``>= 2`` (``1`` when ``d < 4``).
+
+    Narrow subspaces keep the ADC score error small enough that the
+    quantized beam still finds (most of) the float frontier — the 10k
+    recall floor ``tests/test_quant.py`` pins assumes this default; wider
+    subspaces trade recall for bytes, so pass ``pq_m`` explicitly to take
+    that trade."""
+    for m in range(min(int(max_m), d // 2), 1, -1):
+        if d % m == 0:
+            return m
+    return 1
+
+
+def train_pq(x, m: int = 8, codes: int = 256, iters: int = 10,
+             seed: int = 0, sample: int = 16384) -> PQCorpus:
+    """Train per-subspace codebooks (seeded k-means on a sample) and encode.
+
+    ``d`` must split evenly into ``m`` subspaces; ``codes <= 256`` so
+    indices fit uint8 (the whole point of the byte budget).
+    """
+    x = np.asarray(x, np.float32)
+    n, d = x.shape
+    if d % m:
+        raise ValueError(f"d={d} does not split into m={m} subspaces")
+    if codes > 256:
+        raise ValueError(f"codes={codes} > 256 would not fit uint8")
+    c = min(int(codes), n)
+    rng = np.random.default_rng(seed)
+    fit = x[rng.choice(n, size=min(int(sample), n), replace=False)]
+    ds = d // m
+    cbs = np.stack([_kmeans(fit[:, j * ds:(j + 1) * ds], c, int(iters), rng)
+                    for j in range(m)])
+    return PQCorpus(codes=jnp.asarray(pq_encode(x, cbs)),
+                    codebooks=jnp.asarray(cbs, dtype=jnp.float32))
+
+
+def quantize_corpus(x, scheme: str, *, scale_rows: int = 8,
+                    pq_m: int | None = None, pq_codes: int = 256,
+                    pq_iters: int = 10, pq_sample: int = 16384,
+                    seed: int = 0):
+    """Build the quantized corpus for ``scheme`` in :data:`QUANT_SCHEMES`.
+
+    ``pq_m=None`` picks :func:`default_pq_m` for the corpus width."""
+    if scheme == "int8":
+        return quantize_int8(x, scale_rows=scale_rows)
+    if scheme == "pq":
+        x = np.asarray(x, np.float32)
+        m = pq_m if pq_m is not None else default_pq_m(x.shape[-1])
+        return train_pq(x, m=m, codes=pq_codes, iters=pq_iters,
+                        seed=seed, sample=pq_sample)
+    raise ValueError(
+        f"unknown quantization scheme {scheme!r}; expected {QUANT_SCHEMES}")
+
+
+# --------------------------------------------------------------------------
+# Shared scoring arithmetic (the oracles' AND the kernels' ground truth)
+# --------------------------------------------------------------------------
+
+def quantize_queries(qs) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row symmetric int8 query codes: ``(codes int8[b, d], scales
+    f32[b])`` with ``scale = max(amax, eps) / 127`` per row."""
+    qs = jnp.asarray(qs, jnp.float32)
+    scales = jnp.maximum(jnp.max(jnp.abs(qs), axis=-1), _EPS) / 127.0
+    return quantize_blocks(qs, scales[..., None]), scales
+
+
+def int8_postprocess(dots, qsq, xsq, q_scale, x_scale, metric: str):
+    """Dequantize int32 dot/norm accumulators and apply the metric transform.
+
+    THE bit-parity anchor: the jnp oracle, the Pallas kernel wrapper, and
+    the beam loop's block scorer all call this one function on bit-equal
+    int32 inputs, so their f32 outputs match bitwise. Shapes broadcast
+    (batched: ``dots[b, n]``, ``qsq/q_scale[b, 1]``, ``xsq/x_scale[1, n]``;
+    block: ``dots/xsq/x_scale[m]``, scalars for the query side).
+    """
+    s = q_scale * x_scale
+    dots_f = dots.astype(jnp.float32) * s
+    if metric == "ip":
+        return dots_f
+    q2 = qsq.astype(jnp.float32) * (q_scale * q_scale)
+    x2 = xsq.astype(jnp.float32) * (x_scale * x_scale)
+    if metric == "cos":
+        qn = jnp.sqrt(jnp.maximum(q2, _EPS))
+        xn = jnp.sqrt(jnp.maximum(x2, _EPS))
+        return dots_f / (qn * xn)
+    if metric == "l2":
+        d2 = jnp.maximum(q2 + x2 - 2.0 * dots_f, 0.0)
+        return 1.0 - jnp.sqrt(d2)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def int8_score_from_dots(dots, q_codes, q_scales, corpus, metric: str):
+    """Batched int8 scores from precomputed exact integer dots.
+
+    ``dots`` int32[b, n] from either the Pallas kernel or the oracle's
+    ``dot_general`` — exact integers either way, so both producers feed
+    bit-equal inputs into the one shared float postprocess here.
+    """
+    qc = q_codes.astype(jnp.int32)
+    xc = corpus.codes.astype(jnp.int32)
+    qsq = jnp.sum(qc * qc, axis=-1, keepdims=True)
+    xsq = jnp.sum(xc * xc, axis=-1)[None, :]
+    return int8_postprocess(dots, qsq, xsq, q_scales[:, None],
+                            corpus.row_scales()[None, :], metric)
+
+
+def pq_luts_many(qs, codebooks, metric: str):
+    """Per-subspace ADC lookup tables for a query batch.
+
+    Returns ``(T f32[b, M, C], S f32[M, C], qn f32[b])``: the score is a
+    transform of ``sum_m T[b, m, code]`` (squared distances for l2, dots
+    for ip/cos), ``S`` carries the centroid squared norms cos needs for the
+    reconstructed-vector norm, and ``qn`` the float query norms.
+    """
+    qs = jnp.asarray(qs, jnp.float32)
+    m, _, ds = codebooks.shape
+    qsub = qs.reshape(qs.shape[0], m, ds)
+    dots = jnp.einsum("bms,mcs->bmc", qsub, codebooks)
+    csq = jnp.sum(codebooks * codebooks, axis=-1)          # [M, C]
+    if metric == "l2":
+        qsq = jnp.sum(qsub * qsub, axis=-1)                # [b, M]
+        T = qsq[:, :, None] - 2.0 * dots + csq[None]
+    elif metric in ("ip", "cos"):
+        T = dots
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    qn = jnp.sqrt(jnp.maximum(jnp.sum(qs * qs, axis=-1), _EPS))
+    return T, csq, qn
+
+
+def pq_lut_sum(T, codes):
+    """``sum_m T[..., m, codes[:, m]]`` accumulated subspace-by-subspace.
+
+    The accumulation is explicitly left-to-right over ``m`` — the Pallas
+    LUT kernel's per-subspace one-hot matmuls add in the same order (each
+    one-hot dot reproduces the gathered entry exactly: the other addends
+    are exact zeros), so oracle and kernel sums are bitwise equal.
+    """
+    idx = jnp.asarray(codes).astype(jnp.int32)
+    m = T.shape[-2]
+    out = T[..., 0, :][..., idx[:, 0]]
+    for j in range(1, m):
+        out = out + T[..., j, :][..., idx[:, j]]
+    return out
+
+
+def pq_postprocess(sumT, sumS, qn, metric: str):
+    """Metric transform over the LUT sums (shared by oracle and kernel)."""
+    if metric == "ip":
+        return sumT
+    if metric == "l2":
+        return 1.0 - jnp.sqrt(jnp.maximum(sumT, 0.0))
+    if metric == "cos":
+        xn = jnp.sqrt(jnp.maximum(sumS, _EPS))
+        return sumT / (qn * xn)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+# --------------------------------------------------------------------------
+# Per-search query views (the beam loop's compressed block scoring)
+# --------------------------------------------------------------------------
+
+class Int8Query(NamedTuple):
+    """One query, pre-quantized for int8 block scoring."""
+    codes: jnp.ndarray   # int8[d]
+    scale: jnp.ndarray   # f32[]
+
+
+class PQQuery(NamedTuple):
+    """One query's ADC tables for PQ block scoring."""
+    luts: jnp.ndarray     # f32[M, C]
+    sq_luts: jnp.ndarray  # f32[M, C] centroid squared norms
+    qnorm: jnp.ndarray    # f32[]
+
+
+def prepare_query(corpus, q, metric: str):
+    """Precompute the per-search query view for ``corpus``.
+
+    Float corpora return ``q`` unchanged (the beam loop's float path stays
+    byte-identical); quantized corpora return the small pytree the block
+    scorer consumes — computed once per search, outside the expansion loop.
+    """
+    if isinstance(corpus, Int8Corpus):
+        codes, scales = quantize_queries(q[None, :])
+        return Int8Query(codes=codes[0], scale=scales[0])
+    if isinstance(corpus, PQCorpus):
+        T, S, qn = pq_luts_many(q[None, :], corpus.codebooks, metric)
+        return PQQuery(luts=T[0], sq_luts=S, qnorm=qn[0])
+    return q
+
+
+def score_rows(prep, corpus, idx, metric: str):
+    """Score the gathered compressed rows ``corpus[idx]`` against ``prep``.
+
+    ``idx`` int32[m] (non-negative). Uses the same shared arithmetic as the
+    batched ops; values agree with ``kernels.ops.quantized_similarity_many``
+    to ~1 ulp (XLA may fuse/FMA the float postprocess differently across
+    compilation contexts — the *bitwise* contract is between the ladder
+    rungs of the batched op, not between loop and batch).
+    """
+    idx = jnp.asarray(idx)
+    if isinstance(corpus, Int8Corpus):
+        rows = corpus.codes[idx].astype(jnp.int32)           # (m, d)
+        rsc = corpus.scales[idx // corpus.scale_rows]        # (m,)
+        qc = prep.codes.astype(jnp.int32)
+        dots = jnp.sum(rows * qc, axis=-1)                   # exact int32
+        qsq = jnp.sum(qc * qc)
+        xsq = jnp.sum(rows * rows, axis=-1)
+        return int8_postprocess(dots, qsq, xsq, prep.scale, rsc, metric)
+    if isinstance(corpus, PQCorpus):
+        codes = corpus.codes[idx]                            # (m, M)
+        sumT = pq_lut_sum(prep.luts, codes)
+        sumS = pq_lut_sum(prep.sq_luts, codes)
+        return pq_postprocess(sumT, sumS, prep.qnorm, metric)
+    raise TypeError(f"score_rows needs a quantized corpus, got {type(corpus)}")

@@ -121,21 +121,35 @@ class ExpansionCostModel:
             return lo
         return round(float(eps), 6)
 
-    def bucket(self, k: int, eps: float, method: str) -> tuple:
-        """The model's bucket key for a request shape."""
-        return (next_pow2(max(int(k), 1)), self._eps_band(eps), str(method))
+    def bucket(self, k: int, eps: float, method: str,
+               compressed: bool = False) -> tuple:
+        """The model's bucket key for a request shape.
+
+        ``compressed`` marks requests served against a quantized corpus
+        (``LaneBackend.compressed``): quantized rounds score int8/PQ codes
+        and pay an exact-rerank stage, so their expansions-per-second and
+        round counts are not exchangeable with float traffic — pricing them
+        in the same bucket would mis-bill both tenants. Cold compressed
+        buckets still fall back to :func:`theorem1_prior` (Theorem 1 bounds
+        the *candidate count*, which quantization does not change — contract
+        13: quantization is a memory knob, never a certificate knob).
+        """
+        return (next_pow2(max(int(k), 1)), self._eps_band(eps), str(method),
+                bool(compressed))
 
     # -- prediction ----------------------------------------------------------
-    def predict_rounds(self, k: int, eps: float, method: str) -> float:
-        cell = self._buckets.get(self.bucket(k, eps, method))
+    def predict_rounds(self, k: int, eps: float, method: str,
+                       compressed: bool = False) -> float:
+        cell = self._buckets.get(self.bucket(k, eps, method, compressed))
         if cell is not None:
             return cell[1]
         return theorem1_prior(int(k), self.K0, self.prior_degree,
                               self.prior_round_cost)[1]
 
-    def predict_expansions(self, k: int, eps: float, method: str) -> float:
+    def predict_expansions(self, k: int, eps: float, method: str,
+                           compressed: bool = False) -> float:
         """Predicted total expansions for one request of this shape."""
-        cell = self._buckets.get(self.bucket(k, eps, method))
+        cell = self._buckets.get(self.bucket(k, eps, method, compressed))
         if cell is not None:
             return max(cell[0] * cell[1], 1.0)
         epr, rounds = theorem1_prior(int(k), self.K0, self.prior_degree,
@@ -147,14 +161,17 @@ class ExpansionCostModel:
         """Learned seconds per expansion (0.0 before any timed request)."""
         return self._sec_per_exp
 
-    def predict_service(self, k: int, eps: float, method: str) -> float:
+    def predict_service(self, k: int, eps: float, method: str,
+                        compressed: bool = False) -> float:
         """Predicted service seconds; 0.0 until a timed request was seen."""
-        return self.predict_expansions(k, eps, method) * self._sec_per_exp
+        return (self.predict_expansions(k, eps, method, compressed)
+                * self._sec_per_exp)
 
     # -- updates -------------------------------------------------------------
     def observe(self, k: int, eps: float, method: str, *,
                 expansions: int, rounds: int,
-                service: float | None = None) -> None:
+                service: float | None = None,
+                compressed: bool = False) -> None:
         """Fold one harvested request into the model.
 
         ``expansions``/``rounds`` are the result's real ``SearchStats``
@@ -168,14 +185,14 @@ class ExpansionCostModel:
         if self.frozen:
             return
         actual = float(max(int(expansions), 1))
-        rel_err = abs(self.predict_expansions(k, eps, method) - actual) \
-            / actual
+        rel_err = abs(self.predict_expansions(k, eps, method, compressed)
+                      - actual) / actual
         self._calib_obs += 1
         a = self.alpha if self._calib_obs > 1 else 1.0
         self._calib_err += a * (rel_err - self._calib_err)
         r = float(max(int(rounds), 1))
         epr = actual / r
-        key = self.bucket(k, eps, method)
+        key = self.bucket(k, eps, method, compressed)
         cell = self._buckets.get(key)
         if cell is None:
             # bounded model state for long-running servers: past the cap,
@@ -251,6 +268,13 @@ class AdmissionPolicy:
     @property
     def model(self) -> ExpansionCostModel:
         return self.sched.cost_model
+
+    @property
+    def compressed(self) -> bool:
+        """Whether the bound scheduler's backend scores a quantized corpus
+        (``LaneBackend.compressed``) — forwarded into every cost-model
+        lookup so quantized traffic is priced in its own buckets."""
+        return bool(getattr(self.sched, "backend_compressed", False))
 
     def on_submit(self, req) -> str:
         return ADMIT
@@ -359,7 +383,8 @@ class DrrPolicy(AdmissionPolicy):
                 self._fresh_visit = False
             head = queue[0]
             cost = self.model.predict_expansions(head.k, head.eps,
-                                                 head.method)
+                                                 head.method,
+                                                 self.compressed)
             if cost <= self._deficit[tenant]:
                 queue.popleft()
                 self._deficit[tenant] -= cost
@@ -420,9 +445,12 @@ class SloCostPolicy(AdmissionPolicy):
         model = self.model
         if model.sec_per_expansion <= 0:
             return 0.0
-        backlog = sum(model.predict_expansions(r.k, r.eps, r.method)
+        compressed = self.compressed
+        backlog = sum(model.predict_expansions(r.k, r.eps, r.method,
+                                               compressed)
                       for r in self.sched.pending)
-        backlog += sum(model.predict_expansions(r.k, r.eps, r.method)
+        backlog += sum(model.predict_expansions(r.k, r.eps, r.method,
+                                                compressed)
                        for r in self.sched.inflight.values())
         return backlog * model.sec_per_expansion / self.sched.num_lanes
 
@@ -431,7 +459,8 @@ class SloCostPolicy(AdmissionPolicy):
         if budget is None:
             return ADMIT
         budget *= self.headroom
-        service = self.model.predict_service(req.k, req.eps, req.method)
+        service = self.model.predict_service(req.k, req.eps, req.method,
+                                             self.compressed)
         if service > budget:
             return SHED
         if self._predicted_wait() + service > budget:

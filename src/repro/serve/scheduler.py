@@ -241,6 +241,10 @@ class LaneScheduler:
         self.backend = backend
         self.engine = backend   # legacy alias (PR 2 name)
         self.num_lanes = int(backend.num_lanes)
+        # quantized backends get their own cost-model buckets: compressed
+        # rounds have a different expansions/sec and round profile, so
+        # pricing them with float traffic would skew fair scheduling
+        self.backend_compressed = bool(getattr(backend, "compressed", False))
         self.admission = admission
         self.shed = shed
         self.cost_model = cost_model or ExpansionCostModel()
@@ -379,7 +383,8 @@ class LaneScheduler:
                 req.k, req.eps, req.method,
                 expansions=result.stats.expansions,
                 rounds=result.stats.search_calls,
-                service=req.service)
+                service=req.service,
+                compressed=self.backend_compressed)
             self.policy.on_complete(req)
             done.append(req)
         return done
@@ -463,6 +468,9 @@ class LaneScheduler:
           ``ExpansionCostModel.calibration_error``).
         * ``signatures`` / ``unplanned_signatures`` — backend compile
           signatures seen / seen after a freeze (recompile audit).
+        * ``compressed`` / ``bytes_per_vector`` — the backend's corpus
+          representation: whether rounds score a quantized corpus, and the
+          stored bytes per vector (the memory-scaling stat).
         """
         reqs = list(self.completed)
         lats = [r.latency for r in reqs]
@@ -511,6 +519,9 @@ class LaneScheduler:
                                            for r in reqs])) if reqs else 0.0),
             policy=self.policy.name,
             cost_calibration_error=self.cost_model.calibration_error(),
+            compressed=self.backend_compressed,
+            bytes_per_vector=float(
+                getattr(self.backend, "bytes_per_vector", 0.0)),
             signatures=len(self.backend.signature_log),
             unplanned_signatures=len(self.backend.signature_log.unplanned),
         )

@@ -4,6 +4,7 @@ from repro.sharded_search.search import (  # noqa: F401
     ShardedSearchState,
     beam_state_capacity,
     build_sharded_index,
+    exact_rerank_frontier,
     init_sharded_state,
     resume_jit_cache_sizes,
     sharded_diverse_resume,

@@ -98,7 +98,12 @@ class ShardedEngine:
         if resume not in ("beam", "scratch"):
             raise ValueError(f"unknown resume mode {resume!r}")
         self.index = index
-        self.all_vectors = jnp.asarray(all_vectors)
+        #: True when the index stores compressed codes — search rounds then
+        #: score quantized, and the float corpus stays HOST-side, touched
+        #: only by the exact rerank of each merged frontier (contract 13)
+        self.compressed = index.scheme is not None
+        self.all_vectors = (np.asarray(all_vectors, np.float32)
+                            if self.compressed else jnp.asarray(all_vectors))
         self.mesh = mesh
         self.axis = axis
         self.K0 = K0
@@ -114,7 +119,7 @@ class ShardedEngine:
         self.record_candidates = record_candidates
         self.B = int(num_lanes)
         self.n_total = index.num_shards * index.shard_size
-        d = int(index.vectors.shape[-1])
+        d = int(index.dim)
         self.qs = np.zeros((self.B, d), np.float32)
         self.status = np.full(self.B, LANE_FREE, np.int8)
         self.ks = np.ones(self.B, np.int64)
@@ -155,6 +160,12 @@ class ShardedEngine:
     @property
     def num_lanes(self) -> int:
         return self.B
+
+    @property
+    def bytes_per_vector(self) -> float:
+        """Stored corpus bytes per vector on a device (f32: ``4 * d``;
+        quantized: codes + amortized scale/codebook sidecars)."""
+        return float(self.index.corpus_bytes_per_vector())
 
     @property
     def signature_log(self) -> SignatureLog:

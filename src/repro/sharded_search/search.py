@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import quant
 from repro.compat import shard_map
 from repro.core import beam_search as bs
 from repro.core import div_astar as da
@@ -47,32 +48,111 @@ from repro.kernels import ops as kops
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ShardedIndex:
-    """Per-shard graphs stacked on a leading shard axis."""
-    vectors: jnp.ndarray    # [P, Ns, d]
-    neighbors: jnp.ndarray  # [P, Ns, M0]
-    entries: jnp.ndarray    # [P]
-    bases: jnp.ndarray      # [P] global-id base of each shard
+    """Per-shard graphs stacked on a leading shard axis.
+
+    Float corpora live in ``vectors``. Quantized corpora (``scheme`` set by
+    ``build_sharded_index(quantized=...)``) instead carry ``codes`` — plus
+    ``scales`` (int8) or ``codebooks`` (pq, replicated, trained at index
+    build) — sharded alongside the graph; ``vectors`` is then None and the
+    float rows are retained *host-side by the caller* for the exact rerank
+    stage (quantization is a memory knob, never a certificate knob:
+    ``docs/ARCHITECTURE.md`` contract 13).
+    """
+    vectors: jnp.ndarray | None      # f32[P, Ns, d]; None when quantized
+    neighbors: jnp.ndarray           # int32[P, Ns, M0]
+    entries: jnp.ndarray             # int32[P]
+    bases: jnp.ndarray               # int32[P] global-id base of each shard
+    codes: jnp.ndarray | None = None       # int8[P, Ns, d] | uint8[P, Ns, M]
+    scales: jnp.ndarray | None = None      # f32[P, nb]   (int8 scheme)
+    codebooks: jnp.ndarray | None = None   # f32[M, C, ds] (pq, replicated)
     metric: str = dataclasses.field(metadata=dict(static=True), default="l2")
+    scheme: str | None = dataclasses.field(metadata=dict(static=True),
+                                           default=None)
+    scale_rows: int = dataclasses.field(metadata=dict(static=True), default=8)
 
     @property
     def num_shards(self) -> int:
-        return self.vectors.shape[0]
+        return self.neighbors.shape[0]
 
     @property
     def shard_size(self) -> int:
-        return self.vectors.shape[1]
+        return self.neighbors.shape[1]
+
+    @property
+    def dim(self) -> int:
+        if self.scheme == "pq":
+            m, _, ds = self.codebooks.shape
+            return m * ds
+        if self.scheme == "int8":
+            return self.codes.shape[-1]
+        return self.vectors.shape[-1]
+
+    def corpus_bytes_per_vector(self) -> float:
+        """Stored corpus bytes per vector on a device (graph excluded;
+        replicated PQ codebooks amortized over one shard — the honest
+        per-device number)."""
+        ns = self.shard_size
+        if self.scheme == "int8":
+            return (ns * self.codes.shape[-1] + self.scales.shape[-1] * 4) / ns
+        if self.scheme == "pq":
+            return (ns * self.codes.shape[-1] + self.codebooks.size * 4) / ns
+        return 4.0 * self.dim
+
+
+def _corpus_parts(index: ShardedIndex):
+    """The corpus operands a shard_map dispatch needs.
+
+    Returns ``(arrays, kinds, make)``: operand arrays, a "shard"/"repl"
+    placement per operand, and a closure rebuilding the device-local corpus
+    (float array or quantized corpus object) from the mapped blocks. Both
+    the scratch and the resume dispatch build their operand list from this
+    one helper, so the two paths cannot drift.
+    """
+    if index.scheme is None:
+        return (index.vectors,), ("shard",), lambda a: a[0][0]
+    if index.scheme == "int8":
+        sr = index.scale_rows
+        return ((index.codes, index.scales), ("shard", "shard"),
+                lambda a: quant.Int8Corpus(codes=a[0][0], scales=a[1][0],
+                                           scale_rows=sr))
+    return ((index.codes, index.codebooks), ("shard", "repl"),
+            lambda a: quant.PQCorpus(codes=a[0][0], codebooks=a[1]))
 
 
 def build_sharded_index(vectors: np.ndarray, num_shards: int, metric: str,
-                        M: int = 16, builder="knng") -> ShardedIndex:
-    """Partition the database round-robin and build one graph per shard."""
+                        M: int = 16, builder="knng",
+                        quantized: str | None = None, scale_rows: int = 8,
+                        pq_m: int | None = None, pq_codes: int = 256,
+                        pq_iters: int = 10, pq_sample: int = 16384,
+                        seed: int = 0) -> ShardedIndex:
+    """Partition the database round-robin and build one graph per shard.
+
+    ``quantized`` in {None, "int8", "pq"} selects the on-device corpus
+    representation: graphs are always built from the float rows, but with a
+    scheme set each shard stores only compressed codes (int8: one f32 scale
+    per ``scale_rows`` rows; pq: uint8 codebook indices, codebooks k-means
+    trained here on the full corpus and replicated; ``pq_m=None`` picks
+    ``quant.default_pq_m`` for the corpus width). Callers keep the float
+    ``vectors`` host-side for the exact rerank stage.
+    """
     from repro.index.flat import build_knn_graph
     from repro.index.hnsw import build_hnsw
 
     n = vectors.shape[0]
     ns = n // num_shards
     assert ns * num_shards == n, "dataset must split evenly across shards"
+    pq_global = None
+    if quantized == "pq":
+        if pq_m is None:
+            pq_m = quant.default_pq_m(int(vectors.shape[-1]))
+        pq_global = quant.train_pq(np.asarray(vectors, np.float32), m=pq_m,
+                                   codes=pq_codes, iters=pq_iters, seed=seed,
+                                   sample=pq_sample)
+    elif quantized is not None and quantized not in quant.QUANT_SCHEMES:
+        raise ValueError(f"unknown quantized scheme {quantized!r}; "
+                         f"expected one of {quant.QUANT_SCHEMES} or None")
     vecs, nbrs, entries, bases = [], [], [], []
+    codes, scales = [], []
     for s in range(num_shards):
         chunk = np.asarray(vectors[s * ns:(s + 1) * ns], np.float32)
         if builder == "hnsw":
@@ -83,15 +163,28 @@ def build_sharded_index(vectors: np.ndarray, num_shards: int, metric: str,
         nbrs.append(np.asarray(g.neighbors))
         entries.append(int(g.entry))
         bases.append(s * ns)
+        if quantized == "int8":
+            c = quant.quantize_int8(chunk, scale_rows=scale_rows)
+            codes.append(np.asarray(c.codes))
+            scales.append(np.asarray(c.scales))
+        elif quantized == "pq":
+            codes.append(quant.pq_encode(chunk,
+                                         np.asarray(pq_global.codebooks)))
     m0 = max(a.shape[1] for a in nbrs)
     nbrs = [np.pad(a, ((0, 0), (0, m0 - a.shape[1])), constant_values=-1)
             for a in nbrs]
     return ShardedIndex(
-        vectors=jnp.asarray(np.stack(vecs)),
+        vectors=None if quantized else jnp.asarray(np.stack(vecs)),
         neighbors=jnp.asarray(np.stack(nbrs)),
         entries=jnp.asarray(np.array(entries, np.int32)),
         bases=jnp.asarray(np.array(bases, np.int32)),
+        codes=jnp.asarray(np.stack(codes)) if quantized else None,
+        scales=jnp.asarray(np.stack(scales)) if quantized == "int8" else None,
+        codebooks=(jnp.asarray(pq_global.codebooks)
+                   if quantized == "pq" else None),
         metric=metric,
+        scheme=quantized,
+        scale_rows=int(scale_rows),
     )
 
 
@@ -147,12 +240,18 @@ def sharded_topk(index: ShardedIndex, qs: jnp.ndarray, k: int, L: int,
     This is the *scratch* half: every call restarts each shard-local beam at
     its entry point (see ``sharded_topk_resume`` for the stateful half).
     With ``with_expansions`` the per-lane expansion counts summed over
-    shards come back as a third output.
+    shards come back as a third output. Quantized indexes score compressed
+    codes inside the shard_map — same loop, same merge; only the scoring
+    representation changes.
     """
     p = index.num_shards
+    arrays, kinds, make = _corpus_parts(index)
+    nc = len(arrays)
 
-    def shard_fn(vectors, neighbors, entries, bases, qs):
-        ids, scores, steps = _local_topk(vectors[0], neighbors[0], entries[0],
+    def shard_fn(*args):
+        corpus = make(args[:nc])
+        neighbors, entries, bases, qs = args[nc:]
+        ids, scores, steps = _local_topk(corpus, neighbors[0], entries[0],
                                          bases[0], qs, index.metric, k, L)
         if p > 1:
             if merge == "tournament":
@@ -164,10 +263,11 @@ def sharded_topk(index: ShardedIndex, qs: jnp.ndarray, k: int, L: int,
     shard_spec = P(axis)
     fn = shard_map(
         shard_fn, mesh,
-        in_specs=(shard_spec, shard_spec, shard_spec, shard_spec, P()),
+        in_specs=tuple(shard_spec if kd == "shard" else P() for kd in kinds)
+        + (shard_spec, shard_spec, shard_spec, P()),
         out_specs=(P(), P(), P()),
     )
-    ids, scores, expansions = fn(index.vectors, index.neighbors,
+    ids, scores, expansions = fn(*arrays, index.neighbors,
                                  index.entries, index.bases, qs)
     if with_expansions:
         return ids, scores, expansions
@@ -233,23 +333,29 @@ def init_sharded_state(index: ShardedIndex, num_lanes: int, capacity: int,
 _RESUME_DISPATCH_FNS: dict[tuple, object] = {}
 
 
-def _resume_dispatch_fn(mesh: Mesh, axis: str, metric: str, p: int, K: int,
+def _resume_dispatch_fn(index: ShardedIndex, mesh: Mesh, axis: str, K: int,
                         C: int, merge: str):
     """Jitted shard_map dispatch for one (mesh, K-harvest, capacity) rung.
 
-    Cached on its static key so repeat traffic re-enters the same jit
-    callable — the resume path's equivalent of the single-host engine's
-    module-level jits (``resume_jit_cache_sizes`` audits these).
+    Cached on its static key — which includes the corpus scheme, so float
+    and quantized indexes never share a rung — so repeat traffic re-enters
+    the same jit callable; the resume path's equivalent of the single-host
+    engine's module-level jits (``resume_jit_cache_sizes`` audits these).
     """
-    key = (mesh, axis, metric, p, K, C, merge)
+    metric, p = index.metric, index.num_shards
+    key = (mesh, axis, metric, p, K, C, merge, index.scheme,
+           index.scale_rows)
     fn = _RESUME_DISPATCH_FNS.get(key)
     if fn is not None:
         return fn
+    _, kinds, make = _corpus_parts(index)
+    nc = len(kinds)
 
-    def shard_fn(vectors, neighbors, entries, bases,
-                 s_ids, s_sc, s_st, s_vis, s_steps,
-                 qs, idx, fresh, limit, budget):
-        graph = make_flat_graph(vectors[0], neighbors[0], None, entries[0],
+    def shard_fn(*args):
+        corpus = make(args[:nc])
+        (neighbors, entries, bases, s_ids, s_sc, s_st, s_vis, s_steps,
+         qs, idx, fresh, limit, budget) = args[nc:]
+        graph = make_flat_graph(corpus, neighbors[0], None, entries[0],
                                 metric)
         base = bases[0]
         ids_b, sc_b, st_b = s_ids[0], s_sc[0], s_st[0]       # [B, C]
@@ -296,9 +402,10 @@ def _resume_dispatch_fn(mesh: Mesh, axis: str, metric: str, p: int, K: int,
     sspec = P(axis)
     mapped = shard_map(
         shard_fn, mesh,
-        in_specs=(sspec, sspec, sspec, sspec,
-                  sspec, sspec, sspec, sspec, sspec,
-                  P(), P(), P(), P(), P()),
+        in_specs=tuple(sspec if kd == "shard" else P() for kd in kinds)
+        + (sspec, sspec, sspec,
+           sspec, sspec, sspec, sspec, sspec,
+           P(), P(), P(), P(), P()),
         out_specs=(P(), P(), sspec, sspec, sspec, sspec, sspec),
     )
     fn = jax.jit(mapped)
@@ -332,10 +439,10 @@ def sharded_topk_resume(index: ShardedIndex, state: ShardedSearchState,
     keep their bits. A freshly seeded lane's round is bit-exact with
     ``sharded_topk`` at the same ``(K, L)``.
     """
-    p = index.num_shards
-    fn = _resume_dispatch_fn(mesh, axis, index.metric, p, int(K),
-                             state.capacity, merge)
-    out = fn(index.vectors, index.neighbors, index.entries, index.bases,
+    fn = _resume_dispatch_fn(index, mesh, axis, int(K), state.capacity,
+                             merge)
+    arrays, _, _ = _corpus_parts(index)
+    out = fn(*arrays, index.neighbors, index.entries, index.bases,
              state.ids, state.scores, state.stable, state.visited,
              state.steps, jnp.asarray(qs, jnp.float32),
              jnp.asarray(lane_idx, jnp.int32),
@@ -346,6 +453,26 @@ def sharded_topk_resume(index: ShardedIndex, state: ShardedSearchState,
     return ids, scores, ShardedSearchState(*leaves)
 
 
+def _diversify_one(vecs, cand_ids, cand_scores, eps_q, metric: str, k: int,
+                   K: int, method: str, max_expansions: int):
+    """One lane's diversify over an already-gathered candidate tile."""
+    adj = kops.pairwise_adjacency(vecs, eps_q, metric, cand_ids >= 0)
+    if method == "greedy":
+        sel, count = kops.greedy_diversify(cand_scores, adj, k,
+                                           valid=cand_ids >= 0)
+        certified = count >= k
+    else:
+        res = da.div_astar(
+            jnp.where(cand_ids >= 0, cand_scores, -jnp.inf), adj, k,
+            max_expansions=max_expansions)
+        sel = res.best_sets[k - 1]
+        min_value = theorem2_min_value(res.best_scores, k)
+        certified = (min_value > cand_scores[K - 1]) & res.complete
+    out_ids = jnp.where(sel >= 0, cand_ids[jnp.maximum(sel, 0)], -1)
+    out_sc = jnp.where(sel >= 0, cand_scores[jnp.maximum(sel, 0)], 0.0)
+    return out_ids, out_sc, certified
+
+
 def _diversify_batch(all_vectors, metric: str, ids, scores, epss, k: int,
                      K: int, method: str, max_expansions: int):
     """Replicated diversify over merged candidates — the single stage both
@@ -354,23 +481,45 @@ def _diversify_batch(all_vectors, metric: str, ids, scores, epss, k: int,
 
     def diversify(cand_ids, cand_scores, eps_q):
         vecs = all_vectors[jnp.maximum(cand_ids, 0)]
-        adj = kops.pairwise_adjacency(vecs, eps_q, metric, cand_ids >= 0)
-        if method == "greedy":
-            sel, count = kops.greedy_diversify(cand_scores, adj, k,
-                                               valid=cand_ids >= 0)
-            certified = count >= k
-        else:
-            res = da.div_astar(
-                jnp.where(cand_ids >= 0, cand_scores, -jnp.inf), adj, k,
-                max_expansions=max_expansions)
-            sel = res.best_sets[k - 1]
-            min_value = theorem2_min_value(res.best_scores, k)
-            certified = (min_value > cand_scores[K - 1]) & res.complete
-        out_ids = jnp.where(sel >= 0, cand_ids[jnp.maximum(sel, 0)], -1)
-        out_sc = jnp.where(sel >= 0, cand_scores[jnp.maximum(sel, 0)], 0.0)
-        return out_ids, out_sc, certified
+        return _diversify_one(vecs, cand_ids, cand_scores, eps_q, metric, k,
+                              K, method, max_expansions)
 
     return jax.vmap(diversify)(ids, scores, epss)
+
+
+def _diversify_batch_gathered(cand_vecs, metric: str, ids, scores, epss,
+                              k: int, K: int, method: str,
+                              max_expansions: int):
+    """Same stage over pre-gathered candidate vectors [B, K, d] — the
+    quantized path's variant: candidate float rows were already gathered
+    host-side by the exact rerank, so the device never needs the full
+    float corpus."""
+
+    def diversify(vecs, cand_ids, cand_scores, eps_q):
+        return _diversify_one(vecs, cand_ids, cand_scores, eps_q, metric, k,
+                              K, method, max_expansions)
+
+    return jax.vmap(diversify)(cand_vecs, ids, scores, epss)
+
+
+def exact_rerank_frontier(all_vectors, qs, ids, metric: str):
+    """Host-side exact float rerank of merged frontiers (quantized path).
+
+    Same candidate *set*, re-scored with exact float similarity and
+    re-sorted (descending score, ascending-id ties) via
+    ``index.flat.exact_rerank``, so everything downstream — greedy/div-A*
+    diversification, the ``cand_scores[K-1]`` certificate threshold, and
+    any ``theorem2_recheck`` a caller runs on the returned frontier — sees
+    only true float scores. Returns ``(ids, scores, vecs)`` with ``vecs``
+    the gathered candidate float rows for the adjacency build.
+    """
+    from repro.index.flat import exact_rerank
+
+    xs = np.asarray(all_vectors, np.float32)
+    ids_r, sc_r = exact_rerank(np.asarray(qs, np.float32),
+                               np.asarray(ids), xs, metric)
+    vecs = xs[np.maximum(ids_r, 0)]
+    return jnp.asarray(ids_r), jnp.asarray(sc_r), jnp.asarray(vecs)
 
 
 def sharded_diverse_search(index: ShardedIndex, all_vectors: jnp.ndarray,
@@ -389,12 +538,23 @@ def sharded_diverse_search(index: ShardedIndex, all_vectors: jnp.ndarray,
     ``eps`` may be a scalar or a per-query ``[B]`` vector (the scheduler's
     query-owned diversification level): lanes with different eps share one
     dispatch because eps is traced, never baked into the compilation.
+
+    Quantized indexes (``index.scheme`` set) search and merge over
+    compressed scores, then run the host-side exact float rerank on the
+    merged frontier before diversification (``all_vectors`` is the
+    host-retained float corpus) — contract 13.
     """
     ids, scores, expansions = sharded_topk(index, qs, K, K * L_factor, mesh,
                                            axis, merge, with_expansions=True)
     epss = jnp.broadcast_to(jnp.asarray(eps, jnp.float32), (qs.shape[0],))
-    out = _diversify_batch(all_vectors, index.metric, ids, scores, epss, k,
-                           K, method, max_expansions)
+    if index.scheme is not None:
+        ids, scores, vecs = exact_rerank_frontier(all_vectors, qs, ids,
+                                                   index.metric)
+        out = _diversify_batch_gathered(vecs, index.metric, ids, scores,
+                                        epss, k, K, method, max_expansions)
+    else:
+        out = _diversify_batch(all_vectors, index.metric, ids, scores, epss,
+                               k, K, method, max_expansions)
     if with_expansions:
         return (*out, expansions)
     return out
@@ -412,20 +572,30 @@ def sharded_diverse_resume(index: ShardedIndex, all_vectors: jnp.ndarray,
 
     Returns (ids[g, k], scores[g, k], cand_ids[g, K], cand_scores[g, K],
     certified[g], new_state). The candidate frontier comes back so callers
-    can re-verify the Theorem-2 certificate independently of the engine.
-    Lanes dispatched with ``fresh`` seeds are bit-exact with
-    ``sharded_diverse_search`` at the same budget; resumed lanes instead
-    satisfy the certificate-soundness + recall contract (their candidate
-    frontier is at least as deep as a scratch one, but expansion order —
-    hence near-tie content — may differ).
+    can re-verify the Theorem-2 certificate independently of the engine —
+    on a quantized index it is the *reranked* frontier (exact float scores,
+    re-sorted), so ``theorem2_recheck`` against the float corpus sees the
+    very scores that produced the certificate. Lanes dispatched with
+    ``fresh`` seeds are bit-exact with ``sharded_diverse_search`` at the
+    same budget; resumed lanes instead satisfy the certificate-soundness +
+    recall contract (their candidate frontier is at least as deep as a
+    scratch one, but expansion order — hence near-tie content — may
+    differ).
     """
     ids, scores, new_state = sharded_topk_resume(
         index, state, qs, lane_idx, fresh, K, K * L_factor, mesh, axis,
         merge)
     epss = jnp.broadcast_to(jnp.asarray(eps, jnp.float32), (qs.shape[0],))
-    out_ids, out_sc, cert = _diversify_batch(
-        all_vectors, index.metric, ids, scores, epss, k, K, method,
-        max_expansions)
+    if index.scheme is not None:
+        ids, scores, vecs = exact_rerank_frontier(all_vectors, qs, ids,
+                                                   index.metric)
+        out_ids, out_sc, cert = _diversify_batch_gathered(
+            vecs, index.metric, ids, scores, epss, k, K, method,
+            max_expansions)
+    else:
+        out_ids, out_sc, cert = _diversify_batch(
+            all_vectors, index.metric, ids, scores, epss, k, K, method,
+            max_expansions)
     return out_ids, out_sc, ids, scores, cert, new_state
 
 
