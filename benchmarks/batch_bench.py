@@ -469,10 +469,35 @@ def make_tenant_workload(x, metric, requests: int, tenants: int = 2,
     return queries, ks, epss, heavy, names
 
 
+def make_zipf_workload(x, metric, requests: int, zipf: float,
+                       base: int | None = None, seed: int = 7):
+    """Zipf-duplicated request trace — production traffic's shape.
+
+    Draws each arrival's *identity* from a Zipf-like law over ``base``
+    distinct queries: query rank ``r`` (1-based) arrives with probability
+    proportional to ``r ** -zipf``, so a handful of hot queries repeat many
+    times while the tail stays cold. ``zipf`` is the skew parameter
+    (``1.0`` ≈ classic web-traffic skew; higher = hotter head; ``0.0`` is
+    uniform duplication over the base pool). The base pool and its per-query
+    ``(k, eps)`` parameters come from :func:`make_skewed_workload` with the
+    same ``seed``, and duplicates share their base query's parameters
+    exactly (a semantic cache key requires it) — so the trace is fully
+    pinned by ``(requests, zipf, base, seed)``. Returns
+    ``(queries, ks, epss, ranks)`` where ``ranks[i]`` is arrival ``i``'s
+    base-pool index (duplication ground truth for hit-rate accounting).
+    """
+    base = base or max(requests // 4, 8)
+    bq, bks, bepss, _ = make_skewed_workload(x, metric, base, seed)
+    rng = np.random.default_rng(seed + 1)
+    weights = np.arange(1, base + 1, dtype=np.float64) ** -float(zipf)
+    ranks = rng.choice(base, size=requests, p=weights / weights.sum())
+    return bq[ranks], bks[ranks], bepss[ranks], ranks
+
+
 def _backend_scheduler_factory(kind: str, graph, x, metric, lanes: int,
                                max_k: int, ef: int, max_pending: int,
                                history: int, mesh_world: dict,
-                               policy=lambda: "fifo"):
+                               policy=lambda: "fifo", cache_size: int = 0):
     """Returns ``make(shed) -> LaneScheduler`` for one backend kind — the
     LaneBackend protocol in action: same scheduler, different engine.
     ``kind`` is ``engine`` or ``sharded-{scratch,beam}`` (the ShardedEngine
@@ -481,12 +506,15 @@ def _backend_scheduler_factory(kind: str, graph, x, metric, lanes: int,
     start warm). ``policy`` is a zero-arg factory returning a policy spec
     (name or configured ``AdmissionPolicy``), called once per scheduler —
     policies hold per-scheduler queue state, so load points never share an
-    instance."""
+    instance. ``cache_size > 0`` builds each scheduler with a semantic
+    result cache of that capacity over the backend's corpus; ``make`` takes
+    an optional override (``make(shed, cache_size=0)`` for the no-cache
+    parity twin)."""
     if kind == "engine":
-        return lambda shed: LaneScheduler(
+        return lambda shed, cache_size=cache_size: LaneScheduler(
             graph, num_lanes=lanes, max_k=max_k, default_ef=ef,
             max_pending=max_pending, history=history, prewarm=False,
-            shed=shed, policy=policy())
+            shed=shed, policy=policy(), cache_size=cache_size)
     resume = kind.split("-", 1)[1]
     if not mesh_world:
         import jax
@@ -502,12 +530,12 @@ def _backend_scheduler_factory(kind: str, graph, x, metric, lanes: int,
         mesh_world["xs"] = x[:n]
     from repro.sharded_search import ShardedEngine
 
-    return lambda shed: LaneScheduler(
+    return lambda shed, cache_size=cache_size: LaneScheduler(
         backend=ShardedEngine(mesh_world["index"], mesh_world["xs"],
                               mesh_world["mesh"], num_lanes=lanes,
                               max_k=max_k, resume=resume),
         max_pending=max_pending, history=history, prewarm=False, shed=shed,
-        policy=policy())
+        policy=policy(), cache_size=cache_size)
 
 
 def make_slo_shed(slo: float):
@@ -524,16 +552,79 @@ def make_slo_shed(slo: float):
     return shed
 
 
+def _audit_cache_hits(sched, hits) -> int:
+    """Independent revalidation-soundness audit of served cache hits.
+
+    For each hit, rescores the entry's recorded frontier against the *live*
+    query with the oracle similarity (``repro.core.similarity.query_sim``,
+    not the cache's kernel path) and re-runs ``theorem2_recheck``; a served
+    hit whose recheck fails, or whose served ids are not the recheck's
+    selected set, is a soundness violation (contract 14 — nonzero fails
+    the producing job)."""
+    from repro.core import theorems
+    from repro.core.similarity import query_sim
+
+    vectors = sched.cache.vectors
+    metric = sched.cache.metric
+    violations = 0
+    for r in hits:
+        e = r.cache_entry
+        valid = e.cand_ids >= 0
+        vecs = vectors[np.maximum(e.cand_ids, 0)]
+        sc = np.asarray(query_sim(jnp.asarray(r.q), jnp.asarray(vecs),
+                                  metric), np.float32)
+        sc = np.where(valid, sc, -np.inf).astype(np.float32)
+        order = np.argsort(-sc, kind="stable")
+        certified, sel = theorems.theorem2_recheck(
+            vectors, metric, e.cand_ids[order], sc[order], e.eps, e.k)
+        if not certified or set(map(int, sel)) != set(map(int,
+                                                         r.result.ids)):
+            violations += 1
+    return violations
+
+
+def _cache_parity_check(make_sched, queries, ks, epss, ef) -> int:
+    """Bit-parity gate: on a zero-duplicate (all-distinct) trace, a cached
+    scheduler must return exactly what an uncached one does — cache-miss
+    fall-through changes nothing (and with distinct queries the cache must
+    not hit). Returns the number of mismatched requests."""
+    plain = make_sched(None, cache_size=0)
+    cached = make_sched(None)
+    res_a = plain.run(queries, ks, epss, efs=ef)
+    res_b = cached.run(queries, ks, epss, efs=ef)
+    bad = 0
+    for a, b in zip(res_a, res_b):
+        if a is None or b is None:
+            bad += (a is None) != (b is None)
+            continue
+        if (not np.array_equal(a.ids, b.ids)
+                or not np.array_equal(a.scores, b.scores)):
+            bad += 1
+    bad += cached.total_cache_hits   # distinct queries must never hit
+    return bad
+
+
 def run_open(n: int, requests: int, lanes: int, ef: int, qps_list,
              backends=("engine",), slo: float | None = None,
              tenants: int = 1, policy: str = "fifo",
-             heavy_frac: float = 1 / 16, seed: int = 7) -> dict:
+             heavy_frac: float = 1 / 16, seed: int = 7,
+             zipf: float = 0.0, cache_size: int = 0) -> dict:
     if "engine" in backends:
         graph, x, metric = D.load_graph("deep-like", n=n)
     else:   # sharded-only: the single-host graph would be dead weight
         graph, (x, metric) = None, D.make_dataset("deep-like", n=n)
     multi = tenants > 1 or policy != "fifo"
-    if multi:
+    if zipf and multi:
+        raise ValueError("--zipf drives the single-tenant fifo duplicated "
+                         "trace; combine it with --tenants/--policy once a "
+                         "workload needs both")
+    if zipf:
+        # Zipf-duplicated trace (with or without --cache-size): pinned by
+        # (requests, zipf, seed), duplicates share (k, eps) exactly
+        queries, ks, epss, _ranks = make_zipf_workload(x, metric, requests,
+                                                       zipf, seed=seed)
+        names = np.full(requests, "default")
+    elif multi:
         queries, ks, epss, heavy, names = make_tenant_workload(
             x, metric, requests, tenants=max(tenants, 2),
             heavy_frac=heavy_frac, seed=seed)
@@ -569,7 +660,17 @@ def run_open(n: int, requests: int, lanes: int, ef: int, qps_list,
         make_sched = _backend_scheduler_factory(
             kind, graph, x, metric, lanes, max_k, ef, max_pending=requests,
             history=requests + warmup, mesh_world=mesh_world,
-            policy=policy_spec)
+            policy=policy_spec, cache_size=cache_size)
+        parity_bad = 0
+        if cache_size:
+            # zero-duplicate bit-parity gate, once per backend kind: the
+            # cached scheduler must be invisible on an all-distinct trace
+            pq, pks, pepss, _ = make_skewed_workload(
+                x, metric, min(requests, 2 * lanes), seed + 101)
+            parity_bad = _cache_parity_check(make_sched, pq, pks, pepss, ef)
+            if parity_bad:
+                print(f"# CACHE PARITY VIOLATION {kind}: {parity_bad} "
+                      "mismatches on a zero-duplicate trace")
         if multi:
             # absorb the XLA compiles in a throwaway fifo pass first (jit
             # caches are process-global): the measured schedulers' cost
@@ -654,20 +755,29 @@ def run_open(n: int, requests: int, lanes: int, ef: int, qps_list,
                     for r in open_reqs]
             waits = [r.t_admit - first_offer.get(r.rid, r.t_submit)
                      for r in open_reqs]
-            served = len(open_reqs)
+            # cache hits complete without a lane: count them apart from
+            # search-served requests (the conservation law below bills
+            # them separately), but their latencies stay in the pooled
+            # percentiles — the latency win is the headline
+            hit_reqs = [r for r in open_reqs if r.cache_hit]
+            hits_n = len(hit_reqs)
+            served = len(open_reqs) - hits_n
             # real per-lane counters out of the harvested SearchStats (the
             # sharded backend threads them from the resumable beam state)
             exp_total = sum(int(r.result.stats.expansions)
                             for r in open_reqs if r.result is not None)
             rounds_total = sum(int(r.result.stats.search_calls)
                                for r in open_reqs if r.result is not None)
-            tag = f"open/{kind}/qps{qps:g}" + (f"/{policy}" if multi else "")
+            tag = (f"open/{kind}/qps{qps:g}" + (f"/{policy}" if multi else "")
+                   + (f"/zipf{zipf:g}" if zipf else "")
+                   + (f"/cache{cache_size}" if cache_size else ""))
             emit(f"{tag}/p50_latency", percentile(lats, 50) * 1e3, "ms")
             emit(f"{tag}/p99_latency", percentile(lats, 99) * 1e3,
                  f"ms;p99_wait_ms={percentile(waits, 99) * 1e3:.1f};"
                  f"fairness={jain_fairness(lats):.3f}")
             emit(f"{tag}/served", served,
-                 f"of {requests} offered;shed={shed_n};deferred={deferred_n}")
+                 f"of {requests} offered;shed={shed_n};"
+                 f"deferred={deferred_n};cache_hits={hits_n}")
             emit(f"{tag}/expansions", exp_total,
                  f"cumulative;rounds={rounds_total};per_round="
                  f"{exp_total / max(rounds_total, 1):.1f}")
@@ -676,9 +786,31 @@ def run_open(n: int, requests: int, lanes: int, ef: int, qps_list,
                 p99_wait=percentile(waits, 99), served=served, shed=shed_n,
                 expansions_total=exp_total, rounds_total=rounds_total,
                 expansions_per_round=exp_total / max(rounds_total, 1),
-                throughput=(served / max(max(r.t_done or 0.0
-                                             for r in open_reqs) - t0, 1e-9)
+                throughput=(len(open_reqs)
+                            / max(max(r.t_done or 0.0
+                                      for r in open_reqs) - t0, 1e-9)
                             if open_reqs else 0.0))
+            if zipf:
+                point["zipf"] = zipf
+            if cache_size:
+                hit_lats = [r.t_done - first_offer.get(r.rid, r.t_submit)
+                            for r in hit_reqs]
+                soundness_bad = _audit_cache_hits(sched, hit_reqs)
+                point.update(
+                    cache_size=cache_size, cache_hits=hits_n,
+                    hit_rate=hits_n / requests,
+                    hit_p50_ms=percentile(hit_lats, 50) * 1e3,
+                    soundness_violations=soundness_bad,
+                    parity_violations=parity_bad)
+                emit(f"{tag}/hit_rate", hits_n / requests,
+                     f"hits={hits_n};hit_p50_ms="
+                     f"{percentile(hit_lats, 50) * 1e3:.2f};"
+                     f"soundness_violations={soundness_bad}")
+                if soundness_bad or parity_bad:
+                    print(f"# CACHE SOUNDNESS/PARITY VIOLATION {kind}@"
+                          f"{qps}: soundness={soundness_bad} "
+                          f"parity={parity_bad}")
+                    point["violation"] = True
             if multi:
                 per_tenant = {}
                 for tname in sorted(set(str(t) for t in names)):
@@ -705,10 +837,10 @@ def run_open(n: int, requests: int, lanes: int, ef: int, qps_list,
                      jain_fairness(t_means),
                      f"jain_over_tenant_means;calibration_error="
                      f"{stats['cost_calibration_error']:.3f}")
-            if served + shed_n + deferred_n != requests:
+            if served + shed_n + deferred_n + hits_n != requests:
                 print(f"# OPEN-LOOP ACCOUNTING VIOLATION {kind}@{qps}: "
                       f"{served} served + {shed_n} shed + {deferred_n} "
-                      f"deferred != {requests}")
+                      f"deferred + {hits_n} hits != {requests}")
                 point["violation"] = True
             out[(kind, qps)] = point
     return out
@@ -764,9 +896,20 @@ def _skewed_payload(res: dict) -> dict:
 def _open_payload(res: dict) -> dict:
     """Point key: ``<kind>@qps<q>``, suffixed ``@<policy>`` for
     multi-tenant/policy runs so fifo/drr runs of the same load point
-    coexist in one file (re-running the same policy overwrites its key)."""
-    return {f"{kind}@qps{qps:g}"
-            + (f"@{point['policy']}" if "policy" in point else ""): point
+    coexist in one file (re-running the same policy overwrites its key).
+    Zipf-duplicated traces append ``@zipf<S>`` and cache-enabled runs
+    ``@cache<size>``, so the cache point and its no-cache baseline at the
+    same offered load sit side by side."""
+    def key(kind, qps, point):
+        k = f"{kind}@qps{qps:g}"
+        if "policy" in point:
+            k += f"@{point['policy']}"
+        if point.get("zipf"):
+            k += f"@zipf{point['zipf']:g}"
+        if point.get("cache_size"):
+            k += f"@cache{point['cache_size']}"
+        return k
+    return {key(kind, qps, point): point
             for (kind, qps), point in sorted(res.items())}
 
 
@@ -806,6 +949,15 @@ def main(argv=None):
     ap.add_argument("--heavy-frac", type=float, default=1 / 16,
                     help="heavy tenant's request-rate share of the "
                          "multi-tenant mix (--mode open --tenants >1)")
+    ap.add_argument("--zipf", type=float, default=0.0,
+                    help="switch --mode open to the Zipf-duplicated query "
+                         "trace with this skew parameter (1.0 ~ classic "
+                         "web skew; usable with and without --cache-size)")
+    ap.add_argument("--cache-size", type=int, default=0,
+                    help="semantic result cache capacity for --mode open "
+                         "(0 = no cache); reports hit-rate / hit_p50 and "
+                         "gates on revalidation soundness + zero-duplicate "
+                         "parity")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="merge this run's summary into a stable-schema "
                          "trend JSON (skewed/open modes)")
@@ -845,7 +997,8 @@ def main(argv=None):
         res = run_open(n=n, requests=requests, lanes=lanes, ef=args.ef,
                        qps_list=qps_list, backends=backends, slo=args.slo,
                        tenants=args.tenants, policy=args.policy,
-                       heavy_frac=args.heavy_frac, seed=args.seed)
+                       heavy_frac=args.heavy_frac, seed=args.seed,
+                       zipf=args.zipf, cache_size=args.cache_size)
         if args.json:
             write_trend_json(args.json, "open", _open_payload(res))
         return 1 if any(v.get("violation") for v in res.values()) else 0

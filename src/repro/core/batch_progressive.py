@@ -667,6 +667,13 @@ class ProgressiveEngine:
         self.out_ids = np.full((self.B, max_k), -1, np.int32)
         self.out_sc = np.zeros((self.B, max_k), np.float32)
         self._unharvested: list[int] = []
+        #: when True, each certificate-bearing round keeps the lane's sorted
+        #: candidate frontier host-side (``last_candidates[lane]`` =
+        #: ``(cand_ids, cand_scores, slack_or_None)``) so a result's
+        #: Theorem-2 certificate can be audited or cached after harvest —
+        #: the single-host mirror of ``ShardedEngine.record_candidates``
+        self.record_candidates = False
+        self.last_candidates: list = [None] * self.B
         # LaneBackend contract 13: the single-host engine always scores the
         # exact float corpus, so its certificates need no rerank stage
         self.compressed = bool(quant.is_quantized(graph.vectors))
@@ -711,6 +718,7 @@ class ProgressiveEngine:
         self.maxK[lane] = max_K or self.graph.size
         self.out_ids[lane] = -1
         self.out_sc[lane] = 0.0
+        self.last_candidates[lane] = None
         self.to_pss[lane] = method == "pss"
         self.status[lane] = _METHOD_STATUS[method]
 
@@ -923,6 +931,13 @@ class ProgressiveEngine:
                     s >= 0, sc_np[gi][np.maximum(s, 0)], 0.0)
                 d.stats.certified[lane] = (bool(complete_np[gi])
                                            and not bool(d.stats.exhausted[lane]))
+                if self.record_candidates:
+                    # pds certificates are Theorem-1-shaped: no minValue
+                    # slack to hand over — consumers must re-audit
+                    Kl = int(min(self.K[lane], width))
+                    self.last_candidates[lane] = (
+                        ids_np[gi, :Kl].astype(np.int32).copy(),
+                        sc_np[gi, :Kl].astype(np.float32).copy(), None)
         d.stats.div_calls[fmask] += 1
         for lane in np.flatnonzero(fmask):
             self._finish(lane, finished)
@@ -968,6 +983,12 @@ class ProgressiveEngine:
                         s >= 0, sc_np[gi][np.maximum(s, 0)], 0.0)
                 s_K[lane] = (sc_np[gi, self.K[lane] - 1]
                              if self.K[lane] <= width else -np.inf)
+                if self.record_candidates:
+                    Kl = int(min(self.K[lane], width))
+                    self.last_candidates[lane] = (
+                        ids_np[gi, :Kl].astype(np.int32).copy(),
+                        sc_np[gi, :Kl].astype(np.float32).copy(),
+                        float(min_values[lane] - s_K[lane]))
         d.stats.div_calls[mask] += 1
         certified = mask & (min_values > s_K)
         d.stats.certified |= certified & complete

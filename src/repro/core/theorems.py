@@ -12,6 +12,8 @@ Theorem 3 (recall bound): Recall_P >= (1 - K*lambda/(K-k+1))^k.
 """
 from __future__ import annotations
 
+import math
+
 import jax.numpy as jnp
 
 
@@ -57,6 +59,41 @@ def theorem3_recall_bound(K: float, k: int, lam: float) -> float:
     return max(0.0, base) ** k
 
 
+def theorem2_audit(vectors, metric: str, cand_ids, cand_scores, eps,
+                   k: int, max_expansions: int = 100_000):
+    """Theorem-2 certificate audit returning the certificate's numbers.
+
+    Like :func:`theorem2_recheck` but also reports ``(min_value, s_K)`` so
+    callers can measure the certificate's *slack* ``min_value - s_K`` — the
+    reusability budget the semantic result cache converts into a query-drift
+    threshold (:func:`theorem2_slack_threshold`). Returns
+    ``(certified, selected_global_ids, min_value, s_K)``. An empty or
+    all-padding frontier is never certified (there is no ``s_K`` to bound).
+    """
+    import numpy as np
+
+    from repro.core import div_astar as da
+    from repro.kernels import ops as kops
+
+    cand_ids = np.asarray(cand_ids)
+    cand_scores = np.asarray(cand_scores)
+    K = len(cand_ids)
+    if K == 0 or not (cand_ids >= 0).any():
+        return False, np.full(k, -1, np.int32), -np.inf, np.inf
+    vecs = jnp.asarray(vectors)[np.maximum(cand_ids, 0)]
+    adj = kops.pairwise_adjacency(vecs, eps, metric,
+                                  jnp.asarray(cand_ids >= 0))
+    res = da.div_astar(jnp.where(jnp.asarray(cand_ids) >= 0,
+                                 jnp.asarray(cand_scores), -jnp.inf),
+                       adj, k, max_expansions=max_expansions)
+    min_value = float(theorem2_min_value(res.best_scores, k))
+    s_K = float(cand_scores[K - 1])
+    certified = bool((min_value > s_K) and bool(np.asarray(res.complete)))
+    sel = np.asarray(res.best_sets[k - 1])
+    sel_ids = np.where(sel >= 0, cand_ids[np.maximum(sel, 0)], -1)
+    return certified, sel_ids.astype(np.int32), min_value, s_K
+
+
 def theorem2_recheck(vectors, metric: str, cand_ids, cand_scores, eps,
                      k: int, max_expansions: int = 100_000):
     """Independent Theorem-2 certificate audit over a candidate frontier.
@@ -68,23 +105,45 @@ def theorem2_recheck(vectors, metric: str, cand_ids, cand_scores, eps,
     ``(certified, selected_global_ids)``; a sound certificate means
     ``certified`` is True and the selected ids equal the served ones.
     """
-    import numpy as np
+    certified, sel_ids, _, _ = theorem2_audit(
+        vectors, metric, cand_ids, cand_scores, eps, k,
+        max_expansions=max_expansions)
+    return certified, sel_ids
 
-    from repro.core import div_astar as da
-    from repro.kernels import ops as kops
 
-    cand_ids = np.asarray(cand_ids)
-    cand_scores = np.asarray(cand_scores)
-    K = len(cand_ids)
-    vecs = jnp.asarray(vectors)[np.maximum(cand_ids, 0)]
-    adj = kops.pairwise_adjacency(vecs, eps, metric,
-                                  jnp.asarray(cand_ids >= 0))
-    res = da.div_astar(jnp.where(jnp.asarray(cand_ids) >= 0,
-                                 jnp.asarray(cand_scores), -jnp.inf),
-                       adj, k, max_expansions=max_expansions)
-    min_value = theorem2_min_value(res.best_scores, k)
-    certified = bool(np.asarray((min_value > cand_scores[K - 1])
-                                & res.complete))
-    sel = np.asarray(res.best_sets[k - 1])
-    sel_ids = np.where(sel >= 0, cand_ids[np.maximum(sel, 0)], -1)
-    return certified, sel_ids.astype(np.int32)
+def theorem2_slack_threshold(slack: float, k: int,
+                             lipschitz: float = 1.0) -> float:
+    """Max per-query drift under which a Theorem-2 certificate survives.
+
+    Soundness contract (the semantic result cache's revalidation bound):
+    let a frontier of K candidates carry a certificate with slack
+    ``minValue - s_K > 0`` for query ``q``. Rescore the *same* frontier
+    against a new query ``q'`` whose drift ``delta`` (Euclidean distance in
+    probe space — raw queries for ``l2``/``ip``, unit-normalized for
+    ``cos``) satisfies ``delta <= threshold``. Every candidate's score then
+    moves by at most ``Delta = lipschitz * delta`` (``l2``:
+    ``|sim - sim'| = | ||q-x|| - ||q'-x|| | <= ||q-q'||``, L=1; ``cos``:
+    scores are dots of unit vectors, L=1 on the unit sphere; ``ip``:
+    ``|<q-q',x>| <= ||q-q'|| * max_x ||x||``, L = the max corpus norm).
+    G^eps depends only on the candidate vectors, not the query, so the
+    feasible diverse sets are unchanged and each best size-``i`` total
+    ``S_i`` (a max of sums of ``i`` scores) moves by at most ``i*Delta``.
+    The worst gap term ``(S_k - S_i)/(k-i)`` therefore drops by at most
+    ``(2k-1)*Delta`` (at ``i = k-1``) while ``s_K`` rises by at most
+    ``Delta`` — so ``minValue' > s_K'`` still holds whenever
+    ``2k * Delta < slack``, i.e. ``delta < slack / (2k * lipschitz)``.
+
+    A revalidated hit's result set thus passes the same
+    :func:`theorem2_recheck` a fresh search over that frontier would — and
+    the cache *still runs the recheck on every hit* (the threshold is a
+    probe filter, never the soundness argument). ``k == 1`` certificates
+    have infinite slack (``theorem2_min_value`` is ``+inf``) and return an
+    infinite threshold; cap with the cache's ``max_drift`` knob. Returns
+    0.0 for non-positive slack (an expired or uncertified entry never
+    matches).
+    """
+    if not slack > 0.0:
+        return 0.0
+    if not math.isfinite(slack):
+        return math.inf
+    return slack / (2.0 * max(int(k), 1) * float(lipschitz))

@@ -17,10 +17,17 @@ mesh's data axis and the *same* scheduler drives a
 ``sharded_search.engine.ShardedEngine`` backend (shard-local beams,
 tournament merge, per-lane progressive budgets). On CPU, force host
 devices first, e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+
+``--cache-size N`` enables the semantic result cache (``serve.cache``):
+repeated or near-duplicate queries are answered from a certified cached
+result set after a fresh Theorem-2 recheck, without occupying a lane.
+``--cost-model-path f.json`` warm-starts the admission policies' expansion
+cost model from a previous run and persists the learned state afterwards.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -29,6 +36,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.index.flat import build_knn_graph
 from repro.models import model as M
+from repro.serve.policies import ExpansionCostModel
 from repro.serve.rag import RagPipeline
 
 
@@ -69,6 +77,16 @@ def main():
     ap.add_argument("--mesh-shards", type=int, default=0,
                     help="serve retrieval from a P-way sharded mesh backend "
                          "(0 = single-host engine)")
+    ap.add_argument("--cache-size", type=int, default=0,
+                    help="semantic result cache capacity: repeated/near-"
+                         "duplicate queries are served from certified "
+                         "cached result sets after a Theorem-2 recheck "
+                         "(0 = off; requires --engine scheduler)")
+    ap.add_argument("--cost-model-path", default=None,
+                    help="JSON file to warm-start the admission policies' "
+                         "expansion cost model from (loaded if it exists) "
+                         "and to persist the learned state back to after "
+                         "the run")
     ap.add_argument("--prewarm", action="store_true",
                     help="pre-compile the scheduler's capacity ladder")
     args = ap.parse_args()
@@ -87,18 +105,27 @@ def main():
         graph = build_knn_graph(docs, metric="ip", M=8)
     cfg = get_config(args.arch).reduced()
     params = M.init_params(cfg, jax.random.key(0))
+    cost_model = None
+    if args.cost_model_path and os.path.exists(args.cost_model_path):
+        cost_model = ExpansionCostModel.load(args.cost_model_path)
+        print(f"# cost model warm-started from {args.cost_model_path} "
+              f"({cost_model.stats()['observations']} observations)")
     pipe = RagPipeline(cfg, params, graph, k=args.k, eps=args.eps,
                        engine=args.engine, num_lanes=args.lanes,
                        prewarm=args.prewarm, backend=backend,
-                       policy=args.policy)
+                       policy=args.policy, cache_size=args.cache_size,
+                       cost_model=cost_model)
     qs = docs[rng.integers(0, len(docs), args.requests)]
     tenants = ([f"t{i % args.tenants}" for i in range(args.requests)]
                if args.tenants > 1 else None)
     if args.engine != "scheduler" and (tenants is not None
-                                       or args.policy != "fifo"):
+                                       or args.policy != "fifo"
+                                       or args.cache_size
+                                       or args.cost_model_path):
         # the lockstep/fixed_k paths never build a LaneScheduler, so these
         # flags would be silently ignored — refuse instead
-        raise SystemExit("--tenants/--policy require --engine scheduler")
+        raise SystemExit("--tenants/--policy/--cache-size/--cost-model-path "
+                         "require --engine scheduler")
     t0 = time.time()
     tokens, ids, cert = pipe.generate(qs, np.ones((args.requests, 2),
                                                   np.int32),
@@ -125,6 +152,15 @@ def main():
                       f"p99={t['p99_latency'] * 1e3:.1f}ms")
             print(f"  tenant_fairness={stats['tenant_fairness']:.3f} "
                   f"calibration_error={stats['cost_calibration_error']:.3f}")
+        if args.cache_size:
+            cs = stats["cache"]
+            print(f"  cache[{args.cache_size}]: hits={stats['cache_hits']} "
+                  f"hit_rate={stats['cache_hit_rate']:.3f} "
+                  f"admitted={cs['admitted']} evicted={cs['evicted']} "
+                  f"revalidation_failures={cs['revalidation_failures']}")
+        if args.cost_model_path:
+            pipe.scheduler.cost_model.save(args.cost_model_path)
+            print(f"# cost model saved to {args.cost_model_path}")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,7 @@ depend on it, by the backends' lane-separability contracts).
 from __future__ import annotations
 
 import collections
+import json
 import math
 
 from repro.core.bucketing import next_pow2
@@ -105,6 +106,9 @@ class ExpansionCostModel:
         self.max_buckets = int(max_buckets)
         #: bucket -> [ewma_expansions_per_round, ewma_rounds, count]
         self._buckets: dict[tuple, list] = {}
+        #: bucket -> [ewma_hit_probability, count] — learned from the
+        #: semantic result cache's probe outcomes (observe_cache)
+        self._hit: dict[tuple, list] = {}
         self._sec_per_exp = 0.0
         self._sec_obs = 0
         self._calib_err = 0.0
@@ -147,14 +151,34 @@ class ExpansionCostModel:
                               self.prior_round_cost)[1]
 
     def predict_expansions(self, k: int, eps: float, method: str,
-                           compressed: bool = False) -> float:
-        """Predicted total expansions for one request of this shape."""
+                           compressed: bool = False, *,
+                           offered: bool = False) -> float:
+        """Predicted total expansions for one request of this shape.
+
+        ``offered=True`` prices an *offered* request rather than an
+        admitted one: the prediction is discounted by the bucket's learned
+        cache-hit probability (a hit costs the system no expansions), so a
+        tenant whose traffic the semantic cache absorbs is billed only for
+        the work its stream actually induces. With no cache observations
+        the hit rate is 0.0 and both modes agree exactly.
+        """
         cell = self._buckets.get(self.bucket(k, eps, method, compressed))
         if cell is not None:
-            return max(cell[0] * cell[1], 1.0)
-        epr, rounds = theorem1_prior(int(k), self.K0, self.prior_degree,
-                                     self.prior_round_cost)
-        return max(epr * rounds, 1.0)
+            exp = max(cell[0] * cell[1], 1.0)
+        else:
+            epr, rounds = theorem1_prior(int(k), self.K0, self.prior_degree,
+                                         self.prior_round_cost)
+            exp = max(epr * rounds, 1.0)
+        if offered:
+            exp *= 1.0 - self.predict_hit_rate(k, eps, method, compressed)
+        return exp
+
+    def predict_hit_rate(self, k: int, eps: float, method: str,
+                         compressed: bool = False) -> float:
+        """Learned semantic-cache hit probability for this bucket (EWMA of
+        probe outcomes; 0.0 until the first ``observe_cache``)."""
+        cell = self._hit.get(self.bucket(k, eps, method, compressed))
+        return cell[0] if cell is not None else 0.0
 
     @property
     def sec_per_expansion(self) -> float:
@@ -162,9 +186,13 @@ class ExpansionCostModel:
         return self._sec_per_exp
 
     def predict_service(self, k: int, eps: float, method: str,
-                        compressed: bool = False) -> float:
-        """Predicted service seconds; 0.0 until a timed request was seen."""
-        return (self.predict_expansions(k, eps, method, compressed)
+                        compressed: bool = False, *,
+                        offered: bool = False) -> float:
+        """Predicted service seconds; 0.0 until a timed request was seen.
+        ``offered=True`` applies the cache-hit discount (see
+        ``predict_expansions``)."""
+        return (self.predict_expansions(k, eps, method, compressed,
+                                        offered=offered)
                 * self._sec_per_exp)
 
     # -- updates -------------------------------------------------------------
@@ -210,10 +238,73 @@ class ExpansionCostModel:
             a = self.alpha if self._sec_obs > 1 else 1.0
             self._sec_per_exp += a * (service / actual - self._sec_per_exp)
 
+    def observe_cache(self, k: int, eps: float, method: str, *,
+                      hit: bool, compressed: bool = False) -> None:
+        """Fold one semantic-cache probe outcome into the bucket's hit
+        probability EWMA (the scheduler calls this on every probed submit,
+        hit or miss). No-op when frozen."""
+        if self.frozen:
+            return
+        key = self.bucket(k, eps, method, compressed)
+        cell = self._hit.get(key)
+        x = 1.0 if hit else 0.0
+        if cell is None:
+            if (len(self._buckets) + len(self._hit)) < 2 * self.max_buckets:
+                self._hit[key] = [x, 1]
+        else:
+            cell[0] += self.alpha * (x - cell[0])
+            cell[1] += 1
+
     def freeze(self) -> "ExpansionCostModel":
         """Stop updating (predictions keep working); returns self."""
         self.frozen = True
         return self
+
+    # -- persistence ---------------------------------------------------------
+    _STATE_VERSION = 1
+
+    def save(self, path) -> None:
+        """Write the model's full state as JSON — config, every bucket EWMA
+        (cost and cache-hit), the time-rate and calibration EWMAs, and the
+        frozen flag — so a restarted server resumes with a warm model
+        (``load`` round-trips it exactly; bucket keys serialize as
+        ``[k_pow2, eps_band, method, compressed]`` lists)."""
+        doc = dict(
+            version=self._STATE_VERSION,
+            K0=self.K0, prior_degree=self.prior_degree,
+            prior_round_cost=self.prior_round_cost, alpha=self.alpha,
+            eps_bands=list(self.eps_bands), max_buckets=self.max_buckets,
+            buckets=[[list(k), list(v)] for k, v in self._buckets.items()],
+            hit_buckets=[[list(k), list(v)] for k, v in self._hit.items()],
+            sec_per_exp=self._sec_per_exp, sec_obs=self._sec_obs,
+            calib_err=self._calib_err, calib_obs=self._calib_obs,
+            frozen=self.frozen,
+        )
+        with open(path, "w") as f:
+            json.dump(doc, f)
+
+    @classmethod
+    def load(cls, path) -> "ExpansionCostModel":
+        """Reconstruct a model from ``save`` output, bit-exactly (floats
+        round-trip through JSON's shortest-repr encoding)."""
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("version") != cls._STATE_VERSION:
+            raise ValueError(
+                f"cost-model state version {doc.get('version')!r} != "
+                f"{cls._STATE_VERSION} (refusing a half-compatible load)")
+        m = cls(K0=doc["K0"], prior_degree=doc["prior_degree"],
+                prior_round_cost=doc["prior_round_cost"],
+                alpha=doc["alpha"], eps_bands=tuple(doc["eps_bands"]),
+                max_buckets=doc["max_buckets"])
+        m._buckets = {tuple(k): list(v) for k, v in doc["buckets"]}
+        m._hit = {tuple(k): list(v) for k, v in doc["hit_buckets"]}
+        m._sec_per_exp = doc["sec_per_exp"]
+        m._sec_obs = doc["sec_obs"]
+        m._calib_err = doc["calib_err"]
+        m._calib_obs = doc["calib_obs"]
+        m.frozen = doc["frozen"]
+        return m
 
     # -- reporting -----------------------------------------------------------
     def calibration_error(self) -> float:
@@ -227,6 +318,8 @@ class ExpansionCostModel:
         return dict(
             buckets=len(self._buckets),
             observations=sum(c[2] for c in self._buckets.values()),
+            hit_buckets=len(self._hit),
+            cache_observations=sum(c[1] for c in self._hit.values()),
             calibration_error=self.calibration_error(),
             sec_per_expansion=self._sec_per_exp,
             frozen=self.frozen,
@@ -320,21 +413,42 @@ class DrrPolicy(AdmissionPolicy):
 
     ``quantum`` trades fairness granularity against scheduling overhead
     (any positive value is work-conserving; smaller values interleave
-    tenants at finer expansion granularity).
+    tenants at finer expansion granularity). ``quanta`` overrides the
+    quantum per tenant — classic weighted DRR: a tenant with twice the
+    quantum earns deficit twice as fast and receives twice the share of
+    served search work under contention (tenants not listed keep the
+    uniform default).
+
+    Head costs are priced at the *offered* rate
+    (``predict_expansions(..., offered=True)``): once the semantic result
+    cache has absorbed part of a tenant's stream, that tenant's remaining
+    misses are billed net of the hit probability, so its fair share is of
+    offered traffic, not of cache-miss traffic — the cache's savings are
+    not charged to the tenant that earned them. With no cache (or no
+    observations yet) the discount is exactly zero and the pre-cache
+    admission order is reproduced bit-for-bit.
     """
 
     name = "drr"
 
-    def __init__(self, quantum: float = 256.0):
+    def __init__(self, quantum: float = 256.0,
+                 quanta: dict | None = None):
         super().__init__()
         if quantum <= 0:
             raise ValueError(f"quantum={quantum} must be positive")
         self.quantum = float(quantum)
+        self.quanta = {str(t): float(q) for t, q in (quanta or {}).items()}
+        for t, q in self.quanta.items():
+            if q <= 0:
+                raise ValueError(f"quanta[{t!r}]={q} must be positive")
         self._queues: dict[str, collections.deque] = {}
         self._active: list[str] = []
         self._deficit: dict[str, float] = {}
         self._ptr = 0
         self._fresh_visit = True
+
+    def quantum_for(self, tenant: str) -> float:
+        return self.quanta.get(tenant, self.quantum)
 
     def note_enqueued(self, req) -> None:
         q = self._queues.setdefault(req.tenant, collections.deque())
@@ -379,12 +493,13 @@ class DrrPolicy(AdmissionPolicy):
                 self._deactivate(tenant)
                 continue
             if self._fresh_visit:
-                self._deficit[tenant] += self.quantum
+                self._deficit[tenant] += self.quantum_for(tenant)
                 self._fresh_visit = False
             head = queue[0]
             cost = self.model.predict_expansions(head.k, head.eps,
                                                  head.method,
-                                                 self.compressed)
+                                                 self.compressed,
+                                                 offered=True)
             if cost <= self._deficit[tenant]:
                 queue.popleft()
                 self._deficit[tenant] -= cost
@@ -421,6 +536,14 @@ class SloCostPolicy(AdmissionPolicy):
     and everything admits — cold-start admission errs open by design (the
     scheduler's prewarm/warmup traffic calibrates seconds-per-expansion
     before real load arrives).
+
+    Cache pricing note: unlike ``drr`` (which bills *offered* traffic and
+    so discounts by the learned cache-hit probability), this policy prices
+    at the admitted rate deliberately — a request consulted here has
+    *already missed* the semantic cache (the scheduler probes before the
+    policy), so its service cost is the full one, and every queued or
+    in-flight request in the backlog estimate is likewise a miss.
+    Discounting would admit requests that then blow their SLO.
     """
 
     name = "slo_cost"

@@ -25,7 +25,10 @@ policy (``"fifo"`` / ``"drr"`` / ``"slo_cost"`` or a configured
 ``serve.policies.AdmissionPolicy``) and ``retrieve(..., tenants=...)``
 labels each query's tenant, so one pipeline can serve several tenants'
 retrieval traffic under cost-fair scheduling (``launch/serve.py
---policy/--tenants``).
+--policy/--tenants``). ``cache_size=`` enables the semantic result cache
+(``serve.cache``): repeated or near-duplicate queries are answered from a
+certified cached result set after a fresh Theorem-2 recheck against the new
+query, without occupying a lane (``launch/serve.py --cache-size``).
 """
 from __future__ import annotations
 
@@ -58,6 +61,8 @@ class RagPipeline:
     prewarm: bool = False
     backend: object | None = None   # LaneBackend override (e.g. ShardedEngine)
     policy: object = "fifo"     # admission policy name or AdmissionPolicy
+    cache_size: int = 0         # semantic result cache capacity (0 = off)
+    cost_model: object | None = None   # warm ExpansionCostModel (else fresh)
     _scheduler: LaneScheduler | None = dataclasses.field(
         default=None, repr=False)
 
@@ -70,12 +75,15 @@ class RagPipeline:
             if self.backend is not None:
                 self._scheduler = LaneScheduler(
                     backend=self.backend, prewarm=self.prewarm,
-                    policy=self.policy)
+                    policy=self.policy, cache_size=self.cache_size,
+                    cost_model=self.cost_model)
             else:
                 self._scheduler = LaneScheduler(
                     self.graph, num_lanes=self.num_lanes,
                     max_k=max(self.k, 16), default_ef=self.ef,
-                    prewarm=self.prewarm, policy=self.policy)
+                    prewarm=self.prewarm, policy=self.policy,
+                    cache_size=self.cache_size,
+                    cost_model=self.cost_model)
         return self._scheduler
 
     def retrieve(self, query_embeds, ks=None, epss=None, tenants=None

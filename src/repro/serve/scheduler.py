@@ -64,6 +64,7 @@ from repro.core.batch_progressive import ProgressiveEngine
 from repro.core.graph import FlatGraph
 from repro.core.pgs import DiverseResult
 from repro.serve import policies as P
+from repro.serve.cache import CacheEntry, SemanticResultCache
 from repro.serve.policies import ExpansionCostModel, make_policy
 
 
@@ -116,8 +117,13 @@ class Request(LaneRequest):
       and deferred requests consume ids too, so traces stay unambiguous).
     * ``t_submit`` / ``t_admit`` / ``t_done`` — clock readings at submit,
       lane admission, and harvest (``None`` until reached).
-    * ``lane`` — the backend lane that served it (``None`` until admitted).
+    * ``lane`` — the backend lane that served it (``None`` until admitted;
+      stays ``None`` for a cache hit, which never occupies one).
     * ``result`` — the harvested ``DiverseResult`` (``None`` until done).
+    * ``cache_hit`` / ``cache_entry`` — set when the semantic result cache
+      served this request at submit: the entry whose frontier was
+      revalidated against this request's live query (kept so audits can
+      independently re-run ``theorem2_recheck`` on served hits).
     """
     tenant: str = "default"
     rid: int = -1
@@ -126,6 +132,8 @@ class Request(LaneRequest):
     t_done: float | None = None
     lane: int | None = None
     result: DiverseResult | None = None
+    cache_hit: bool = False
+    cache_entry: CacheEntry | None = None
 
     @property
     def wait(self) -> float:
@@ -186,6 +194,16 @@ class LaneScheduler:
     harvested result regardless of policy, so ``latency_stats()`` always
     reports calibration.
 
+    ``cache`` / ``cache_size`` enable the semantic result cache
+    (``serve.cache.SemanticResultCache``; ``cache_size=N`` builds one over
+    the backend's own corpus). ``submit`` probes it first: a near-hit whose
+    certificate revalidates against the live query completes immediately —
+    no lane, no queue slot — and every harvested certified result is
+    offered back for admission. Contract 14: a hit is served only after
+    its frontier was rescored against the live query and re-passed
+    ``theorem2_recheck``; with distinct queries the cache never hits and
+    the served results are bit-identical to an uncached scheduler.
+
     ``shed`` is an optional callback ``(request, scheduler) -> bool`` run at
     submit time; returning True drops the request (``RequestShed``). It
     predates the policy layer and stays supported — it runs *before* the
@@ -204,6 +222,8 @@ class LaneScheduler:
                  admission: str = "continuous",
                  policy: str | P.AdmissionPolicy = "fifo",
                  cost_model: ExpansionCostModel | None = None,
+                 cache: SemanticResultCache | None = None,
+                 cache_size: int = 0,
                  shed: Callable[[Request, "LaneScheduler"], bool] | None = None,
                  prewarm: bool = True,
                  prewarm_capacity: int | None = None,
@@ -249,6 +269,14 @@ class LaneScheduler:
         self.shed = shed
         self.cost_model = cost_model or ExpansionCostModel()
         self.policy = make_policy(policy).bind(self)
+        if cache is not None and cache_size:
+            raise ValueError("pass either cache= or cache_size=, not both")
+        if cache is None and cache_size:
+            cache = SemanticResultCache.for_backend(backend, cache_size)
+        self.cache = cache
+        if cache is not None and hasattr(backend, "record_candidates"):
+            # certificate frontiers must reach harvest for cache admission
+            backend.record_candidates = True
         self.max_pending = (max_pending if max_pending is not None
                             else 4 * self.num_lanes)
         self.clock = clock
@@ -270,6 +298,8 @@ class LaneScheduler:
         self.tenant_completed: collections.Counter = collections.Counter()
         self.tenant_shed: collections.Counter = collections.Counter()
         self.tenant_deferred: collections.Counter = collections.Counter()
+        self.total_cache_hits = 0
+        self.tenant_cache_hits: collections.Counter = collections.Counter()
         self._next_rid = 0
         self.steps = 0
         if prewarm:
@@ -306,15 +336,21 @@ class LaneScheduler:
         if not 1 <= k <= self.backend.max_k:
             raise ValueError(
                 f"k={k} outside [1, {self.backend.max_k}] (backend max_k)")
+        req = None
+        if self.cache is not None:
+            # probe before backpressure: a revalidated hit completes here —
+            # no lane, no queue slot — so even a saturated scheduler serves
+            # duplicated traffic (the whole point of the cache)
+            req = self._make_request(q, k, eps, ef, method, max_K, tenant)
+            served = self._cache_probe(req)
+            if served is not None:
+                return served
         if len(self.pending) >= self.max_pending:
             raise SchedulerSaturated(
                 f"{len(self.pending)} pending >= max_pending="
                 f"{self.max_pending}; pump() or shed load")
-        req = Request(rid=self._next_rid, q=np.asarray(q, np.float32),
-                      k=k, eps=eps, ef=int(ef or self.backend.default_ef),
-                      method=method, max_K=max_K, tenant=tenant,
-                      t_submit=self.clock())
-        self._next_rid += 1   # dropped requests keep their rid (unique traces)
+        if req is None:
+            req = self._make_request(q, k, eps, ef, method, max_K, tenant)
         if self.shed is not None and self.shed(req, self):
             self.total_shed += 1
             self.tenant_shed[tenant] += 1
@@ -333,6 +369,40 @@ class LaneScheduler:
                 "(retry once backlog drains)")
         self.pending.append(req)
         self.policy.note_enqueued(req)
+        return req
+
+    def _make_request(self, q, k, eps, ef, method, max_K,
+                      tenant) -> Request:
+        req = Request(rid=self._next_rid, q=np.asarray(q, np.float32),
+                      k=k, eps=eps, ef=int(ef or self.backend.default_ef),
+                      method=method, max_K=max_K, tenant=tenant,
+                      t_submit=self.clock())
+        self._next_rid += 1   # dropped requests keep their rid (unique traces)
+        return req
+
+    def _cache_probe(self, req: Request) -> Request | None:
+        """Serve ``req`` from the semantic result cache if a near-hit
+        revalidates against its live query; None falls through to the
+        normal admission path. Hit or miss is folded into the cost model's
+        per-bucket hit probability either way."""
+        hit = self.cache.lookup(req.q, req.k, req.eps, req.method)
+        self.cost_model.observe_cache(req.k, req.eps, req.method,
+                                      hit=hit is not None,
+                                      compressed=self.backend_compressed)
+        if hit is None:
+            return None
+        result, entry = hit
+        now = self.clock()
+        req.t_admit = now
+        req.t_done = now
+        req.result = result
+        req.cache_hit = True
+        req.cache_entry = entry
+        self.completed.append(req)
+        self.total_completed += 1
+        self.tenant_completed[req.tenant] += 1
+        self.total_cache_hits += 1
+        self.tenant_cache_hits[req.tenant] += 1
         return req
 
     def try_submit(self, q, k: int, eps: float, **kw) -> Request | None:
@@ -375,6 +445,15 @@ class LaneScheduler:
             req = self.inflight.pop(lane)
             req.result = result
             req.t_done = self.clock()
+            if self.cache is not None and result.stats.certified:
+                rec = getattr(self.backend, "last_candidates",
+                              [None] * self.num_lanes)[lane]
+                if rec is not None:
+                    cand_ids, cand_scores, *rest = rec
+                    self.cache.admit_request(
+                        req.q, req.k, req.eps, req.method, result,
+                        cand_ids, cand_scores,
+                        slack=rest[0] if rest else None)
             self.backend.recycle(lane)
             self.completed.append(req)
             self.total_completed += 1
@@ -466,6 +545,14 @@ class LaneScheduler:
           ``cost_calibration_error`` — the cost model's EWMA relative
           expansion-prediction error (see
           ``ExpansionCostModel.calibration_error``).
+        * ``cache_hits`` — lifetime requests served by the semantic result
+          cache (a subset of ``completed``; hits are real completions and
+          their — tiny — latencies are in the pooled percentiles);
+          ``cache_hit_rate`` — lifetime hits / cache probes;
+          ``hit_p50_latency`` / ``hit_p99_latency`` — percentiles over the
+          window's *hit* latencies only (probe + revalidation time);
+          ``cache`` — the cache's own counters (``SemanticResultCache
+          .stats()``), or None when serving uncached.
         * ``signatures`` / ``unplanned_signatures`` — backend compile
           signatures seen / seen after a freeze (recompile audit).
         * ``compressed`` / ``bytes_per_vector`` — the backend's corpus
@@ -474,6 +561,7 @@ class LaneScheduler:
         """
         reqs = list(self.completed)
         lats = [r.latency for r in reqs]
+        hit_lats = [r.latency for r in reqs if r.cache_hit]
         waits = [r.wait for r in reqs]
         svcs = [r.service for r in reqs]
         span = (max(r.t_done for r in reqs) - min(r.t_submit for r in reqs)
@@ -491,6 +579,7 @@ class LaneScheduler:
                 completed=self.tenant_completed.get(name, 0),
                 shed=self.tenant_shed.get(name, 0),
                 deferred=self.tenant_deferred.get(name, 0),
+                cache_hits=self.tenant_cache_hits.get(name, 0),
                 p50_latency=_pctl(tl, 50), p99_latency=_pctl(tl, 99),
                 p99_wait=_pctl([r.wait for r in trs], 99),
                 mean_latency=float(np.mean(tl)) if tl else 0.0,
@@ -519,6 +608,13 @@ class LaneScheduler:
                                            for r in reqs])) if reqs else 0.0),
             policy=self.policy.name,
             cost_calibration_error=self.cost_model.calibration_error(),
+            cache_hits=self.total_cache_hits,
+            cache_hit_rate=(self.total_cache_hits / self.cache.probes
+                            if self.cache is not None and self.cache.probes
+                            else 0.0),
+            hit_p50_latency=_pctl(hit_lats, 50),
+            hit_p99_latency=_pctl(hit_lats, 99),
+            cache=self.cache.stats() if self.cache is not None else None,
             compressed=self.backend_compressed,
             bytes_per_vector=float(
                 getattr(self.backend, "bytes_per_vector", 0.0)),

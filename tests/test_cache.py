@@ -1,0 +1,252 @@
+"""Semantic result cache (serve/cache.py + the scheduler's probe-on-submit
+path): exact-duplicate hits bit-equal to fresh searches, zero-duplicate
+parity with the cache off, per-hit independent Theorem-2 soundness,
+slack-derived probe thresholds, slack-aware LRU eviction, and the cost
+model's hit-rate learning — contract 14 in docs/ARCHITECTURE.md: the
+cache is a latency knob, never a results-soundness knob."""
+import numpy as np
+import pytest
+
+from repro.core import theorems
+from repro.core.pgs import DiverseResult
+from repro.core.progressive import SearchStats
+from repro.core.similarity import query_sim
+from repro.index.flat import build_knn_graph
+from repro.serve.cache import SemanticResultCache
+from repro.serve.scheduler import LaneScheduler
+
+
+@pytest.fixture(scope="module")
+def graph_and_queries():
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(12, 24)) * 2.0
+    x = (centers[rng.integers(0, 12, 600)]
+         + rng.normal(size=(600, 24)) * 0.3).astype(np.float32)
+    graph = build_knn_graph(x, metric="l2", M=8)
+    qs = (x[rng.integers(0, 600, 10)]
+          + rng.normal(size=(10, 24)).astype(np.float32) * 0.05)
+    return graph, qs.astype(np.float32)
+
+
+MIX_KS = [5, 3, 5, 3, 5, 3, 5, 3, 5, 3]
+MIX_EPS = [0.0, -0.5, 0.0, -0.5, 0.0, -0.5, 0.0, -0.5, 0.0, -0.5]
+
+
+def _certified_result(k: int = 3) -> DiverseResult:
+    stats = SearchStats(expansions=10, growths=0, search_calls=1,
+                        div_calls=1, certified=True, exhausted=False,
+                        K_final=k)
+    ids = np.arange(k, dtype=np.int32)
+    sc = np.linspace(1.0, 0.5, k).astype(np.float32)
+    return DiverseResult(ids, sc, float(sc.sum()), stats)
+
+
+def _oracle_recheck(graph, entry, q):
+    """Independent per-query recheck of a cached entry's frontier: oracle
+    scoring (core.similarity, not the cache's kernel path) + theorems."""
+    valid = entry.cand_ids >= 0
+    vecs = np.asarray(graph.vectors)[np.maximum(entry.cand_ids, 0)]
+    sc = np.asarray(query_sim(q, vecs, graph.metric), np.float32)
+    sc = np.where(valid, sc, -np.inf).astype(np.float32)
+    order = np.argsort(-sc, kind="stable")
+    return theorems.theorem2_recheck(
+        np.asarray(graph.vectors), graph.metric, entry.cand_ids[order],
+        sc[order], entry.eps, entry.k)
+
+
+# ------------------------------------------------- scheduler integration ----
+
+def test_exact_duplicate_hits_bit_equal(graph_and_queries):
+    """A repeated trace is served from cache (no lane) with results
+    bit-identical to the cold pass."""
+    graph, qs = graph_and_queries
+    sched = LaneScheduler(graph, num_lanes=4, max_k=16, cache_size=32)
+    cold = sched.run(qs, MIX_KS, MIX_EPS)
+    admitted = sched.cache.admitted
+    assert admitted > 0 and sched.total_cache_hits == 0
+    warm = sched.run(qs, MIX_KS, MIX_EPS)
+    assert sched.total_cache_hits == admitted     # every cached query hits
+    hits = [r for r in sched.completed if r.cache_hit]
+    assert len(hits) == admitted
+    for r in hits:
+        assert r.t_admit == r.t_done              # completed at submit
+        assert r.result.stats.certified           # re-proved, never inherited
+    for a, b in zip(cold, warm):
+        assert np.array_equal(a.ids, b.ids)
+    st = sched.latency_stats()
+    assert st["cache_hits"] == admitted
+    assert st["cache_hit_rate"] == pytest.approx(admitted / 20)
+    assert st["hit_p50_latency"] >= 0.0 and st["hit_p99_latency"] >= 0.0
+    assert st["cache"]["revalidation_failures"] == 0
+    assert st["cache"]["size"] == admitted
+
+
+def test_zero_duplicate_parity_cache_invisible(graph_and_queries):
+    """On a trace with no duplicates the cache must be bit-invisible:
+    zero hits and identical results vs a cache-off scheduler."""
+    graph, qs = graph_and_queries
+    plain = LaneScheduler(graph, num_lanes=4, max_k=16)
+    cached = LaneScheduler(graph, num_lanes=4, max_k=16, cache_size=32)
+    ra = plain.run(qs, MIX_KS, MIX_EPS)
+    rb = cached.run(qs, MIX_KS, MIX_EPS)
+    assert cached.total_cache_hits == 0
+    for a, b in zip(ra, rb):
+        assert np.array_equal(a.ids, b.ids)
+        assert np.array_equal(a.scores, b.scores)
+        assert a.stats.certified == b.stats.certified
+
+
+def test_every_hit_survives_independent_recheck(graph_and_queries):
+    """Soundness: each served hit's set must re-certify under an
+    *independent* per-query oracle recheck against the hit's own query."""
+    graph, qs = graph_and_queries
+    rng = np.random.default_rng(5)
+    sched = LaneScheduler(graph, num_lanes=4, max_k=16, cache_size=32)
+    sched.run(qs, MIX_KS, MIX_EPS)
+    # replay with tiny perturbations: near-hits, not just exact duplicates
+    jitter = rng.normal(size=qs.shape).astype(np.float32) * 1e-3
+    sched.run(qs + jitter, MIX_KS, MIX_EPS)
+    hits = [r for r in sched.completed if r.cache_hit]
+    assert hits, "fixture must produce at least one near-hit"
+    for r in hits:
+        cert, sel = _oracle_recheck(graph, r.cache_entry, r.q)
+        assert cert, "served hit failed its independent recheck"
+        assert set(map(int, sel[sel >= 0])) \
+            == set(map(int, r.result.ids[r.result.ids >= 0]))
+
+
+def test_near_hit_threshold_boundary(graph_and_queries):
+    """A probe within the slack-derived drift threshold hits (and still
+    revalidates); one beyond it misses without attempting revalidation."""
+    graph, qs = graph_and_queries
+    rng = np.random.default_rng(11)
+    sched = LaneScheduler(graph, num_lanes=2, max_k=16, cache_size=8)
+    sched.run(qs[:1], 5, 0.0)
+    cache = sched.cache
+    assert len(cache) == 1
+    entry = next(iter(cache._entries.values()))
+    assert 0.0 < entry.threshold < np.inf
+
+    def probe_at(dist):
+        delta = rng.normal(size=qs.shape[1])
+        delta = (delta / np.linalg.norm(delta) * dist).astype(np.float32)
+        return cache.lookup(entry.q + delta, entry.k, entry.eps,
+                            entry.method)
+
+    inside = probe_at(entry.threshold * 0.5)
+    assert inside is not None
+    result, hit_entry = inside
+    assert hit_entry is entry and result.stats.certified
+    fails_before = cache.revalidation_failures
+    assert probe_at(entry.threshold * 1.5) is None
+    assert cache.revalidation_failures == fails_before  # filtered at probe
+
+
+# ------------------------------------------------------ cache unit tests ----
+
+def _tiny_cache(capacity=2, **kw):
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(16, 4)).astype(np.float32)
+    return SemanticResultCache(X, "l2", capacity, **kw), rng
+
+
+def test_uncertified_or_frontierless_results_rejected():
+    cache, rng = _tiny_cache()
+    q = rng.normal(size=4).astype(np.float32)
+    cand = np.array([0, 1, 2, 3], np.int32)
+    sc = np.array([1.0, 0.9, 0.8, 0.7], np.float32)
+    res = _certified_result()
+    res.stats.certified = False
+    assert not cache.admit_request(q, 3, 0.0, "pss", res, cand, sc,
+                                   slack=1.0)
+    good = _certified_result()
+    assert not cache.admit_request(q, 3, 0.0, "pss", good, None, None,
+                                   slack=1.0)
+    assert not cache.admit_request(      # all-padding frontier
+        q, 3, 0.0, "pss", good, np.full(4, -1, np.int32), sc, slack=1.0)
+    assert not cache.admit_request(q, 3, 0.0, "pss", good, cand, sc,
+                                   slack=0.0)   # non-positive slack
+    assert len(cache) == 0 and cache.rejected == 4 and cache.admitted == 0
+
+
+def test_slack_aware_lru_eviction():
+    """LRU restricted to residents no more reusable than the newcomer: a
+    narrow-slack newcomer never displaces wide-slack residents."""
+    cache, rng = _tiny_cache(capacity=2)
+    cand = np.array([0, 1, 2, 3], np.int32)
+    sc = np.array([1.0, 0.9, 0.8, 0.7], np.float32)
+
+    def admit(slack):
+        q = rng.normal(size=4).astype(np.float32)
+        return cache.admit_request(q, 3, 0.0, "pss", _certified_result(),
+                                   cand, sc, slack=slack)
+
+    assert admit(2.0)                       # A: threshold 2/(2*3) = 1/3
+    assert admit(4.0)                       # B: threshold 2/3
+    assert len(cache) == 2
+    # C is strictly less reusable than both residents: declined, no churn
+    assert not admit(0.4)
+    assert len(cache) == 2 and cache.evicted == 0 and cache.rejected == 1
+    assert sorted(e.slack for e in cache._entries.values()) == [2.0, 4.0]
+    # D's threshold covers A's: the LRU eligible resident (A) is evicted
+    assert admit(3.0)
+    assert cache.evicted == 1
+    assert sorted(e.slack for e in cache._entries.values()) == [3.0, 4.0]
+
+
+def test_k1_infinite_slack_capped_by_max_drift():
+    """k=1 certificates have infinite slack; max_drift bounds the probe."""
+    cache, rng = _tiny_cache(capacity=4, max_drift=0.05)
+    q = rng.normal(size=4).astype(np.float32)
+    sc = np.asarray(query_sim(q, cache.vectors, "l2"), np.float32)
+    order = np.argsort(-sc, kind="stable")[:6].astype(np.int32)
+    stats = SearchStats(expansions=1, growths=0, search_calls=1, div_calls=1,
+                        certified=True, exhausted=False, K_final=6)
+    res = DiverseResult(order[:1], sc[order[:1]], float(sc[order[0]]), stats)
+    assert cache.admit_request(q, 1, 0.0, "pss", res, order, sc[order])
+    entry = next(iter(cache._entries.values()))
+    assert entry.threshold == np.inf        # the stored proven bound
+    hit = cache.lookup(q, 1, 0.0, "pss")
+    assert hit is not None and int(hit[0].ids[0]) == int(order[0])
+    delta = rng.normal(size=4)
+    delta = (delta / np.linalg.norm(delta) * 0.2).astype(np.float32)
+    assert cache.lookup(q + delta, 1, 0.0, "pss") is None   # beyond cap
+
+
+def test_key_mismatch_never_hits():
+    """A hit must share (k, eps, method) exactly — Definition 1's
+    query-owned parameters are part of the identity of a result."""
+    cache, rng = _tiny_cache(capacity=4)
+    q = rng.normal(size=4).astype(np.float32)
+    cand = np.array([0, 1, 2, 3], np.int32)
+    sc = np.array([1.0, 0.9, 0.8, 0.7], np.float32)
+    assert cache.admit_request(q, 3, 0.5, "pss", _certified_result(),
+                               cand, sc, slack=10.0)
+    assert cache.lookup(q, 2, 0.5, "pss") is None
+    assert cache.lookup(q, 3, 0.6, "pss") is None
+    assert cache.lookup(q, 3, 0.5, "pds") is None
+    assert cache.lookup(q, 3, 0.5, "pss") is not None
+
+
+def test_for_backend_refuses_missing_corpus():
+    class Bare:
+        pass
+    with pytest.raises(ValueError, match="float corpus"):
+        SemanticResultCache.for_backend(Bare())
+
+
+def test_cost_model_learns_hit_rate(graph_and_queries):
+    """The scheduler feeds every probe outcome to the cost model; warm
+    traffic raises the learned hit probability and discounts *offered*
+    (pre-admission) pricing, never admitted pricing."""
+    graph, qs = graph_and_queries
+    sched = LaneScheduler(graph, num_lanes=4, max_k=16, cache_size=32)
+    sched.run(qs, 5, 0.0)
+    cm = sched.cost_model
+    assert cm.predict_hit_rate(5, 0.0, "pss") == 0.0
+    sched.run(qs, 5, 0.0)
+    rate = cm.predict_hit_rate(5, 0.0, "pss")
+    assert rate > 0.0
+    full = cm.predict_expansions(5, 0.0, "pss")
+    disc = cm.predict_expansions(5, 0.0, "pss", offered=True)
+    assert disc == pytest.approx(full * (1.0 - rate))

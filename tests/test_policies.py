@@ -391,3 +391,111 @@ def test_cost_model_calibration_converges_10k():
     assert err < CALIBRATION_TOL, (
         f"calibration error {err:.3f} >= {CALIBRATION_TOL} "
         f"(model stats: {stats})")
+
+
+# ------------------------------------------------- weighted DRR (quanta) ----
+
+def test_drr_quanta_validation():
+    with pytest.raises(ValueError, match="positive"):
+        DrrPolicy(quanta={"gold": 0.0})
+    with pytest.raises(ValueError, match="positive"):
+        DrrPolicy(quanta={"gold": -5.0})
+
+
+def test_drr_weighted_quanta_2to1_shares(graph_and_queries):
+    """quanta={tenant: q} buys weighted shares: a tenant with twice the
+    quantum is admitted 2:1 against an equal-cost competitor while both
+    have backlog (and the tail drains the rest — conservation holds)."""
+    graph, qs = graph_and_queries
+    n_each = 12
+    queries = np.repeat(qs, 2, axis=0)[: 2 * n_each]
+    m = ExpansionCostModel()
+    m.observe(4, 0.0, "pss", expansions=100, rounds=1, service=0.1)
+    pol = DrrPolicy(quantum=100.0, quanta={"gold": 200.0})
+    sched = LaneScheduler(graph, num_lanes=1, default_ef=10, prewarm=False,
+                          policy=pol, cost_model=m.freeze(),
+                          max_pending=2 * n_each, clock=FakeClock())
+    tenants = ["gold", "bronze"] * n_each
+    order = _run_trace(sched, queries, [4] * 2 * n_each,
+                       [0.0] * 2 * n_each, tenants)
+    by_tenant = [tenants[i] for i in order]
+    # while both tenants have backlog, every DRR cycle admits 2 gold + 1
+    # bronze (equal per-request cost, 2:1 quanta)
+    for n in (3, 6, 9, 12):
+        assert by_tenant[:n].count("gold") == 2 * n // 3, by_tenant
+    st = sched.latency_stats()
+    assert st["tenants"]["gold"]["completed"] == n_each
+    assert st["tenants"]["bronze"]["completed"] == n_each
+
+
+# ------------------------------------------- cost-model JSON persistence ----
+
+def test_cost_model_save_load_round_trip(tmp_path):
+    """save() -> load() reconstructs the model bit-exactly: identical
+    predictions (admitted and offered), calibration, and stats — the
+    launch/serve.py --cost-model-path warm-start contract."""
+    m = ExpansionCostModel(K0=16, alpha=0.5, eps_bands=(0.25, 0.75))
+    rng = np.random.default_rng(4)
+    for i in range(20):
+        k = int(rng.integers(2, 12))
+        eps = float(rng.uniform(0.0, 1.0))
+        m.observe(k, eps, "pss", expansions=float(rng.integers(50, 500)),
+                  rounds=int(rng.integers(1, 5)),
+                  service=float(rng.uniform(0.01, 0.2)))
+        m.observe_cache(k, eps, "pss", hit=bool(rng.random() < 0.5))
+    path = tmp_path / "model.json"
+    m.save(path)
+    m2 = ExpansionCostModel.load(path)
+    assert m2.stats() == m.stats()
+    for k in (2, 5, 11):
+        for eps in (0.1, 0.5, 0.9):
+            assert m2.predict_expansions(k, eps, "pss") \
+                == m.predict_expansions(k, eps, "pss")
+            assert m2.predict_expansions(k, eps, "pss", offered=True) \
+                == m.predict_expansions(k, eps, "pss", offered=True)
+            assert m2.predict_service(k, eps, "pss") \
+                == m.predict_service(k, eps, "pss")
+            assert m2.predict_hit_rate(k, eps, "pss") \
+                == m.predict_hit_rate(k, eps, "pss")
+    # the loaded model keeps learning from where the original stopped
+    m.observe(3, 0.5, "pss", expansions=77.0, rounds=2, service=0.05)
+    m2.observe(3, 0.5, "pss", expansions=77.0, rounds=2, service=0.05)
+    assert m2.predict_expansions(3, 0.5, "pss") \
+        == m.predict_expansions(3, 0.5, "pss")
+
+
+def test_cost_model_load_rejects_unknown_version(tmp_path):
+    m = ExpansionCostModel()
+    path = tmp_path / "model.json"
+    m.save(path)
+    import json
+    doc = json.loads(path.read_text())
+    doc["version"] = 99
+    path.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="version"):
+        ExpansionCostModel.load(path)
+
+
+# ----------------------------------------------- offered-vs-admitted price ----
+
+def test_offered_price_discounts_by_hit_rate():
+    """With no cache observations the offered and admitted prices agree
+    exactly (pre-cache pricing is reproduced bit-for-bit); once hits are
+    observed, only the *offered* price is discounted — an in-hand admitted
+    request already missed the cache and pays full freight."""
+    m = ExpansionCostModel()
+    m.observe(5, 0.0, "pss", expansions=200.0, rounds=2, service=0.1)
+    full = m.predict_expansions(5, 0.0, "pss")
+    assert m.predict_expansions(5, 0.0, "pss", offered=True) == full
+    for _ in range(8):
+        m.observe_cache(5, 0.0, "pss", hit=True)
+    rate = m.predict_hit_rate(5, 0.0, "pss")
+    assert 0.0 < rate <= 1.0
+    assert m.predict_expansions(5, 0.0, "pss") == full      # unchanged
+    assert m.predict_expansions(5, 0.0, "pss", offered=True) \
+        == pytest.approx(full * (1.0 - rate))
+    # frozen models ignore further cache observations too
+    m.freeze()
+    before = m.predict_hit_rate(5, 0.0, "pss")
+    m.observe_cache(5, 0.0, "pss", hit=False)
+    assert m.predict_hit_rate(5, 0.0, "pss") == before

@@ -1,0 +1,161 @@
+"""Theorem-2 audit/recheck edge cases (core/theorems.py) against a
+brute-force per-query oracle: empty frontiers, k=1 (infinite slack),
+exact-tie similarities at eps (strict adjacency), and rechecking a
+frontier under a *different* query than the one that built it — the
+semantic result cache's revalidation primitive (contract 14)."""
+import itertools
+import math
+
+import numpy as np
+
+from repro.core import theorems
+
+
+def _adj(vecs: np.ndarray, eps: float) -> np.ndarray:
+    """Oracle G^eps adjacency for metric 'ip': strictly > eps, no diag."""
+    sims = vecs @ vecs.T
+    adj = sims > eps
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def _brute_best(scores: np.ndarray, adj: np.ndarray, k: int):
+    """Exhaustive optimal independent sets of sizes 1..k: (totals, sets)."""
+    K = len(scores)
+    totals = [-np.inf] * k
+    sets: list = [None] * k
+    for size in range(1, k + 1):
+        for comb in itertools.combinations(range(K), size):
+            if any(not np.isfinite(scores[c]) for c in comb):
+                continue
+            if any(adj[a, b] for a, b in itertools.combinations(comb, 2)):
+                continue
+            tot = float(sum(scores[c] for c in comb))
+            if tot > totals[size - 1]:
+                totals[size - 1], sets[size - 1] = tot, comb
+    return totals, sets
+
+
+def _brute_certified(scores: np.ndarray, adj: np.ndarray, k: int) -> bool:
+    """Theorem 2 by hand: min_{0<i<k} (S_k - S_i)/(k-i) > s_K."""
+    totals, _ = _brute_best(scores, adj, k)
+    if not np.isfinite(totals[k - 1]):
+        return False
+    s_K = float(scores[-1])
+    if k == 1:
+        return True                     # minValue is +inf
+    gaps = [(totals[k - 1] - totals[i - 1]) / (k - i)
+            for i in range(1, k) if np.isfinite(totals[i - 1])]
+    return min(gaps, default=math.inf) > s_K
+
+
+def test_recheck_empty_frontier_never_certifies():
+    X = np.eye(4, dtype=np.float32)
+    cert, sel = theorems.theorem2_recheck(
+        X, "ip", np.array([], np.int32), np.array([], np.float32), 0.5, 3)
+    assert not cert and sel.shape == (3,) and (sel == -1).all()
+    # all-padding is the same case: there is no s_K to bound
+    cert, sel = theorems.theorem2_recheck(
+        X, "ip", np.full(5, -1, np.int32), np.zeros(5, np.float32), 0.5, 3)
+    assert not cert and (sel == -1).all()
+
+
+def test_audit_k1_infinite_slack():
+    """k=1 has no gap terms: minValue is +inf, the certificate always holds
+    over a nonempty frontier, and the slack-derived threshold is infinite
+    (the cache caps it with max_drift)."""
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(8, 4)).astype(np.float32)
+    q = rng.normal(size=4).astype(np.float32)
+    sc = (X @ q).astype(np.float32)
+    order = np.argsort(-sc, kind="stable")[:5]
+    cert, sel, min_value, s_K = theorems.theorem2_audit(
+        X, "ip", order.astype(np.int32), sc[order], 0.0, 1)
+    assert cert and math.isinf(min_value)
+    assert sel[0] == order[0]           # the global argmax
+    assert theorems.theorem2_slack_threshold(min_value - s_K, 1) == math.inf
+
+
+def test_exact_tie_at_eps_is_not_an_edge():
+    """Definition 2 is strict: sim(u, v) == eps leaves u-v *absent* from
+    G^eps, so an exact-tie pair is a feasible diverse set."""
+    eps = 0.5
+    u = np.array([1.0, 0.0], np.float32)
+    v = np.array([eps, math.sqrt(1 - eps * eps)], np.float32)
+    w = np.array([0.99, 0.14106912], np.float32)     # <u,w> > eps: an edge
+    X = np.stack([u, v, w])
+    assert abs(float(u @ v) - eps) < 1e-7
+    # frontier sorted by score for the query u: u, w, v
+    q = u
+    sc = (X @ q).astype(np.float32)
+    order = np.argsort(-sc, kind="stable").astype(np.int32)
+    cert, sel, min_value, s_K = theorems.theorem2_audit(
+        X, "ip", order, sc[order], eps, 2)
+    # {u, v} is independent (tie is NOT an edge) and outscores any set
+    # containing w's neighbors-constrained alternatives
+    assert set(map(int, sel)) == {0, 1}
+    totals, sets = _brute_best(sc[order].astype(np.float64),
+                               _adj(X, eps)[order][:, order], 2)
+    assert set(order[list(sets[1])]) == {0, 1}
+    assert cert == _brute_certified(sc[order], _adj(X, eps)[order][:, order],
+                                    2)
+
+
+def test_recheck_matches_brute_oracle_random():
+    """Random small frontiers: audit's certificate flag and selection must
+    match the exhaustive oracle evaluated per query."""
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        K, k = int(rng.integers(3, 8)), int(rng.integers(2, 4))
+        X = rng.normal(size=(K + 4, 3)).astype(np.float32)
+        q = rng.normal(size=3).astype(np.float32)
+        eps = float(rng.uniform(-0.5, 1.5))
+        sc = (X @ q).astype(np.float32)
+        order = np.argsort(-sc, kind="stable")[:K].astype(np.int32)
+        cert, sel, min_value, s_K = theorems.theorem2_audit(
+            X, "ip", order, sc[order], eps, k)
+        adj = _adj(X, eps)[order][:, order]
+        assert cert == _brute_certified(sc[order], adj, k), (trial, eps)
+        totals, sets = _brute_best(sc[order].astype(np.float64), adj, k)
+        if sets[k - 1] is not None:
+            assert math.isclose(
+                float(sc[sel[sel >= 0]].sum()), totals[k - 1],
+                rel_tol=1e-5), trial
+
+
+def test_recheck_under_different_query():
+    """The cache's revalidation shape: a frontier recorded under query qa,
+    rescored and rechecked under qb — the recheck must behave exactly like
+    a per-query oracle on (frontier, qb scores), for drifts inside AND
+    outside the slack threshold."""
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(32, 6)).astype(np.float32)
+    X /= np.linalg.norm(X, axis=1, keepdims=True)
+    qa = X[0] + rng.normal(size=6).astype(np.float32) * 0.05
+    eps, k, K = 0.9, 3, 12
+    sca = (X @ qa).astype(np.float32)
+    order = np.argsort(-sca, kind="stable")[:K].astype(np.int32)
+    cert_a, sel_a, mv, sK = theorems.theorem2_audit(
+        X, "ip", order, sca[order], eps, k)
+    assert cert_a, "fixture must produce a certified frontier"
+    slack = mv - sK
+    L = float(np.linalg.norm(X, axis=1).max())
+    thr = theorems.theorem2_slack_threshold(slack, k, L)
+    assert 0.0 < thr < math.inf
+    for scale, must_hold in ((0.5, True), (50.0, None)):
+        delta = rng.normal(size=6)
+        delta = (delta / np.linalg.norm(delta) * thr * scale).astype(
+            np.float32)
+        qb = qa + delta
+        scb = (X[order] @ qb).astype(np.float32)
+        ob = np.argsort(-scb, kind="stable")
+        ids_b, sc_b = order[ob], scb[ob]
+        cert_b, sel_b = theorems.theorem2_recheck(
+            X, "ip", ids_b, sc_b, eps, k)
+        adj = _adj(X, eps)[ids_b][:, ids_b]
+        assert cert_b == _brute_certified(sc_b, adj, k)
+        if must_hold:    # inside the proven drift bound: must re-certify
+            assert cert_b
+            totals, sets = _brute_best(sc_b.astype(np.float64), adj, k)
+            assert set(map(int, sel_b)) == set(map(int, ids_b[list(
+                sets[k - 1])]))
