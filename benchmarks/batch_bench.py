@@ -2,7 +2,7 @@
 admission on skewed workloads, open-system (Poisson) load curves, the
 fused-round kernel microbench, and the compressed-corpus scoring bench.
 
-Five modes:
+Six modes:
 
 * ``--mode engine`` (default) — PR 1's headline comparison: at serving batch
   sizes the per-query pause/inspect/resume loop pays its host round-trips
@@ -55,6 +55,16 @@ Five modes:
   recall@k vs the exact float top-k). Every ``quant@<scheme>W<width>k<k>``
   point carries ``bytes_per_vector``; interpret-mode Pallas parity and the
   recall floor gate the exit code (the CI ``quantized-parity`` job).
+
+* ``--mode churn`` — PR 9's mutable-index point: Poisson reads against one
+  ``DiverseVectorDB`` with a ``--write-frac`` fraction of interleaved
+  upserts/deletes (the delta fills and the rebuilt graph epoch-swaps
+  mid-run). The write-op log is replayed to audit every served result —
+  mixed-epoch violations, certificate soundness vs each result's corpus
+  version, stale cache hits — and sampled live-path recall must stay
+  within 1% of a rebuild-from-scratch twin at the same (k, eps, ef)
+  budget. All four gates drive the exit code (the CI ``mutable-smoke``
+  job).
 
 * ``--mode kernel`` — PR 6's fused-round point: one ``fused_round_batch``
   dispatch vs the per-stage chain it replaced in the engine's PGS round
@@ -846,6 +856,282 @@ def run_open(n: int, requests: int, lanes: int, ef: int, qps_list,
     return out
 
 
+# ------------------------------------------------------------- churn mode ---
+
+def _audit_live_hit(db, r) -> int:
+    """Independent staleness audit of one served cache hit, run at serve
+    time (before any later write): the served set must be live, and an
+    oracle-rescored recheck of the independently re-merged frontier
+    (stored entry frontier minus tombstones, plus the live delta) must
+    re-certify and reselect exactly the served ids."""
+    from repro.core import theorems
+    from repro.core.similarity import query_sim
+
+    e = r.cache_entry
+    idx = db.index
+    served = np.asarray(r.result.ids)
+    served = served[served >= 0]
+    if served.size == 0 or idx.deleted[served].any():
+        return 1
+    cand = np.asarray(e.cand_ids[e.cand_ids >= 0], np.int64)
+    cand = cand[~idx.deleted[cand]]
+    merged = np.unique(np.concatenate([cand, idx.delta_ids()]))
+    sc = np.asarray(query_sim(jnp.asarray(np.asarray(r.q, np.float32)),
+                              jnp.asarray(idx.float_view()[merged]),
+                              idx.metric), np.float32)
+    order = np.lexsort((merged, -sc))
+    ok, sel = theorems.theorem2_recheck(idx.float_view(), idx.metric,
+                                        merged[order], sc[order],
+                                        e.eps, e.k)
+    sel = np.asarray(sel)
+    if not ok or set(map(int, sel[sel >= 0])) != set(map(int, served)):
+        return 1
+    return 0
+
+
+def run_churn(n: int, requests: int, lanes: int, ef: int, qps: float = 8.0,
+              write_frac: float = 0.1, cache_size: int = 0,
+              oracle_samples: int = 8, seed: int = 7) -> dict:
+    """Open-loop Poisson reads with a ``write_frac`` fraction of interleaved
+    writes (alternating upserts/deletes) against one ``DiverseVectorDB`` —
+    the live serving path of the mutable index, audited end to end.
+
+    The write-op log is replayed to reconstruct each request's visible
+    corpus (its harvest-tagged version's row range + deletion bitmap), and
+    the run gates on:
+
+    * mixed-epoch violations — a served id outside the tagged version's
+      rows, or tombstoned there (contract 15);
+    * certificate-soundness violations — a certified lane whose merged
+      frontier fails an independent Theorem-2 recheck against its
+      version's corpus, or reselects different ids;
+    * stale cache hits — audited at serve time by :func:`_audit_live_hit`;
+    * conservation — served + shed + deferred + hits == offered reads and
+      applied == submitted writes;
+    * recall — on ``oracle_samples`` sampled requests, served-set recall
+      vs the certified diverse oracle over that request's visible rows
+      must be within 1% of a rebuild-from-scratch twin (fresh graph over
+      the same visible rows, same (k, eps, ef) budget).
+    """
+    from repro.core import theorems
+    from repro.core.baselines import div_astar_oracle
+    from repro.core.pss import pss
+    from repro.db import DiverseVectorDB
+    from repro.index.flat import build_knn_graph
+
+    x, metric = D.make_dataset("deep-like", n=n)
+    queries, ks, epss, _ = make_skewed_workload(x, metric, requests, seed)
+    max_k = int(ks.max())
+    write_every = max(1, int(round(1.0 / max(write_frac, 1e-9))))
+    n_upserts = max(1, (requests // write_every + 1) // 2)
+    db = DiverseVectorDB(
+        x, metric, M=12, num_lanes=lanes, max_k=max_k, default_ef=ef,
+        cache_size=cache_size, delta_capacity=max(2, n_upserts),
+        background_rebuild=False, prewarm=False,
+        scheduler_kw=dict(max_pending=requests + 8,
+                          history=requests + lanes))
+    rng = np.random.default_rng(seed)
+    warmup = min(lanes, requests)
+    db.scheduler.run(queries[:warmup], ks[:warmup], epss[:warmup], efs=ef)
+
+    # write-op log: version -> (n_total, deleted bitmap) after every event
+    # that can change the live view (writes here, swaps inside pump)
+    snaps: dict = {}
+
+    def snap():
+        v = db.index.version
+        if v not in snaps:
+            snaps[v] = (db.index.n_total, db.index.deleted.copy())
+
+    def poll():
+        snap()
+        for r in reqs:
+            if (r is not None and r.result is not None
+                    and r.lane is not None and id(r) not in metas):
+                metas[id(r)] = db.backend.last_meta[r.lane]
+                frontiers[id(r)] = db.backend.last_candidates[r.lane]
+
+    snap()
+    reqs, metas, frontiers = [], {}, {}
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, requests))
+    shed_n = deferred_n = hits_n = stale_hits = 0
+    upserts_done = deletes_done = 0
+    write_flip = 0
+    retry: list = []
+
+    def do_write():
+        nonlocal upserts_done, deletes_done, write_flip
+        if write_flip % 2 == 0:
+            base = rng.integers(0, len(x), 2)
+            db.upsert(x[base] + rng.normal(size=(2, x.shape[1]))
+                      .astype(np.float32) * 0.01)
+            upserts_done += 1
+        else:
+            live = np.flatnonzero(~db.index.deleted)
+            db.delete(rng.choice(live, 1))
+            deletes_done += 1
+        write_flip += 1
+        snap()
+
+    def offer(j) -> str:
+        nonlocal hits_n, stale_hits
+        s0, d0 = db.scheduler.total_shed, db.scheduler.total_deferred
+        r = db.scheduler.try_submit(queries[j], int(ks[j]),
+                                    float(epss[j]), ef=ef)
+        if r is not None:
+            reqs.append(r)
+            if r.cache_hit:
+                hits_n += 1
+                stale_hits += _audit_live_hit(db, r)
+            return "ok"
+        if db.scheduler.total_shed > s0:
+            return "shed"
+        return "deferred" if db.scheduler.total_deferred > d0 \
+            else "saturated"
+
+    t0 = time.monotonic()
+    i = 0
+    while (i < requests or retry or db.scheduler.pending
+           or db.scheduler.inflight or db.scheduler.write_queue):
+        now = time.monotonic() - t0
+        while i < requests and arrivals[i] <= now:
+            if (i + 1) % write_every == 0:
+                do_write()
+            got = offer(i)
+            if got == "shed":
+                shed_n += 1
+            elif got != "ok":
+                retry.append(i)
+            i += 1
+        still = []
+        for j in retry:
+            got = offer(j)
+            if got == "shed":
+                shed_n += 1
+            elif got != "ok":
+                still.append(j)
+        retry = still
+        if db.scheduler.pending or db.scheduler.inflight:
+            db.scheduler.pump()
+            poll()
+        elif i < requests:
+            time.sleep(min(max(arrivals[i] - now, 0.0), 0.01))
+    db.scheduler.drain()
+    poll()
+
+    stats = db.stats()
+    open_reqs = [r for r in db.scheduler.completed if r.t_submit >= t0]
+    lats = [r.t_done - r.t_submit for r in open_reqs]
+    served = len(open_reqs) - hits_n
+
+    # -- write-log replay audits --------------------------------------------
+    mixed_epoch = cert_bad = 0
+    audited = []
+    for r in open_reqs:
+        if r.cache_hit or r.result is None:
+            continue
+        meta = metas.get(id(r))
+        if meta is None:           # lane reharvested before the poll saw it
+            continue
+        v = max(ver for ver in snaps if ver <= meta["version"])
+        n_at, dele_at = snaps[v]
+        ids = np.asarray(r.result.ids)
+        ids = ids[ids >= 0]
+        if ids.size == 0 or (ids >= n_at).any() or dele_at[ids].any():
+            mixed_epoch += 1
+            continue
+        audited.append((r, v, n_at, dele_at))
+        if r.result.stats.certified:
+            fr = frontiers.get(id(r))
+            ok, sel = theorems.theorem2_recheck(
+                db.index.float_view()[:n_at], metric, fr[0], fr[1],
+                float(r.eps), int(r.k))
+            sel = np.asarray(sel)
+            if not ok or not np.array_equal(sel, np.asarray(r.result.ids)):
+                cert_bad += 1
+
+    # -- sampled recall vs the rebuild-from-scratch twin ---------------------
+    recall_live = recall_scratch = 1.0
+    n_sampled = 0
+    if audited and oracle_samples:
+        idxs = np.unique(np.linspace(0, len(audited) - 1,
+                                     min(oracle_samples, len(audited)))
+                         .astype(int))
+        n_sampled = len(idxs)
+        rl, rs = [], []
+        twins: dict = {}     # version -> scratch graph (samples share them)
+        for j in idxs:
+            r, v, n_at, dele_at = audited[j]
+            live_rows = np.flatnonzero(~dele_at)
+            x_live = db.index.float_view()[:n_at][live_rows]
+            k, eps = int(r.k), float(r.eps)
+            oracle = div_astar_oracle(x_live, metric, r.q, k, eps,
+                                      X=min(512, len(x_live)))
+            o_ids = np.asarray(oracle.ids)
+            truth = set(map(int, live_rows[o_ids[o_ids >= 0]]))
+            if v not in twins:
+                twins[v] = build_knn_graph(x_live, metric=metric, M=12)
+            tw = pss(twins[v], np.asarray(r.q), k, eps, ef=ef)
+            t_ids = np.asarray(tw.ids)
+            twin = set(map(int, live_rows[t_ids[t_ids >= 0]]))
+            mine = set(map(int, np.asarray(r.result.ids)))
+            mine.discard(-1)
+            rl.append(len(mine & truth) / k)
+            rs.append(len(twin & truth) / k)
+        recall_live, recall_scratch = float(np.mean(rl)), float(np.mean(rs))
+
+    conserve_ok = (served + shed_n + deferred_n + hits_n == requests
+                   and stats["writes_applied"] == stats["writes"]
+                   and stats["writes_pending"] == 0)
+    recall_ok = recall_live >= recall_scratch - 0.01
+    violation = bool(mixed_epoch or cert_bad or stale_hits
+                     or not conserve_ok or not recall_ok)
+    tag = (f"churn/qps{qps:g}/w{write_frac:g}"
+           + (f"/cache{cache_size}" if cache_size else ""))
+    emit(f"{tag}/p50_latency", percentile(lats, 50) * 1e3, "ms")
+    emit(f"{tag}/p99_latency", percentile(lats, 99) * 1e3,
+         f"ms;fairness={jain_fairness(lats):.3f}")
+    emit(f"{tag}/served", served,
+         f"of {requests} offered;shed={shed_n};hits={hits_n};"
+         f"upserts={upserts_done};deletes={deletes_done};"
+         f"swaps={stats['epoch_swaps']}")
+    emit(f"{tag}/recall_live", recall_live,
+         f"scratch_twin={recall_scratch:.3f};samples={n_sampled}")
+    emit(f"{tag}/violations", int(violation),
+         f"mixed_epoch={mixed_epoch};cert={cert_bad};"
+         f"stale_hits={stale_hits};conservation_ok={conserve_ok}")
+    if violation:
+        print(f"# CHURN VIOLATION: mixed_epoch={mixed_epoch} "
+              f"cert={cert_bad} stale_hits={stale_hits} "
+              f"conservation={conserve_ok} recall_live={recall_live:.3f} "
+              f"vs scratch={recall_scratch:.3f}")
+    point = dict(
+        p50=percentile(lats, 50), p99=percentile(lats, 99),
+        served=served, shed=shed_n, deferred=deferred_n,
+        cache_hits=hits_n, write_frac=write_frac,
+        writes=int(stats["writes"]), upserts=upserts_done,
+        deletes=deletes_done, epoch_swaps=int(stats["epoch_swaps"]),
+        cache_invalidations=int(stats["cache_invalidations"]),
+        mixed_epoch_violations=mixed_epoch,
+        cert_soundness_violations=cert_bad, stale_hits=stale_hits,
+        recall_live=recall_live, recall_scratch=recall_scratch,
+        index=stats["index"])
+    if violation:
+        point["violation"] = True
+    return {(qps, write_frac, cache_size): point}
+
+
+def _churn_payload(res: dict) -> dict:
+    """Point key: ``churn@qps<q>@w<frac>``, suffixed ``@cache<size>`` when
+    the semantic cache rides the churn run."""
+    def key(qps, frac, cache):
+        k = f"churn@qps{qps:g}@w{frac:g}"
+        if cache:
+            k += f"@cache{cache}"
+        return k
+    return {key(*params): point for params, point in sorted(res.items())}
+
+
 # -------------------------------------------------------------- trend json --
 
 BENCH_SCHEMA = 2
@@ -917,7 +1203,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="engine",
                     choices=["engine", "skewed", "open", "kernel",
-                             "quantized"])
+                             "quantized", "churn"])
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke sizes (small n, few requests)")
     ap.add_argument("--n", type=int, default=None)
@@ -958,6 +1244,10 @@ def main(argv=None):
                          "(0 = no cache); reports hit-rate / hit_p50 and "
                          "gates on revalidation soundness + zero-duplicate "
                          "parity")
+    ap.add_argument("--write-frac", type=float, default=0.1,
+                    help="write fraction for --mode churn: one write "
+                         "(alternating 2-row upsert / 1-row delete) per "
+                         "1/frac offered reads")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="merge this run's summary into a stable-schema "
                          "trend JSON (skewed/open modes)")
@@ -989,6 +1279,16 @@ def main(argv=None):
         if args.json:
             write_trend_json(args.json, "kernel", _kernel_payload(res))
         return 1 if res["parity_violations"] else 0
+    if args.mode == "churn":
+        qps = float((args.qps or ("4" if args.tiny else "8")).split(",")[0])
+        res = run_churn(n=n, requests=requests, lanes=lanes, ef=args.ef,
+                        qps=qps, write_frac=args.write_frac,
+                        cache_size=args.cache_size,
+                        oracle_samples=(4 if args.tiny else 8),
+                        seed=args.seed)
+        if args.json:
+            write_trend_json(args.json, "churn", _churn_payload(res))
+        return 1 if any(v.get("violation") for v in res.values()) else 0
     if args.mode == "open":
         qps_list = [float(q) for q in
                     (args.qps or ("4" if args.tiny else "2,8,32")).split(",")]

@@ -1,5 +1,6 @@
 """Quickstart: build an index, run every diverse-search method, then serve
-a mixed-(k, eps) request stream through the continuous-batching scheduler.
+a mixed-(k, eps) request stream — plus live upserts and deletes — through
+the ``DiverseVectorDB`` facade.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,8 +8,8 @@ import numpy as np
 
 from repro.core.api import diverse_search
 from repro.core.baselines import div_astar_oracle
+from repro.db import DiverseVectorDB, Query
 from repro.index.flat import build_knn_graph
-from repro.serve.scheduler import LaneScheduler
 
 rng = np.random.default_rng(0)
 centers = rng.normal(size=(20, 32)) * 2.0
@@ -27,24 +28,39 @@ for method in ("greedy", "pgs", "pds", "pss"):
 oracle = div_astar_oracle(X, "l2", q, k, eps)
 print(f"oracle   ids={oracle.ids} total={oracle.total:.4f}")
 
-# --- serving: continuous batching over lanes --------------------------------
-# Each request carries its own (k, eps) — the paper's Definition 1, end to
-# end: no index rebuild between diversification levels. Certified lanes are
-# recycled for queued requests; results are bit-identical to the per-query
-# drivers above.
+# --- serving: the DiverseVectorDB facade ------------------------------------
+# One constructor assembles index -> engine -> scheduler (-> cache). Each
+# request is a frozen Query carrying its own (k, eps) — the paper's
+# Definition 1, end to end: no index rebuild between diversification
+# levels. Certified lanes are recycled for queued requests; results are
+# bit-identical to the per-query drivers above.
 print("\nserving 8 mixed-(k, eps) requests over 3 lanes ...")
-sched = LaneScheduler(graph, num_lanes=3, max_k=8, default_ef=15,
-                      prewarm=False)
+db = DiverseVectorDB(index=graph, num_lanes=3, max_k=8, default_ef=15,
+                     prewarm=False)
 queries = X[rng.integers(0, 5000, 8)] \
     + 0.05 * rng.normal(size=(8, 32)).astype(np.float32)
-ks = [5, 3, 5, 3, 5, 3, 5, 3]
-epss = [0.0, -0.5, 0.0, -0.5, 0.0, -0.5, 0.0, -0.5]
-results = sched.run(queries, ks, epss)
-for i, r in enumerate(results):
-    print(f"req {i}: k={ks[i]} eps={epss[i]:+.1f} ids={r.ids} "
+reqs = [Query(queries[i], k=(5, 3)[i % 2], eps=(0.0, -0.5)[i % 2], ef=15)
+        for i in range(8)]
+results = db.search_batch(reqs)
+for i, (req, r) in enumerate(zip(reqs, results)):
+    print(f"req {i}: k={req.k} eps={req.eps:+.1f} ids={r.ids} "
           f"certified={r.stats.certified}")
-stats = sched.latency_stats()
+stats = db.stats()
 print(f"scheduler: p50={stats['p50_latency'] * 1e3:.0f}ms "
       f"p99={stats['p99_latency'] * 1e3:.0f}ms "
       f"fairness={stats['fairness']:.3f} "
       f"throughput={stats['throughput']:.1f} req/s")
+
+# --- writes: upsert / delete at serve time ----------------------------------
+# Fresh vectors land in a flat-scored delta segment and join results at
+# harvest; deletes flip a bitmap the diversifier and certificates respect;
+# a full delta triggers a background rebuild + epoch swap (contract 15).
+new_ids = db.upsert(q[None] + 0.01)
+r = db.search(Query(q, k=5, eps=0.0, ef=15))
+print(f"\nupserted id {int(new_ids[0])}; now served: "
+      f"{int(new_ids[0]) in r.ids.tolist()}")
+db.delete(new_ids)
+r = db.search(Query(q, k=5, eps=0.0, ef=15))
+print(f"deleted id {int(new_ids[0])}; still served: "
+      f"{int(new_ids[0]) in r.ids.tolist()}")
+print(f"index: {db.stats()['index']}")

@@ -1,8 +1,10 @@
 """End-to-end RAG: diverse retrieval (the paper) feeding LM decode.
 
-Retrieval goes through the continuous-batching lane scheduler: each request
-is submitted with its own (k, eps), lanes freed by certified queries are
-recycled, and per-request latency stats come back with the answer.
+Retrieval is served by a ``DiverseVectorDB`` — index, engine, scheduler
+assembled behind one constructor — passed to the pipeline as ``db=``. Each
+request is submitted with its own (k, eps), lanes freed by certified
+queries are recycled, and per-request latency stats come back with the
+answer. The same db accepts upserts/deletes between generate calls.
 
     PYTHONPATH=src python examples/rag_serving.py
 """
@@ -10,18 +12,19 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.index.flat import build_knn_graph
+from repro.db import DiverseVectorDB
 from repro.models import model as M
 from repro.serve.rag import RagPipeline
 
 rng = np.random.default_rng(0)
 docs = rng.normal(size=(4000, 48)).astype(np.float32)
-graph = build_knn_graph(docs, metric="ip", M=8)
+db = DiverseVectorDB(docs, "ip", M=8, num_lanes=3, max_k=16,
+                     prewarm=False)
 
 cfg = get_config("qwen2-1.5b").reduced()
 params = M.init_params(cfg, jax.random.key(0))
-pipe = RagPipeline(cfg, params, graph, k=4, eps=3.0, ef=4,
-                   engine="scheduler", num_lanes=3)
+pipe = RagPipeline(cfg, params, k=4, eps=3.0, ef=4,
+                   engine="scheduler", num_lanes=3, db=db)
 
 queries = docs[rng.integers(0, 4000, 3)]
 tokens, ids, certified = pipe.generate(queries, np.ones((3, 4), np.int32),
@@ -29,7 +32,13 @@ tokens, ids, certified = pipe.generate(queries, np.ones((3, 4), np.int32),
 print("retrieved diverse doc ids per query:\n", ids)
 print("theorem-2 certified lanes:", certified)
 print("generated tokens:\n", tokens)
+
+# live corpus update: the next generate() sees the new document
+new_ids = db.upsert(queries[:1] + 0.01)
+_, ids2, _ = pipe.generate(queries[:1], np.ones((1, 4), np.int32), steps=4)
+print(f"upserted doc {int(new_ids[0])}; retrieved now:", ids2[0])
+
 stats = pipe.scheduler.latency_stats()
 print(f"scheduler: completed={stats['completed']} "
       f"p99={stats['p99_latency'] * 1e3:.0f}ms "
-      f"signatures={stats['signatures']}")
+      f"signatures={stats['signatures']} writes={stats['writes']}")

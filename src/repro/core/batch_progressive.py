@@ -654,6 +654,8 @@ class ProgressiveEngine:
         self.max_k = max_k
         self.default_ef = default_ef
         self._capacity0 = capacity0
+        self._max_capacity = max_capacity
+        self._max_signatures = max_signatures
         self.max_iters = max_iters
         self.max_expansions = max_expansions
         self.status = np.full(self.B, LANE_FREE, np.int8)
@@ -771,6 +773,33 @@ class ProgressiveEngine:
         if self.status[lane] != LANE_DONE:
             raise RuntimeError(f"lane {lane} is not finished")
         self.status[lane] = LANE_FREE
+
+    def swap_graph(self, graph: FlatGraph) -> None:
+        """Install a new epoch's graph (the mutable index's rebuild swap).
+
+        Only legal with no occupied lane: per-lane search state (visited
+        bitmaps, beam queues) is shaped by the corpus size, so an in-flight
+        lane cannot survive a swap — the serving layer drains lanes first
+        (contract 15; harvested-but-unrecycled lanes are fine, their
+        results live host-side). A fresh driver is built over the new
+        graph; the signature log carries across so recompile audits span
+        epochs (a grown corpus legitimately traces new shapes).
+        """
+        if self.active_count():
+            raise RuntimeError("cannot swap the graph under occupied lanes "
+                               "— drain in-flight lanes first (contract 15)")
+        log = self.driver.signatures
+        d = int(self.driver.qs.shape[1])
+        base_cap = self._capacity0 or min(256, _next_pow2(graph.size))
+        self.driver = BatchProgressiveDriver(
+            graph, jnp.zeros((self.B, d), jnp.float32),
+            ef=self.default_ef, k=1, capacity0=base_cap,
+            max_capacity=self._max_capacity,
+            max_signatures=self._max_signatures)
+        log.note("swap", self.B, graph.size)
+        self.driver.signatures = log
+        self.graph = graph
+        self.compressed = bool(quant.is_quantized(graph.vectors))
 
     # -- results ------------------------------------------------------------
     def result(self, lane: int) -> DiverseResult:

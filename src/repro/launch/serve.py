@@ -23,6 +23,12 @@ repeated or near-duplicate queries are answered from a certified cached
 result set after a fresh Theorem-2 recheck, without occupying a lane.
 ``--cost-model-path f.json`` warm-starts the admission policies' expansion
 cost model from a previous run and persists the learned state afterwards.
+
+Serving is assembled through ``repro.db.DiverseVectorDB`` (one constructor:
+index → backend → scheduler → cache), which also provides the write path:
+``--upserts N`` interleaves N upserts and N deletes with the request batch
+to exercise the delta segment, deletion bitmap, and epoch swap, and prints
+the mutable-index stats afterwards.
 """
 from __future__ import annotations
 
@@ -34,26 +40,26 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.index.flat import build_knn_graph
+from repro.db import DiverseVectorDB
 from repro.models import model as M
 from repro.serve.policies import ExpansionCostModel
 from repro.serve.rag import RagPipeline
 
 
-def _sharded_backend(docs: np.ndarray, shards: int, lanes: int, k: int):
-    from repro.compat import make_mesh
-    from repro.sharded_search import ShardedEngine, build_sharded_index
-
-    if shards & (shards - 1):
-        raise SystemExit(f"--mesh-shards {shards} must be a power of two "
-                         "(tournament merge)")
-    if shards > jax.device_count():
-        raise SystemExit(f"--mesh-shards {shards} > {jax.device_count()} "
-                         "devices (set XLA_FLAGS to force host devices)")
-    index = build_sharded_index(docs, shards, "ip", M=8)
-    mesh = make_mesh((shards,), ("data",))
-    return ShardedEngine(index, docs, mesh, num_lanes=lanes,
-                         max_k=max(k, 16))
+def _build_db(docs: np.ndarray, args, cost_model) -> DiverseVectorDB:
+    shards = args.mesh_shards or None
+    if shards:
+        if shards & (shards - 1):
+            raise SystemExit(f"--mesh-shards {shards} must be a power of "
+                             "two (tournament merge)")
+        if shards > jax.device_count():
+            raise SystemExit(f"--mesh-shards {shards} > "
+                             f"{jax.device_count()} devices (set XLA_FLAGS "
+                             "to force host devices)")
+    return DiverseVectorDB(docs, "ip", shards=shards, num_lanes=args.lanes,
+                           max_k=max(args.k, 16), M=8, policy=args.policy,
+                           cache_size=args.cache_size, cost_model=cost_model,
+                           prewarm=args.prewarm)
 
 
 def main():
@@ -87,22 +93,20 @@ def main():
                          "expansion cost model from (loaded if it exists) "
                          "and to persist the learned state back to after "
                          "the run")
+    ap.add_argument("--upserts", type=int, default=0,
+                    help="exercise the write path: N upserts before the "
+                         "batch and N deletes after (requires --engine "
+                         "scheduler); mutable-index stats are printed")
     ap.add_argument("--prewarm", action="store_true",
                     help="pre-compile the scheduler's capacity ladder")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
     docs = rng.normal(size=(args.corpus, args.dim)).astype(np.float32)
-    backend, graph = None, None
-    if args.mesh_shards:
-        if args.engine != "scheduler":
-            raise SystemExit("--mesh-shards requires --engine scheduler")
-        # shards must split the corpus evenly; trim the tail like the
-        # benchmark does (the single-host graph is dead weight here)
-        docs = docs[:(len(docs) // args.mesh_shards) * args.mesh_shards]
-        backend = _sharded_backend(docs, args.mesh_shards, args.lanes, args.k)
-    else:
-        graph = build_knn_graph(docs, metric="ip", M=8)
+    if args.mesh_shards and args.engine != "scheduler":
+        raise SystemExit("--mesh-shards requires --engine scheduler")
+    if args.upserts and args.engine != "scheduler":
+        raise SystemExit("--upserts requires --engine scheduler")
     cfg = get_config(args.arch).reduced()
     params = M.init_params(cfg, jax.random.key(0))
     cost_model = None
@@ -110,12 +114,18 @@ def main():
         cost_model = ExpansionCostModel.load(args.cost_model_path)
         print(f"# cost model warm-started from {args.cost_model_path} "
               f"({cost_model.stats()['observations']} observations)")
-    pipe = RagPipeline(cfg, params, graph, k=args.k, eps=args.eps,
+    db = _build_db(docs, args, cost_model)
+    pipe = RagPipeline(cfg, params, k=args.k, eps=args.eps,
                        engine=args.engine, num_lanes=args.lanes,
-                       prewarm=args.prewarm, backend=backend,
-                       policy=args.policy, cache_size=args.cache_size,
-                       cost_model=cost_model)
+                       prewarm=args.prewarm, policy=args.policy,
+                       cache_size=args.cache_size, cost_model=cost_model,
+                       db=db)
     qs = docs[rng.integers(0, len(docs), args.requests)]
+    if args.upserts:
+        new_ids = db.upsert(rng.normal(size=(args.upserts, args.dim))
+                            .astype(np.float32))
+        print(f"# upserted {len(new_ids)} vectors "
+              f"(ids {int(new_ids[0])}..{int(new_ids[-1])})")
     tenants = ([f"t{i % args.tenants}" for i in range(args.requests)]
                if args.tenants > 1 else None)
     if args.engine != "scheduler" and (tenants is not None
@@ -134,6 +144,16 @@ def main():
     print(f"{args.requests} requests in {dt:.2f}s; "
           f"certified={cert.tolist()}")
     print("retrieved ids:\n", ids)
+    if args.upserts:
+        victims = rng.integers(0, args.corpus, args.upserts)
+        removed = db.delete(np.unique(victims))
+        post = db.search(qs[0], k=args.k, eps=args.eps)
+        idx = db.stats()["index"]
+        print(f"# deleted {removed} ids; post-write search certified="
+              f"{post.stats.certified} ids={post.ids.tolist()}")
+        print(f"# index: n={idx['n_total']} live={idx['live']} "
+              f"delta={idx['delta']} epoch={idx['epoch']} "
+              f"rebuilds={idx['rebuilds']}")
     if args.engine == "scheduler":
         stats = pipe.scheduler.latency_stats()
         where = (f"mesh[{args.mesh_shards}]" if args.mesh_shards

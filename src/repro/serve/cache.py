@@ -87,10 +87,21 @@ class SemanticResultCache:
     frontier through another kernel rung. The guard keeps every served
     hit's certificate far enough from the boundary that *any* independent
     float path reaches the same verdict.
+
+    ``live`` binds the cache to a mutable corpus (an
+    ``index.mutable.MutableIndex``; pass ``vectors=None``): revalidation
+    then runs through ``live.audit_frontier`` — deletion-bitmap filter,
+    delta-segment merge, Theorem-2 re-audit against the live float view —
+    so a hit after a write is either served valid-against-the-live-corpus
+    or refused (contract 15 extends contract 14). The ``ip`` Lipschitz
+    constant tracks the live corpus per write version. ``invalidate`` is
+    the eager companion: the scheduler's write path evicts entries whose
+    stored frontier a write touched, independent of live binding.
     """
 
-    def __init__(self, vectors, metric: str, capacity: int = 256, *,
-                 impl: str | None = None, safety: float = 1.0,
+    def __init__(self, vectors, metric: str | None = None,
+                 capacity: int = 256, *,
+                 live=None, impl: str | None = None, safety: float = 1.0,
                  max_drift: float | None = None, guard: float = 1e-4):
         if capacity < 1:
             raise ValueError(f"capacity={capacity} must be >= 1")
@@ -99,23 +110,25 @@ class SemanticResultCache:
                              "threshold would exceed the proven drift bound")
         if guard < 0.0:
             raise ValueError(f"guard={guard} must be >= 0")
-        self.vectors = np.asarray(vectors, np.float32)
-        if self.vectors.ndim != 2:
-            raise ValueError("vectors must be the float [n, d] corpus")
+        self.live = live
+        if live is not None:
+            if vectors is not None:
+                raise ValueError("pass either vectors or live=, not both")
+            metric = live.metric
+            self._vectors = None
+        else:
+            self._vectors = np.asarray(vectors, np.float32)
+            if self._vectors.ndim != 2:
+                raise ValueError("vectors must be the float [n, d] corpus")
+            if metric is None:
+                raise ValueError("metric is required with a static corpus")
         self.metric = str(metric)
         self.capacity = int(capacity)
         self.impl = impl
         self.safety = float(safety)
         self.max_drift = None if max_drift is None else float(max_drift)
         self.guard = float(guard)
-        # score-shift per unit probe drift (see theorem2_slack_threshold):
-        # l2 and cos are 1-Lipschitz in probe space; ip is bounded by the
-        # largest corpus norm
-        if self.metric == "ip":
-            norms = np.linalg.norm(self.vectors, axis=1)
-            self.lipschitz = float(norms.max()) if norms.size else 1.0
-        else:
-            self.lipschitz = 1.0
+        self._lip_cache: tuple[int, float] | None = None
         #: eid -> entry, ordered oldest-touched first (LRU at the front)
         self._entries: collections.OrderedDict[int, CacheEntry] = \
             collections.OrderedDict()
@@ -129,9 +142,32 @@ class SemanticResultCache:
         self.admitted = 0
         self.rejected = 0
         self.evicted = 0
+        self.invalidated = 0
 
     def __len__(self) -> int:
         return len(self._entries)
+
+    @property
+    def vectors(self) -> np.ndarray:
+        """The exact float corpus revalidation rescores against — the live
+        view when bound to a mutable index, else the static corpus."""
+        return (self.live.float_view() if self.live is not None
+                else self._vectors)
+
+    @property
+    def lipschitz(self) -> float:
+        """Score-shift per unit probe drift (see
+        ``theorem2_slack_threshold``): l2 and cos are 1-Lipschitz in probe
+        space; ip is bounded by the largest corpus norm — recomputed per
+        write version on a live corpus (an upsert can raise it)."""
+        if self.metric != "ip":
+            return 1.0
+        version = self.live.version if self.live is not None else 0
+        if self._lip_cache is None or self._lip_cache[0] != version:
+            norms = np.linalg.norm(self.vectors, axis=1)
+            self._lip_cache = (version,
+                               float(norms.max()) if norms.size else 1.0)
+        return self._lip_cache[1]
 
     # -- probe space ---------------------------------------------------------
     def _probe_vec(self, q) -> np.ndarray:
@@ -205,7 +241,26 @@ class SemanticResultCache:
         re-run the Theorem-2 recheck; a pass returns a ``DiverseResult``
         carrying the live query's scores and a live certificate. The
         recheck's margin must clear ``guard``, so the certificate survives
-        an independent auditor's float path too (not just this one)."""
+        an independent auditor's float path too (not just this one).
+
+        On a live (mutable) corpus with writes applied, the recheck runs
+        through ``live.audit_frontier`` instead: tombstoned ids are dropped
+        from the frontier, the delta segment's live points are merged in
+        (a fresh better point must *join* the served set, not silently
+        lose to a stale one), and the certificate is audited against the
+        live float view with the engine's unexplored-point bound kept."""
+        if self.live is not None and self.live.mutated:
+            certified, sel_ids, sel_sc, m_ids, _, slack = \
+                self.live.audit_frontier(q, entry.k, entry.eps,
+                                         entry.cand_ids, None,
+                                         impl=self.impl)
+            if not certified or not slack > self.guard:
+                return None
+            stats = SearchStats(expansions=0, growths=0, search_calls=0,
+                                div_calls=1, certified=True, exhausted=False,
+                                K_final=int(m_ids.size))
+            return DiverseResult(sel_ids.astype(np.int32), sel_sc,
+                                 float(sel_sc.sum()), stats)
         valid = entry.cand_ids >= 0
         vecs = self.vectors[np.maximum(entry.cand_ids, 0)]
         q32 = np.asarray(q, np.float32).reshape(-1)
@@ -295,18 +350,41 @@ class SemanticResultCache:
         self._qmat = None   # rebuilt lazily on the next probe
         return True
 
+    # -- write invalidation --------------------------------------------------
+    def invalidate(self, ids) -> int:
+        """Evict every entry whose stored certificate frontier intersects
+        ``ids``; returns the eviction count. The scheduler's write path
+        calls this on each applied write (PR 8's carry-over): a deleted id
+        in a frontier voids both the served set and the slack the probe
+        threshold was derived from. Upserted ids are fresh — no stored
+        frontier can contain them — so upserts are covered by live-corpus
+        revalidation (delta merge at hit time) rather than eager eviction.
+        """
+        ids = np.unique(np.asarray(ids, np.int64).reshape(-1))
+        if ids.size == 0 or not self._entries:
+            return 0
+        victims = [eid for eid, e in self._entries.items()
+                   if np.isin(e.cand_ids[e.cand_ids >= 0], ids).any()]
+        for eid in victims:
+            del self._entries[eid]
+        if victims:
+            self._qmat = None
+            self.invalidated += len(victims)
+        return len(victims)
+
     # -- reporting -----------------------------------------------------------
     def stats(self) -> dict:
         """Counters snapshot (all lifetime): probes/hits/misses,
         revalidation failures (near-hits whose live-query recheck failed),
-        admissions/rejections/evictions, and resident size."""
+        admissions/rejections/evictions, write invalidations, and resident
+        size."""
         return dict(
             size=len(self._entries), capacity=self.capacity,
             probes=self.probes, hits=self.hits, misses=self.misses,
             hit_rate=self.hits / self.probes if self.probes else 0.0,
             revalidation_failures=self.revalidation_failures,
             admitted=self.admitted, rejected=self.rejected,
-            evicted=self.evicted,
+            evicted=self.evicted, invalidated=self.invalidated,
         )
 
     @classmethod
@@ -314,10 +392,15 @@ class SemanticResultCache:
                     **kw) -> "SemanticResultCache":
         """Build a cache over a ``LaneBackend``'s own corpus.
 
-        Works for any backend exposing a float corpus: the single-host
-        engine's ``graph`` (``vectors``/``metric``) or the sharded engine's
-        ``all_vectors`` + ``index.metric``. Refuses quantized corpora — the
-        cache must rescore in exact float (contract 13/14)."""
+        Works for any backend exposing a float corpus: a write-capable
+        backend's ``mutable_index`` (the cache binds ``live=`` to it, so
+        revalidation tracks writes), the single-host engine's ``graph``
+        (``vectors``/``metric``), or the sharded engine's ``all_vectors``
+        + ``index.metric``. Refuses quantized corpora — the cache must
+        rescore in exact float (contract 13/14)."""
+        mutable = getattr(backend, "mutable_index", None)
+        if mutable is not None:
+            return cls(None, capacity=capacity, live=mutable, **kw)
         graph = getattr(backend, "graph", None)
         if graph is not None and not getattr(backend, "compressed", False):
             return cls(np.asarray(graph.vectors), graph.metric, capacity,

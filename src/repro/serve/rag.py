@@ -15,11 +15,15 @@ per-query PSS driver. ``engine="lockstep"`` runs the same engine with
 whole-batch admission (PR 1's regime); ``engine="fixed_k"`` keeps the older
 static-K hybrid (batched div-A* + per-query PSS repair) for comparison.
 
-The scheduler is backend-neutral: pass ``backend=`` (any
-``core.backend.LaneBackend``, e.g. a mesh-sharded
-``sharded_search.engine.ShardedEngine``) to serve retrieval off a device
-mesh instead of the single-host graph — the rest of the pipeline is
-unchanged (``launch/serve.py --mesh-shards`` wires this up). Multi-tenant
+Retrieval wiring goes through ``repro.db.DiverseVectorDB`` (pass ``db=``):
+the facade owns index/backend/scheduler/cache assembly, adds the write
+path (``db.upsert``/``db.delete`` are visible to this pipeline's next
+``retrieve``), and serves sharded/quantized corpora through the same
+constructor. The pre-facade wirings — ``graph=`` (build a single-host
+scheduler here) and ``backend=`` (wrap a hand-built engine) — still work
+but are **deprecated shims**: they emit ``DeprecationWarning`` and will be
+removed one release after ``DiverseVectorDB`` (results are bit-exact in
+the meantime). Multi-tenant
 serving rides the same path: ``policy=`` picks the scheduler's admission
 policy (``"fifo"`` / ``"drr"`` / ``"slo_cost"`` or a configured
 ``serve.policies.AdmissionPolicy``) and ``retrieve(..., tenants=...)``
@@ -33,6 +37,7 @@ query, without occupying a lane (``launch/serve.py --cache-size``).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -44,14 +49,16 @@ from repro.core.batch_progressive import batch_pss
 from repro.core.graph import FlatGraph
 from repro.core.pss import pss
 from repro.models import model as M
-from repro.serve.scheduler import LaneScheduler
+from repro.serve.query import Query
+from repro.serve.scheduler import (LaneScheduler, RequestDeferred,
+                                   RequestShed, SchedulerSaturated)
 
 
 @dataclasses.dataclass
 class RagPipeline:
     cfg: ModelConfig
     params: dict
-    graph: FlatGraph
+    graph: FlatGraph | None = None   # deprecated shim — pass db= instead
     k: int = 5
     eps: float = 0.8
     K_budget: int = 64
@@ -59,25 +66,41 @@ class RagPipeline:
     engine: str = "scheduler"   # "scheduler" | "lockstep" | "fixed_k"
     num_lanes: int = 8
     prewarm: bool = False
-    backend: object | None = None   # LaneBackend override (e.g. ShardedEngine)
+    backend: object | None = None   # deprecated shim — pass db= instead
     policy: object = "fifo"     # admission policy name or AdmissionPolicy
     cache_size: int = 0         # semantic result cache capacity (0 = off)
     cost_model: object | None = None   # warm ExpansionCostModel (else fresh)
+    db: object | None = None    # repro.db.DiverseVectorDB — the front door
     _scheduler: LaneScheduler | None = dataclasses.field(
         default=None, repr=False)
 
     @property
     def scheduler(self) -> LaneScheduler:
-        """The pipeline's lane scheduler (built lazily, reused across calls
-        so the backend's compile cache, lane state, and the admission
-        policy's cost model persist)."""
+        """The pipeline's lane scheduler (the ``db``'s when one was given;
+        otherwise built lazily through a deprecated wiring shim, reused
+        across calls so the backend's compile cache, lane state, and the
+        admission policy's cost model persist)."""
+        if self.db is not None:
+            return self.db.scheduler
         if self._scheduler is None:
             if self.backend is not None:
+                warnings.warn(
+                    "RagPipeline(backend=...) is a deprecated wiring shim — "
+                    "construct a repro.db.DiverseVectorDB and pass db=; the "
+                    "shim is removed one release after DiverseVectorDB "
+                    "(results are bit-exact either way)",
+                    DeprecationWarning, stacklevel=3)
                 self._scheduler = LaneScheduler(
                     backend=self.backend, prewarm=self.prewarm,
                     policy=self.policy, cache_size=self.cache_size,
                     cost_model=self.cost_model)
             else:
+                warnings.warn(
+                    "RagPipeline(graph=...) is a deprecated wiring shim — "
+                    "construct repro.db.DiverseVectorDB(index=graph, ...) "
+                    "and pass db=; the shim is removed one release after "
+                    "DiverseVectorDB (results are bit-exact either way)",
+                    DeprecationWarning, stacklevel=3)
                 self._scheduler = LaneScheduler(
                     self.graph, num_lanes=self.num_lanes,
                     max_k=max(self.k, 16), default_ef=self.ef,
@@ -86,17 +109,67 @@ class RagPipeline:
                     cost_model=self.cost_model)
         return self._scheduler
 
+    def _graph(self) -> FlatGraph:
+        if self.graph is not None:
+            return self.graph
+        if self.db is not None and self.db.index.graph is not None:
+            return self.db.index.graph
+        raise ValueError("this engine mode needs a single-host graph "
+                         "(pass graph= or a single-host db=)")
+
+    def _retrieve_queries(self, queries: list[Query]
+                          ) -> tuple[np.ndarray, np.ndarray]:
+        """Serve a closed batch of ``Query`` objects through the scheduler
+        (the ``Query``-native path ``retrieve`` dispatches to)."""
+        sched = self.scheduler
+        embed = self.db.embed if self.db is not None else None
+        reqs = []
+        for q in queries:
+            q = q.resolve(embed)
+            while True:
+                try:
+                    reqs.append(sched.submit(q))
+                    break
+                except RequestShed:
+                    reqs.append(None)
+                    break
+                except (SchedulerSaturated, RequestDeferred):
+                    sched.pump()
+        sched.drain()
+        k_max = max(int(q.k) for q in queries)
+        ids = np.full((len(queries), k_max), -1, np.int32)
+        cert = np.zeros(len(queries), bool)
+        for i, r in enumerate(reqs):
+            if r is None or r.result is None:
+                continue
+            ids[i, :r.result.ids.shape[0]] = r.result.ids
+            cert[i] = r.result.stats.certified
+        return ids, cert
+
     def retrieve(self, query_embeds, ks=None, epss=None, tenants=None
                  ) -> tuple[np.ndarray, np.ndarray]:
         """Diverse document ids per query + per-lane certificate flags.
 
-        ``ks``/``epss`` optionally override the pipeline defaults per
-        request and ``tenants`` labels each request's tenant for the
-        admission policy and per-tenant stats (scheduler engine only) —
-        the paper's query-owned diversification level, end to end, now
-        with per-tenant fair scheduling on top. A request shed by the
-        policy yields an all ``-1`` id row with ``certified=False``.
+        ``query_embeds`` is an ``[m, d]`` embedding batch — or a list of
+        ``serve.query.Query`` objects, each carrying its own
+        ``k``/``eps``/``tenant``/``slo`` (``ks``/``epss``/``tenants`` must
+        then be omitted). With raw embeddings, ``ks``/``epss`` optionally
+        override the pipeline defaults per request and ``tenants`` labels
+        each request's tenant for the admission policy and per-tenant
+        stats (scheduler engine only) — the paper's query-owned
+        diversification level, end to end, now with per-tenant fair
+        scheduling on top. A request shed by the policy yields an all
+        ``-1`` id row with ``certified=False``.
         """
+        if (isinstance(query_embeds, (list, tuple)) and query_embeds
+                and all(isinstance(q, Query) for q in query_embeds)):
+            if ks is not None or epss is not None or tenants is not None:
+                raise ValueError("per-Query parameters are set on each "
+                                 "Query, not as retrieve() overrides")
+            if self.engine != "scheduler":
+                raise ValueError("Query batches are served by the "
+                                 "scheduler engine only")
+            return self._retrieve_queries(list(query_embeds))
         qs = jnp.asarray(query_embeds, jnp.float32)
         if self.engine == "scheduler":
             results = self.scheduler.run(
@@ -115,15 +188,15 @@ class RagPipeline:
                 cert[i] = r.stats.certified
             return ids, cert
         if self.engine in ("lockstep", "progressive"):   # PR 1 name kept
-            res = batch_pss(self.graph, qs, self.k, self.eps, ef=self.ef)
+            res = batch_pss(self._graph(), qs, self.k, self.eps, ef=self.ef)
             return res.ids.copy(), res.stats.certified.copy()
         # legacy hybrid: static-K batched div-A* + per-query PSS repair
         ids, scores, total, certified = batch_optimal_diverse(
-            self.graph, qs, self.k, self.eps, self.K_budget, self.ef)
+            self._graph(), qs, self.k, self.eps, self.K_budget, self.ef)
         ids = np.array(ids)  # writable copy for PSS repair
         cert = np.asarray(certified)
         for i in np.flatnonzero(~cert):
-            res = pss(self.graph, np.asarray(qs[i]), self.k, self.eps,
+            res = pss(self._graph(), np.asarray(qs[i]), self.k, self.eps,
                       ef=self.ef * 4)
             ids[i] = res.ids
         return ids, cert

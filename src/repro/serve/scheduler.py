@@ -66,6 +66,7 @@ from repro.core.pgs import DiverseResult
 from repro.serve import policies as P
 from repro.serve.cache import CacheEntry, SemanticResultCache
 from repro.serve.policies import ExpansionCostModel, make_policy
+from repro.serve.query import Query
 
 
 class SchedulerSaturated(RuntimeError):
@@ -124,8 +125,11 @@ class Request(LaneRequest):
       served this request at submit: the entry whose frontier was
       revalidated against this request's live query (kept so audits can
       independently re-run ``theorem2_recheck`` on served hits).
+    * ``slo`` — the submitted ``Query``'s latency budget (seconds; None =
+      best effort), carried for policies and shed callbacks to read.
     """
     tenant: str = "default"
+    slo: float | None = None
     rid: int = -1
     t_submit: float = 0.0
     t_admit: float | None = None
@@ -149,6 +153,30 @@ class Request(LaneRequest):
     def latency(self) -> float:
         """Submit-to-completion seconds (0.0 until done)."""
         return (self.t_done or 0.0) - self.t_submit
+
+
+@dataclasses.dataclass(eq=False)
+class WriteTicket:
+    """One admitted corpus write (``upsert`` or ``delete``).
+
+    Writes share the scheduler's front door with reads: ``submit_write``
+    enqueues, and the ticket is *applied* — delta append / bitmap flip on
+    the backend's ``MutableIndex``, plus semantic-cache invalidation — at
+    the top of the next ``pump()``, i.e. between backend rounds. In-flight
+    lanes observe the write at harvest (contract 15's live merge), never
+    mid-round. ``ids`` holds the assigned (upsert) or affected (delete) ids
+    once applied; ``apply_writes()`` forces application without a pump.
+    """
+    op: str                          # "upsert" | "delete"
+    payload: object                  # vectors [m, d] | ids
+    wid: int = -1
+    t_submit: float = 0.0
+    t_applied: float | None = None
+    ids: np.ndarray | None = None
+
+    @property
+    def applied(self) -> bool:
+        return self.t_applied is not None
 
 
 def percentile(xs: list[float], p: float) -> float:
@@ -300,24 +328,34 @@ class LaneScheduler:
         self.tenant_deferred: collections.Counter = collections.Counter()
         self.total_cache_hits = 0
         self.tenant_cache_hits: collections.Counter = collections.Counter()
+        self.write_queue: collections.deque[WriteTicket] = collections.deque()
+        self.total_writes = 0
+        self.total_writes_applied = 0
+        self.total_cache_invalidations = 0
         self._next_rid = 0
+        self._next_wid = 0
         self.steps = 0
         if prewarm:
             self.backend.prewarm(max_capacity=prewarm_capacity,
                                  ks=prewarm_ks, widths=prewarm_widths)
 
     # -- admission ----------------------------------------------------------
-    def submit(self, q, k: int, eps: float, ef: int | None = None,
-               method: str | None = None, max_K: int | None = None,
-               tenant: str = "default") -> Request:
+    def submit(self, q, k: int | None = None, eps: float | None = None,
+               ef: int | None = None, method: str | None = None,
+               max_K: int | None = None, tenant: str = "default",
+               slo: float | None = None) -> Request:
         """Enqueue one request; returns its ``Request`` handle.
 
-        ``q`` is the query vector; ``(k, eps)`` the paper's per-request
-        diversification parameters; ``ef`` defaults to the backend's
+        ``q`` is either a ``serve.query.Query`` (the public parameter
+        object — all other arguments must then be left at their defaults)
+        or a raw query vector with ``(k, eps)`` the paper's per-request
+        diversification parameters. ``ef`` defaults to the backend's
         ``default_ef``; ``method`` defaults to the backend's native method
         (``backend.methods[0]``); ``max_K`` caps the progressive candidate
         budget; ``tenant`` labels the request for fair scheduling and
-        per-tenant stats.
+        per-tenant stats; ``slo`` is an optional latency budget (seconds)
+        for policies/shed callbacks. Text queries need an embedder and are
+        resolved by ``DiverseVectorDB`` — the scheduler refuses them.
 
         Raises ``SchedulerSaturated`` on backpressure (retry after
         ``pump()``), ``RequestShed`` if the shed callback or the admission
@@ -327,12 +365,27 @@ class LaneScheduler:
         request must never dequeue and then abort serving mid-pump.
         ``try_submit`` is the non-raising variant.
         """
+        if isinstance(q, Query):
+            if (k is not None or eps is not None or ef is not None
+                    or method is not None or max_K is not None
+                    or tenant != "default" or slo is not None):
+                raise ValueError(
+                    "submit(Query) takes no overrides — set the fields on "
+                    "the Query itself (dataclasses.replace)")
+            query = q
+        else:
+            if k is None or eps is None:
+                raise TypeError("submit needs (q, k, eps) or a Query")
+            query = Query(q, k=int(k), eps=float(eps), method=method,
+                          tenant=tenant, slo=slo, ef=ef, max_K=max_K)
+        method = query.method
         if method is None:
             method = self.backend.methods[0]
         if method not in self.backend.methods:
             raise ValueError(
                 f"method {method!r} not served by this backend "
                 f"(supported: {self.backend.methods})")
+        k = int(query.k)
         if not 1 <= k <= self.backend.max_k:
             raise ValueError(
                 f"k={k} outside [1, {self.backend.max_k}] (backend max_k)")
@@ -341,7 +394,7 @@ class LaneScheduler:
             # probe before backpressure: a revalidated hit completes here —
             # no lane, no queue slot — so even a saturated scheduler serves
             # duplicated traffic (the whole point of the cache)
-            req = self._make_request(q, k, eps, ef, method, max_K, tenant)
+            req = self._make_request(query, method)
             served = self._cache_probe(req)
             if served is not None:
                 return served
@@ -350,7 +403,8 @@ class LaneScheduler:
                 f"{len(self.pending)} pending >= max_pending="
                 f"{self.max_pending}; pump() or shed load")
         if req is None:
-            req = self._make_request(q, k, eps, ef, method, max_K, tenant)
+            req = self._make_request(query, method)
+        tenant = req.tenant
         if self.shed is not None and self.shed(req, self):
             self.total_shed += 1
             self.tenant_shed[tenant] += 1
@@ -371,12 +425,12 @@ class LaneScheduler:
         self.policy.note_enqueued(req)
         return req
 
-    def _make_request(self, q, k, eps, ef, method, max_K,
-                      tenant) -> Request:
-        req = Request(rid=self._next_rid, q=np.asarray(q, np.float32),
-                      k=k, eps=eps, ef=int(ef or self.backend.default_ef),
-                      method=method, max_K=max_K, tenant=tenant,
-                      t_submit=self.clock())
+    def _make_request(self, query: Query, method: str) -> Request:
+        req = Request(rid=self._next_rid, q=query.embedding(),
+                      k=int(query.k), eps=float(query.eps),
+                      ef=int(query.ef or self.backend.default_ef),
+                      method=method, max_K=query.max_K, tenant=query.tenant,
+                      slo=query.slo, t_submit=self.clock())
         self._next_rid += 1   # dropped requests keep their rid (unique traces)
         return req
 
@@ -416,6 +470,49 @@ class LaneScheduler:
         except (SchedulerSaturated, RequestShed, RequestDeferred):
             return None
 
+    # -- write admission -----------------------------------------------------
+    def submit_write(self, op: str, payload) -> WriteTicket:
+        """Enqueue one corpus write (``op`` = ``"upsert"`` with ``[m, d]``
+        vectors, or ``"delete"`` with ids); returns its ``WriteTicket``.
+
+        Writes are *admitted* here and *applied* at the next pump boundary
+        (or an explicit ``apply_writes()``) — between backend rounds, never
+        mid-round — so reads and writes share one front door and one
+        ordering. Requires a write-capable backend (``MutableBackend`` /
+        ``DiverseVectorDB``)."""
+        if getattr(self.backend, "mutable_index", None) is None:
+            raise TypeError(
+                "this backend has no write path — serve through "
+                "DiverseVectorDB (or wrap the engine in a MutableBackend)")
+        if op not in ("upsert", "delete"):
+            raise ValueError(f"unknown write op {op!r}")
+        ticket = WriteTicket(op=op, payload=payload, wid=self._next_wid,
+                             t_submit=self.clock())
+        self._next_wid += 1
+        self.write_queue.append(ticket)
+        self.total_writes += 1
+        return ticket
+
+    def apply_writes(self) -> list[WriteTicket]:
+        """Apply every queued write to the backend's ``MutableIndex`` (in
+        admission order) and invalidate intersecting cache entries; returns
+        the applied tickets. Runs automatically at the top of ``pump()``."""
+        applied: list[WriteTicket] = []
+        index = self.backend.mutable_index
+        while self.write_queue:
+            t = self.write_queue.popleft()
+            if t.op == "upsert":
+                t.ids = index.upsert(t.payload)
+            else:
+                t.ids = np.asarray(t.payload, np.int64).reshape(-1)
+                index.delete(t.ids)
+            t.t_applied = self.clock()
+            if self.cache is not None:
+                self.total_cache_invalidations += self.cache.invalidate(t.ids)
+            self.total_writes_applied += 1
+            applied.append(t)
+        return applied
+
     def _refill(self) -> None:
         if self.admission == "lockstep" and self.inflight:
             return  # whole-batch regime: wait for the wave's straggler
@@ -435,7 +532,10 @@ class LaneScheduler:
         completed. Every harvested result's real ``SearchStats`` counters
         (expansions, rounds) and measured service time are folded into the
         cost model before the next refill, so policy predictions track the
-        live workload."""
+        live workload. Queued writes are applied first — the pump boundary
+        is the write boundary (contract 15)."""
+        if self.write_queue:
+            self.apply_writes()
         self._refill()
         done: list[Request] = []
         if self.backend.active_count():
@@ -469,9 +569,9 @@ class LaneScheduler:
         return done
 
     def drain(self) -> list[Request]:
-        """Pump until the queue and all lanes are empty."""
+        """Pump until the queues (read and write) and all lanes are empty."""
         out: list[Request] = []
-        while self.pending or self.inflight:
+        while self.pending or self.inflight or self.write_queue:
             out.extend(self.pump())
             self._refill()
         return out
@@ -553,6 +653,10 @@ class LaneScheduler:
           window's *hit* latencies only (probe + revalidation time);
           ``cache`` — the cache's own counters (``SemanticResultCache
           .stats()``), or None when serving uncached.
+        * ``writes`` / ``writes_applied`` / ``writes_pending`` — lifetime
+          write tickets admitted / applied, and the current write-queue
+          depth; ``cache_invalidations`` — lifetime cache entries evicted
+          because a write touched their stored frontier.
         * ``signatures`` / ``unplanned_signatures`` — backend compile
           signatures seen / seen after a freeze (recompile audit).
         * ``compressed`` / ``bytes_per_vector`` — the backend's corpus
@@ -615,6 +719,10 @@ class LaneScheduler:
             hit_p50_latency=_pctl(hit_lats, 50),
             hit_p99_latency=_pctl(hit_lats, 99),
             cache=self.cache.stats() if self.cache is not None else None,
+            writes=self.total_writes,
+            writes_applied=self.total_writes_applied,
+            writes_pending=len(self.write_queue),
+            cache_invalidations=self.total_cache_invalidations,
             compressed=self.backend_compressed,
             bytes_per_vector=float(
                 getattr(self.backend, "bytes_per_vector", 0.0)),

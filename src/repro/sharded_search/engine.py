@@ -117,6 +117,8 @@ class ShardedEngine:
         self.default_ef = default_ef
         self.resume = resume
         self.record_candidates = record_candidates
+        self._state_capacity = state_capacity
+        self._max_signatures = max_signatures
         self.B = int(num_lanes)
         self.n_total = index.num_shards * index.shard_size
         d = int(index.dim)
@@ -303,6 +305,44 @@ class ShardedEngine:
             K_final=int(self.K[lane]))
         return DiverseResult(ids.astype(np.int32), sc.astype(np.float32),
                              float(sc.sum()), stats)
+
+    # -- epoch swap ----------------------------------------------------------
+    def swap_index(self, index: ShardedIndex, all_vectors) -> None:
+        """Install a new epoch's sharded index (the mutable index's rebuild
+        swap). Only legal with no lane ``LANE_RUN``: the carried
+        ``ShardedSearchState`` is laid out per shard of the *old* corpus,
+        so it is re-initialized over the new one — the serving layer drains
+        in-flight lanes first (contract 15; finished-but-unrecycled lanes
+        keep their host-side results). The shard count and mesh are fixed
+        across swaps (the rebuild pads the corpus to divisibility instead);
+        the signature log carries across so recompile audits span epochs
+        (a grown shard legitimately traces new shapes)."""
+        if self.active_count():
+            raise RuntimeError("cannot swap the index under occupied lanes "
+                               "— drain in-flight lanes first (contract 15)")
+        if index.num_shards != self.index.num_shards:
+            raise ValueError(
+                f"epoch swap cannot change the shard count "
+                f"({self.index.num_shards} -> {index.num_shards}); pad the "
+                "corpus to divisibility instead")
+        self.index = index
+        self.compressed = index.scheme is not None
+        self.all_vectors = (np.asarray(all_vectors, np.float32)
+                            if self.compressed else jnp.asarray(all_vectors))
+        self.n_total = index.num_shards * index.shard_size
+        self.maxK = np.minimum(self.maxK, self.n_total)
+        if self.resume == "beam":
+            floor = beam_state_capacity(self.index, self.n_total,
+                                        self.L_factor)
+            cap = self._state_capacity or floor
+            if cap < floor:
+                raise ValueError(
+                    f"state_capacity={cap} is below the new epoch's "
+                    f"resumable-beam floor {floor}")
+            self.beam_state = init_sharded_state(self.index, self.B, cap,
+                                                 self.mesh, self.axis)
+            self.fresh[:] = True
+        self.signatures.note("swap", self.B, self.n_total)
 
     # -- prewarm ------------------------------------------------------------
     def prewarm(self, *, max_capacity: int | None = None, ks: tuple = (),

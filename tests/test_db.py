@@ -1,0 +1,174 @@
+"""DiverseVectorDB facade + frozen Query: read-path parity with the solo
+drivers, the write path through the scheduler, cache invalidation on
+writes, and bit-exactness of the deprecated wiring shims."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.pss import pss
+from repro.db import DiverseVectorDB, Query
+from repro.serve.scheduler import LaneScheduler
+
+
+@pytest.fixture(scope="module")
+def db(small_graph):
+    return DiverseVectorDB(index=small_graph, num_lanes=3, max_k=8,
+                           default_ef=10, prewarm=False)
+
+
+def test_search_matches_solo_pss(db, clustered_data, small_graph):
+    """With no writes the facade is a pass-through: results equal a fresh
+    per-query PSS driver bit-for-bit (the old entry points' contract)."""
+    rng = np.random.default_rng(0)
+    qs = (clustered_data[rng.integers(0, 600, 6)]
+          + 0.05 * rng.normal(size=(6, 24))).astype(np.float32)
+    for i, (k, eps) in enumerate([(5, 0.0), (3, -0.5)] * 3):
+        r = db.search(qs[i], k=k, eps=eps, ef=10)
+        solo = pss(small_graph, qs[i], k, eps, ef=10)
+        np.testing.assert_array_equal(r.ids, solo.ids)
+        np.testing.assert_array_equal(r.scores, solo.scores)
+        assert r.stats.certified == solo.stats.certified
+
+
+def test_search_batch_broadcast_and_queries(db, clustered_data):
+    qs = clustered_data[:4] + np.float32(0.01)
+    by_arr = db.search_batch(qs, k=3, eps=0.0, ef=10)
+    by_query = db.search_batch([Query(q, k=3, eps=0.0, ef=10) for q in qs])
+    for a, b in zip(by_arr, by_query):
+        np.testing.assert_array_equal(a.ids, b.ids)
+
+
+def test_query_is_frozen_and_validated(db):
+    q = Query(np.zeros(24, np.float32), k=3, eps=0.0)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        q.k = 5
+    with pytest.raises(ValueError):
+        db.search(q, k=5)            # overrides belong on the Query
+    with pytest.raises(TypeError):
+        db.search(np.zeros(24, np.float32))   # raw embedding needs k/eps
+    with pytest.raises(TypeError):
+        Query("what is diversity?", k=3, eps=0.0).embedding()  # no embed=
+
+
+def test_text_queries_via_embed(clustered_data):
+    emb = {"a": clustered_data[3], "b": clustered_data[9]}
+    db = DiverseVectorDB(clustered_data, "l2", M=8, num_lanes=2, max_k=8,
+                         default_ef=10, prewarm=False,
+                         embed=lambda t: emb[t])
+    r = db.search("a", k=3, eps=0.0, ef=10)
+    assert 3 in r.ids.tolist()
+
+
+def test_scheduler_submit_accepts_query(small_graph, clustered_data):
+    sched = LaneScheduler(small_graph, num_lanes=2, max_k=8, default_ef=10,
+                          prewarm=False)
+    q = clustered_data[5] + np.float32(0.01)
+    req = sched.submit(Query(q, k=3, eps=0.0, ef=10))
+    sched.drain()
+    solo = pss(small_graph, q, 3, 0.0, ef=10)
+    np.testing.assert_array_equal(req.result.ids, solo.ids)
+    with pytest.raises(ValueError):
+        sched.submit(Query(q, k=3, eps=0.0), k=5)  # no overrides on Query
+    with pytest.raises(TypeError):
+        sched.submit(q)                            # raw embedding needs k=
+
+
+def test_upsert_served_delete_filtered(clustered_data):
+    db = DiverseVectorDB(clustered_data, "l2", M=8, num_lanes=2, max_k=8,
+                         default_ef=10, prewarm=False)
+    rng = np.random.default_rng(4)
+    q = (clustered_data[11]
+         + 0.05 * rng.normal(size=24)).astype(np.float32)
+    ids = db.upsert(q[None])     # the query itself: top score, must win
+    assert int(ids[0]) == len(clustered_data)
+    r = db.search(q, k=3, eps=0.0, ef=10)
+    assert int(ids[0]) in r.ids.tolist()
+    assert db.delete(ids) == 1
+    r = db.search(q, k=3, eps=0.0, ef=10)
+    assert int(ids[0]) not in r.ids.tolist()
+    st = db.stats()
+    assert st["writes"] == 2 and st["writes_applied"] == 2
+    assert st["index"]["deleted"] == 1
+
+
+def test_write_admission_validates(db, small_graph):
+    with pytest.raises(ValueError):
+        db.scheduler.submit_write("replace", [0])
+    plain = LaneScheduler(small_graph, num_lanes=2, max_k=8,
+                          default_ef=10, prewarm=False)
+    with pytest.raises(TypeError):
+        plain.submit_write("upsert", np.zeros((1, 24), np.float32))
+
+
+def test_cache_invalidated_on_delete(clustered_data):
+    """A cached entry whose stored frontier holds a deleted id is evicted
+    at write time — the next repeat query misses and re-searches, so a
+    deleted id is never served from cache (no stale hits)."""
+    db = DiverseVectorDB(clustered_data, "l2", M=8, num_lanes=2, max_k=8,
+                         default_ef=10, cache_size=8, prewarm=False)
+    q = clustered_data[21].astype(np.float32)
+    first = db.search(q, k=3, eps=0.0, ef=10)
+    hit = db.search(q, k=3, eps=0.0, ef=10)
+    st = db.stats()
+    victim = int(first.ids[0])
+    if st["cache_hits"]:      # only certified results are admitted
+        np.testing.assert_array_equal(hit.ids, first.ids)
+    db.delete([victim])
+    st = db.stats()
+    assert st["cache_invalidations"] == st["cache"]["invalidated"]
+    after = db.search(q, k=3, eps=0.0, ef=10)
+    assert victim not in after.ids.tolist()
+    if st["cache_hits"]:
+        assert st["cache_invalidations"] >= 1
+
+
+def test_rebuild_and_epoch_swap(clustered_data):
+    db = DiverseVectorDB(clustered_data, "l2", M=8, num_lanes=2, max_k=8,
+                         default_ef=10, delta_capacity=64,
+                         background_rebuild=False, prewarm=False)
+    rng = np.random.default_rng(7)
+    db.upsert(rng.normal(size=(5, 24)).astype(np.float32))
+    assert db.rebuild(wait=True)
+    st = db.stats()
+    assert st["index"]["epoch"] == 1 and st["epoch_swaps"] == 1
+    assert st["index"]["delta"] == 0
+    q = clustered_data[2].astype(np.float32)
+    r = db.search(q, k=3, eps=0.0, ef=10)     # post-swap service is live
+    assert 2 in r.ids.tolist()
+
+
+def test_rag_graph_shim_bit_exact_and_deprecated(small_graph,
+                                                 clustered_data):
+    """RagPipeline(graph=...) still works, warns, and retrieves the same
+    ids as the db= wiring (the shim's bit-exactness promise)."""
+    from repro.configs import get_config
+    from repro.models import model as M
+    import jax
+    from repro.serve.rag import RagPipeline
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = M.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(1)
+    qs = (clustered_data[rng.integers(0, 600, 3)]
+          + 0.05 * rng.normal(size=(3, 24))).astype(np.float32)
+    old = RagPipeline(cfg, params, small_graph, k=3, eps=0.0, ef=10,
+                      num_lanes=2)
+    with pytest.warns(DeprecationWarning, match="DiverseVectorDB"):
+        ids_old, cert_old = old.retrieve(qs)
+    db = DiverseVectorDB(index=small_graph, num_lanes=2, max_k=16,
+                         default_ef=10, prewarm=False)
+    new = RagPipeline(cfg, params, k=3, eps=0.0, ef=10, db=db)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        ids_new, cert_new = new.retrieve(qs)
+    assert not [w for w in caught if "shim" in str(w.message)]
+    np.testing.assert_array_equal(ids_old, ids_new)
+    np.testing.assert_array_equal(cert_old, cert_new)
+    # the Query-native batch path returns the same ids again
+    ids_q, cert_q = new.retrieve([Query(q, k=3, eps=0.0, ef=10)
+                                  for q in qs])
+    np.testing.assert_array_equal(ids_new, ids_q)
+    with pytest.raises(ValueError):
+        new.retrieve([Query(qs[0], k=3, eps=0.0)], ks=[5])

@@ -49,3 +49,13 @@ def test_elastic_reshard_8to4():
 
 def test_small_mesh_dryrun_multifamily():
     _run("small_mesh_dryrun.py", timeout=560)
+
+
+def test_mutable_epoch_swap_straddle_4dev():
+    """Contract 15 on the mesh backend: upserts/deletes interleaved with
+    in-flight multi-round lanes on a 4-shard DiverseVectorDB; the delta
+    fills mid-run and the rebuilt sharded index swaps in between rounds.
+    Every result must be valid against exactly one corpus version (no
+    mixed-epoch sets, no tombstoned id served) and every certified lane's
+    merged frontier passes an independent Theorem-2 recheck."""
+    _run("mutable_straddle_check.py", timeout=900)
