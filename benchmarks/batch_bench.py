@@ -2,7 +2,7 @@
 admission on skewed workloads, open-system (Poisson) load curves, the
 fused-round kernel microbench, and the compressed-corpus scoring bench.
 
-Six modes:
+Seven modes:
 
 * ``--mode engine`` (default) — PR 1's headline comparison: at serving batch
   sizes the per-query pause/inspect/resume loop pays its host round-trips
@@ -65,6 +65,18 @@ Six modes:
   within 1% of a rebuild-from-scratch twin at the same (k, eps, ef)
   budget. All four gates drive the exit code (the CI ``mutable-smoke``
   job).
+
+* ``--mode diurnal`` — PR 10's elastic-serving point: a low -> peak -> low
+  Poisson arrival schedule served twice through ``DiverseVectorDB`` — once
+  with ``elastic=`` (the scheduler grows 2 -> 4 shards under the peak and
+  shrinks back once the queue empties, migrating in-flight lanes between
+  rounds) and once on a static 2-shard mesh. Per-phase p50/p99, scale-event
+  counts, and migration-pause ms are reported; the run gates on Theorem-2
+  parity of every captured certified frontier (0 violations), >= 1 grow +
+  >= 1 shrink, and elastic peak-phase p99 no worse than the static
+  small-mesh baseline (the CI ``elastic-smoke`` job). Needs >= 4 devices
+  (``XLA_FLAGS=--xla_force_host_platform_device_count=4`` on CPU);
+  ``--qps low,peak`` overrides the phase rates.
 
 * ``--mode kernel`` — PR 6's fused-round point: one ``fused_round_batch``
   dispatch vs the per-stage chain it replaced in the engine's PGS round
@@ -1132,6 +1144,210 @@ def _churn_payload(res: dict) -> dict:
     return {key(*params): point for params, point in sorted(res.items())}
 
 
+_DIURNAL_PHASES = ("low", "peak", "cooldown")
+
+
+def _drive_open_loop(db, queries, ks_, epss, arrivals, ef):
+    """Poisson-arrival driver shared by the diurnal runs: offer each request
+    at its arrival time (retrying backpressure), pump between arrivals, and
+    capture every completed lane's candidate frontier for the Theorem-2
+    audit. Returns ``(reqs, frontiers, shards_seen)``."""
+    sched = db.scheduler
+    reqs: dict = {}
+    frontiers: dict = {}
+    shards_seen = {int(db.backend.num_shards)}
+
+    def poll():
+        shards_seen.add(int(db.backend.num_shards))
+        for j, r in reqs.items():
+            if (r.result is not None and r.lane is not None
+                    and j not in frontiers):
+                frontiers[j] = db.backend.last_candidates[r.lane]
+
+    retry: list = []
+    t0 = time.monotonic()
+    i, total = 0, len(queries)
+    while i < total or retry or sched.pending or sched.inflight:
+        now = time.monotonic() - t0
+        while i < total and arrivals[i] <= now:
+            r = sched.try_submit(queries[i], int(ks_[i]), float(epss[i]),
+                                 ef=ef)
+            if r is None:
+                retry.append(i)
+            else:
+                reqs[i] = r
+            i += 1
+        still = []
+        for j in retry:
+            r = sched.try_submit(queries[j], int(ks_[j]), float(epss[j]),
+                                 ef=ef)
+            if r is None:
+                still.append(j)
+            else:
+                reqs[j] = r
+        retry = still
+        if sched.pending or sched.inflight:
+            sched.pump()
+            poll()
+        elif i < total:
+            time.sleep(min(max(arrivals[i] - now, 0.0), 0.01))
+    poll()
+    return reqs, frontiers, shards_seen
+
+
+def run_diurnal(n: int, lanes: int, ef: int, qps_low: float = 2.0,
+                qps_peak: float = 16.0, phase_requests=(6, 24, 6),
+                seed: int = 7) -> dict:
+    """Diurnal load (low -> peak -> low qps) against an elastic mesh and a
+    static small-mesh twin — PR 10's scale-event point (contract 16).
+
+    Both runs serve the *same* Poisson arrival schedule through the same
+    facade. The static twin stays on the 2-shard mesh; the elastic run
+    starts there with the 4-shard target prepared, and the scheduler's
+    ``ElasticPolicy`` must perform at least one grow during the peak and
+    one shrink once the queue empties — in-flight lanes straddling both.
+    Reported per phase: p50/p99 latency; per run: scale-event count and
+    migration-pause ms. Gates (exit nonzero on any):
+
+    * parity — every captured certified frontier passes an independent
+      Theorem-2 recheck (resharding is a capacity knob, never a results
+      knob), on both runs;
+    * elasticity — the elastic run records >= 1 grow and >= 1 shrink;
+    * capacity — peak-phase p99 with elastic must not exceed the static
+      small-mesh baseline (the grow is what absorbs the burst);
+    * conservation — served == offered on both runs.
+    """
+    import jax
+
+    from repro.core import theorems
+    from repro.db import DiverseVectorDB
+    from repro.serve.scheduler import ElasticPolicy
+
+    if jax.device_count() < 4:
+        raise SystemExit(
+            "--mode diurnal needs >= 4 devices for the 2 <-> 4 shard scale "
+            "path; on CPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=4")
+    x, metric = D.make_dataset("deep-like", n=n)
+    total = int(sum(phase_requests))
+    queries, _, epss, _ = make_skewed_workload(x, metric, total, seed)
+    k = 5
+    ks_ = np.full(total, k)
+    rng = np.random.default_rng(seed)
+    gaps, phase_of = [], []
+    for ph, (m, rate) in enumerate(zip(phase_requests,
+                                       (qps_low, qps_peak, qps_low))):
+        gaps.extend(rng.exponential(1.0 / rate, int(m)))
+        phase_of.extend([ph] * int(m))
+    arrivals = np.cumsum(gaps)
+
+    def build(elastic: bool) -> DiverseVectorDB:
+        policy = ElasticPolicy(shrink_sustain=4, cooldown=4) \
+            if elastic else None
+        return DiverseVectorDB(
+            x, metric, shards=("auto" if elastic else 2), elastic=policy,
+            num_lanes=lanes, max_k=k, M=8, background_rebuild=False,
+            prewarm=True,
+            backend_kw=dict(K0=16, resume="beam"),
+            scheduler_kw=dict(max_pending=total + 8, history=total + lanes,
+                              prewarm_capacity=n, prewarm_ks=(k,)))
+
+    res: dict = {}
+    static_peak_p99 = None
+    for kind in ("static", "elastic"):
+        db = build(kind == "elastic")
+        reqs, frontiers, shards_seen = _drive_open_loop(
+            db, queries, ks_, epss, arrivals, ef)
+        sched = db.scheduler
+        if kind == "elastic":
+            for _ in range(24):      # idle pumps: let the shrink fire
+                sched.pump()
+                if any(e["to_shards"] < e["from_shards"]
+                       for e in sched.scale_events):
+                    break
+            shards_seen.add(int(db.backend.num_shards))
+        xv = db.index.float_view()
+        cert_bad = audited = 0
+        for j, r in reqs.items():
+            if r.result is None or not r.result.stats.certified:
+                continue
+            fr = frontiers.get(j)
+            if fr is None:           # lane reharvested before the poll
+                continue
+            audited += 1
+            ok, sel = theorems.theorem2_recheck(xv, metric, fr[0], fr[1],
+                                                float(r.eps), int(r.k))
+            if not ok or not np.array_equal(np.asarray(sel),
+                                            np.asarray(r.result.ids)):
+                cert_bad += 1
+        lats: dict = {ph: [] for ph in _DIURNAL_PHASES}
+        for j, r in reqs.items():
+            lats[_DIURNAL_PHASES[phase_of[j]]].append(
+                r.t_done - r.t_submit)
+        served = sum(1 for r in reqs.values() if r.result is not None)
+        events = list(getattr(sched, "scale_events", []))
+        grows = sum(1 for e in events if e["to_shards"] > e["from_shards"])
+        shrinks = sum(1 for e in events
+                      if e["to_shards"] < e["from_shards"])
+        pauses_ms = [e["pause_s"] * 1e3 for e in events]
+        peak_p99 = percentile(lats["peak"], 99)
+        conserve_ok = served == total
+        violation = bool(cert_bad or not conserve_ok)
+        if kind == "static":
+            static_peak_p99 = peak_p99
+        else:
+            if not (grows >= 1 and shrinks >= 1):
+                violation = True
+            if peak_p99 > static_peak_p99:
+                violation = True
+        point = dict(
+            kind=kind, qps_low=qps_low, qps_peak=qps_peak,
+            requests=total, served=served,
+            phases={ph: dict(p50=percentile(lats[ph], 50),
+                             p99=percentile(lats[ph], 99),
+                             served=len(lats[ph]))
+                    for ph in _DIURNAL_PHASES},
+            scale_events=len(events), grow_events=grows,
+            shrink_events=shrinks,
+            migration_pause_ms_max=max(pauses_ms, default=0.0),
+            migration_pause_ms_mean=float(np.mean(pauses_ms))
+            if pauses_ms else 0.0,
+            shards_seen=sorted(shards_seen),
+            shards_final=int(db.backend.num_shards),
+            cert_soundness_violations=cert_bad, audited=audited)
+        if kind == "elastic":
+            point["static_peak_p99"] = static_peak_p99
+        if violation:
+            point["violation"] = True
+        tag = f"diurnal/qps{qps_low:g}-{qps_peak:g}/{kind}"
+        for ph in _DIURNAL_PHASES:
+            emit(f"{tag}/{ph}_p99", point["phases"][ph]["p99"] * 1e3,
+                 f"ms;p50={point['phases'][ph]['p50'] * 1e3:.1f}ms;"
+                 f"served={point['phases'][ph]['served']}")
+        emit(f"{tag}/scale_events", len(events),
+             f"grow={grows};shrink={shrinks};"
+             f"pause_max={point['migration_pause_ms_max']:.2f}ms;"
+             f"shards={sorted(shards_seen)}")
+        emit(f"{tag}/violations", int(violation),
+             f"cert={cert_bad};audited={audited};"
+             f"conservation_ok={conserve_ok}")
+        if violation:
+            print(f"# DIURNAL VIOLATION [{kind}]: cert={cert_bad} "
+                  f"conservation={conserve_ok} grow={grows} "
+                  f"shrink={shrinks} peak_p99={peak_p99:.3f}s "
+                  f"static_peak_p99={static_peak_p99}")
+        res[(qps_low, qps_peak, kind)] = point
+    return res
+
+
+def _diurnal_payload(res: dict) -> dict:
+    """Point key: ``diurnal@qps<low>-<peak>@<elastic|static>`` — the
+    elastic run and its static small-mesh twin at the same arrival
+    schedule sit side by side."""
+    return {f"diurnal@qps{lo:g}-{hi:g}@{kind}": point
+            for (lo, hi, kind), point in sorted(res.items())}
+
+
 # -------------------------------------------------------------- trend json --
 
 BENCH_SCHEMA = 2
@@ -1203,7 +1419,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="engine",
                     choices=["engine", "skewed", "open", "kernel",
-                             "quantized", "churn"])
+                             "quantized", "churn", "diurnal"])
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke sizes (small n, few requests)")
     ap.add_argument("--n", type=int, default=None)
@@ -1279,6 +1495,24 @@ def main(argv=None):
         if args.json:
             write_trend_json(args.json, "kernel", _kernel_payload(res))
         return 1 if res["parity_violations"] else 0
+    if args.mode == "diurnal":
+        # the peak must SATURATE the small mesh (arrivals well above its
+        # lane throughput) so queueing dominates peak latency — that is
+        # the regime where the grow pays; an unsaturated peak makes both
+        # runs idle-bound and the comparison pure host noise
+        qs = [float(q) for q in
+              (args.qps or ("2,48" if args.tiny else "2,48")).split(",")]
+        if len(qs) != 2 or qs[0] >= qs[1]:
+            raise SystemExit("--mode diurnal takes --qps low,peak "
+                             "(low < peak)")
+        res = run_diurnal(n=n, lanes=lanes, ef=args.ef, qps_low=qs[0],
+                          qps_peak=qs[1],
+                          phase_requests=((4, 24, 4) if args.tiny
+                                          else (8, 32, 8)),
+                          seed=args.seed)
+        if args.json:
+            write_trend_json(args.json, "diurnal", _diurnal_payload(res))
+        return 1 if any(v.get("violation") for v in res.values()) else 0
     if args.mode == "churn":
         qps = float((args.qps or ("4" if args.tiny else "8")).split(",")[0])
         res = run_churn(n=n, requests=requests, lanes=lanes, ef=args.ef,

@@ -135,3 +135,43 @@ class LaneBackend(Protocol):
                 widths: tuple = ()):
         """Compile the backend's signature ladder ahead of serving."""
         ...
+
+
+@runtime_checkable
+class RescalableBackend(LaneBackend, Protocol):
+    """A ``LaneBackend`` whose capacity can follow traffic (contract 16).
+
+    Implemented by ``ShardedEngine`` (and delegated through
+    ``index.mutable.MutableBackend``); the single-host ``ProgressiveEngine``
+    is not rescalable, so the scheduler's elastic trigger feature-detects
+    this protocol and stays inert otherwise. The contract mirrors the
+    epoch swap's two-phase shape, but the barrier is quiesce-FREE:
+
+    * ``prepare_rescale`` pays the expensive halves (repartitioning the
+      corpus, compiling the target mesh's dispatch ladder) ahead of load;
+    * ``rescale`` then migrates every in-flight lane's search state to the
+      prepared mesh *between rounds* — occupied lanes resume their budget
+      ladder on the new topology, nothing drains, and a migrated lane's
+      certified result still passes ``theorem2_recheck``. Resharding is a
+      capacity knob, never a results knob.
+    """
+
+    @property
+    def num_shards(self) -> int:
+        """Shard count of the mesh currently serving."""
+        ...
+
+    def prepare_rescale(self, shards: int, mesh, index=None, *,
+                        prewarm: bool = True):
+        """Build + prewarm an elastic target mesh ahead of the scale
+        event."""
+        ...
+
+    def rescale_options(self) -> tuple[int, ...]:
+        """Shard counts servable right now (current + prepared targets)."""
+        ...
+
+    def rescale(self, shards: int) -> bool:
+        """Migrate corpus + in-flight lanes to the prepared ``shards``
+        mesh; False if already there."""
+        ...

@@ -48,7 +48,17 @@ class DiverseVectorDB:
       builds a mesh-sharded ``ShardedEngine`` over that many shards
       (``mesh=`` optionally supplies the device mesh; by default one is
       built over ``shards`` devices on the ``"data"`` axis). The corpus is
-      padded with tombstoned rows to split evenly.
+      padded with tombstoned rows to split evenly. ``shards="auto"`` picks
+      the largest power of two the visible devices allow — or, under
+      ``elastic=``, half of it, leaving headroom to grow.
+    * ``elastic=`` (True or a ``serve.scheduler.ElasticPolicy``) makes the
+      sharded mesh follow traffic (contract 16): the two standard targets
+      (the device-count power of two and its half) are resharded and
+      prewarmed at construction, and the scheduler migrates the corpus and
+      every in-flight lane between them on sustained queue depth — a
+      quiesce-free scale event at the pump boundary. The corpus is padded
+      to divisibility by the *largest* target so every mesh splits the
+      same rows.
     * ``quantized`` in {None, "int8", "pq"} stores the searched corpus
       compressed (exact float rerank before certificates, contract 13;
       the delta segment keeps int8 codes too and is always float-reranked).
@@ -67,19 +77,49 @@ class DiverseVectorDB:
 
     def __init__(self, vectors=None, metric: str = "l2", *,
                  index: FlatGraph | None = None,
-                 shards: int | None = None, quantized: str | None = None,
+                 shards: int | str | None = None,
+                 quantized: str | None = None,
                  cache_size: int = 0, policy="fifo", cost_model=None,
                  embed=None, num_lanes: int = 8, max_k: int = 16,
                  default_ef: int = 40, M: int = 16, builder: str = "knng",
                  delta_capacity: int = 256, background_rebuild: bool = True,
                  mesh=None, axis: str = "data", prewarm: bool = True,
-                 seed: int = 0, backend_kw: dict | None = None,
+                 elastic=None, seed: int = 0, backend_kw: dict | None = None,
                  scheduler_kw: dict | None = None):
         self.embed = embed
+        elastic = elastic or None
+        shard_align = None
+        elastic_targets: tuple[int, ...] = ()
+        if shards == "auto" or elastic is not None:
+            import jax
+            p_big = 1
+            while p_big * 2 <= jax.device_count():
+                p_big *= 2
+        if shards == "auto":
+            # leave headroom to grow when elastic; otherwise use the mesh
+            shards = max(1, p_big // 2) if elastic is not None else p_big
+        if elastic is not None:
+            if shards is None:
+                raise ValueError("elastic= needs a sharded backend — pass "
+                                 "shards=int or shards='auto'")
+            if p_big < 2:
+                raise ValueError(
+                    "elastic serving needs >= 2 visible devices to scale "
+                    f"between (found {jax.device_count()})")
+            p_small = p_big // 2
+            if shards not in (p_small, p_big):
+                raise ValueError(
+                    "elastic serving scales between the standard targets "
+                    f"{p_small} and {p_big} on this host; start on one of "
+                    f"them (got shards={shards})")
+            elastic_targets = tuple(t for t in (p_small, p_big)
+                                    if t != shards)
+            shard_align = p_big
         self.index = MutableIndex(
             vectors, metric, graph=index, delta_capacity=delta_capacity,
             M=M, builder=builder, shards=shards, quantized=quantized,
-            background=background_rebuild, seed=seed)
+            background=background_rebuild, seed=seed,
+            shard_align=shard_align)
         backend_kw = dict(backend_kw or {})
         if shards is not None:
             from repro.compat import make_mesh
@@ -100,10 +140,22 @@ class DiverseVectorDB:
                 self.index.graph, num_lanes, max_k=max_k,
                 default_ef=default_ef, **backend_kw)
         self.backend = MutableBackend(engine, self.index)
+        skw = dict(scheduler_kw or {})
         self.scheduler = LaneScheduler(
             backend=self.backend, policy=policy, cost_model=cost_model,
-            cache_size=cache_size, prewarm=prewarm,
-            **dict(scheduler_kw or {}))
+            cache_size=cache_size, prewarm=prewarm, elastic=elastic, **skw)
+        # Pay the scale-event costs up front (contract 16): reshard the
+        # corpus onto each elastic target and prewarm its dispatch ladder,
+        # so the scheduler's trigger only ever migrates between rounds.
+        # Serving capacity follows the mesh: each target's lane count
+        # scales with its device count (floor 1), so a grow adds lanes —
+        # admitting queued requests — and a shrink returns them.
+        for t in elastic_targets:
+            self.backend.prepare_rescale(
+                t, make_mesh((t,), (axis,)), M=M, builder=builder,
+                prewarm=prewarm, max_capacity=skw.get("prewarm_capacity"),
+                ks=tuple(skw.get("prewarm_ks") or ()),
+                num_lanes=max(1, num_lanes * t // shards))
 
     @property
     def cache(self):

@@ -1,12 +1,28 @@
-"""Elastic scaling: move a training state between differently-sized meshes.
+"""Elastic scaling: move state between differently-sized meshes.
 
 Checkpoints are logical (keyed by param path, device-layout-free), so
 elastic restore = rebuild shardings for the new mesh and device_put. This
-module adds the in-memory variant (``reshard_tree``) and the planning helper
-(``plan``) a controller would call when the fleet grows/shrinks:
+module is the in-memory variant a controller calls when the fleet grows or
+shrinks: ``plan`` summarizes the mesh change, ``reshard_tree`` moves a
+pytree across it. Three tree families are supported:
 
-    new_mesh = make_mesh((new_dp, new_tp), ("data", "model"))
-    params = reshard_tree(params, cfg, new_mesh)
+* **model params** (the training stack): re-place per the name-based
+  sharding rules — needs the ``cfg=`` the rules key on;
+* **``ShardedIndex``** (the serving corpus): repartition the stacked row
+  arrays across the new shard count — quantized codes/scales are re-blocked
+  exactly, per-shard graphs rebuilt deterministically
+  (``sharded_search.reshard_index``);
+* **``ShardedSearchState``** (in-flight lane beams): re-bucket every lane's
+  per-shard queue + visited set by global id
+  (``sharded_search.migrate_sharded_state``), so paused searches resume on
+  the new topology without redoing expansions.
+
+The serving index/state paths need no ``ModelConfig`` — their layout is
+fully determined by the tree itself plus the target mesh:
+
+    new_mesh = make_mesh((4,), ("data",))
+    idx4 = reshard_tree(idx2, new_mesh, all_vectors=x)
+    st4 = reshard_tree(st2, new_mesh, capacity=idx4_capacity)
 
 Works for any mesh whose axis sizes still divide the sharded dims — the
 same divisibility rules the baseline sharding layer enforces.
@@ -17,25 +33,63 @@ from typing import Any
 
 import jax
 
-from repro.configs.base import ModelConfig
 from repro.distributed import sharding as sh
 
 
-def plan(cfg: ModelConfig, old_mesh, new_mesh) -> dict:
-    """Summary of what changes between meshes (for logs/controllers)."""
+def plan(old_mesh, new_mesh) -> dict:
+    """Summary of what changes between meshes (for logs/controllers).
+
+    Pure mesh diff — no model config: ``dp_change``/``tp_change`` are the
+    data/model axis growth ratios and ``axis_changes`` covers every named
+    axis. ``plan(a, b)`` and ``plan(b, a)`` are exact inverses: ``old`` and
+    ``new`` swap and every ratio is reciprocal.
+    """
+    old = dict(zip(old_mesh.axis_names, old_mesh.devices.shape))
+    new = dict(zip(new_mesh.axis_names, new_mesh.devices.shape))
+    changes = {a: new.get(a, 1) / old.get(a, 1)
+               for a in sorted(set(old) | set(new))}
     return dict(
-        old=dict(zip(old_mesh.axis_names, old_mesh.devices.shape)),
-        new=dict(zip(new_mesh.axis_names, new_mesh.devices.shape)),
-        dp_change=new_mesh.shape.get("data", 1) / old_mesh.shape.get("data", 1),
-        tp_change=new_mesh.shape.get("model", 1)
-        / old_mesh.shape.get("model", 1),
+        old=old,
+        new=new,
+        dp_change=changes.get("data", 1.0),
+        tp_change=changes.get("model", 1.0),
+        axis_changes=changes,
     )
 
 
-def reshard_tree(tree: Any, cfg: ModelConfig, new_mesh,
-                 spec_fn=sh.param_spec_tree) -> Any:
-    """Re-place a (param-like) tree onto ``new_mesh`` per the sharding rules."""
-    specs = spec_fn(cfg, tree, new_mesh)
-    shards = sh.to_named(specs, new_mesh)
+def reshard_tree(tree: Any, new_mesh=None, cfg=None,
+                 spec_fn=None, *, axis: str = "data",
+                 shards: int | None = None, all_vectors=None,
+                 M: int | None = None, builder: str = "knng",
+                 capacity: int | None = None) -> Any:
+    """Re-place ``tree`` onto ``new_mesh`` (or a bare ``shards=`` count).
+
+    Dispatches on the tree type (see module docstring). ``cfg``/``spec_fn``
+    belong to the model-param path only; ``all_vectors``/``M``/``builder``
+    to ``ShardedIndex`` (quantized corpora and non-default graph builds);
+    ``capacity`` to ``ShardedSearchState`` (the target queue width —
+    default keeps the current one). The serving paths accept ``shards=``
+    without any mesh for host-side round-trip testing.
+    """
+    from repro.sharded_search.search import (ShardedIndex,
+                                             ShardedSearchState,
+                                             migrate_sharded_state,
+                                             reshard_index)
+
+    if shards is None:
+        if new_mesh is None:
+            raise ValueError("reshard_tree needs a new_mesh or shards=")
+        shards = int(dict(zip(new_mesh.axis_names,
+                              new_mesh.devices.shape)).get(axis, 1))
+    if isinstance(tree, ShardedIndex):
+        return reshard_index(tree, shards, all_vectors, M=M, builder=builder)
+    if isinstance(tree, ShardedSearchState):
+        return migrate_sharded_state(tree, shards, capacity,
+                                     mesh=new_mesh, axis=axis)
+    if cfg is None:
+        raise ValueError("resharding a model-param tree needs cfg= "
+                         "(the sharding rules key on it)")
+    specs = (spec_fn or sh.param_spec_tree)(cfg, tree, new_mesh)
+    named = sh.to_named(specs, new_mesh)
     return jax.tree.map(
-        lambda x, s: jax.device_put(jax.numpy.asarray(x), s), tree, shards)
+        lambda x, s: jax.device_put(jax.numpy.asarray(x), s), tree, named)

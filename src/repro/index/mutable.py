@@ -94,6 +94,7 @@ class MutableIndex:
                  graph: FlatGraph | None = None,
                  delta_capacity: int = 256, M: int = 16,
                  builder: str = "knng", shards: int | None = None,
+                 shard_align: int | None = None,
                  quantized: str | None = None, scale_rows: int = 8,
                  background: bool = True, seed: int = 0):
         if builder not in ("knng", "hnsw"):
@@ -129,6 +130,18 @@ class MutableIndex:
         self.M = int(M)
         self.builder = builder
         self.shards = int(shards) if shards else None
+        #: elastic alignment: pad epochs to divisibility by the LARGEST
+        #: shard count the serving layer may rescale to, so every prepared
+        #: target splits the same rows evenly (defaults to ``shards``)
+        self.shard_align = int(shard_align) if shard_align else None
+        if self.shard_align is not None:
+            if not self.shards:
+                raise ValueError("shard_align only applies to sharded "
+                                 "corpora (pass shards=)")
+            if self.shard_align % self.shards:
+                raise ValueError(
+                    f"shard_align={self.shard_align} must be a multiple of "
+                    f"shards={self.shards}")
         self.quantized = quantized
         self.scale_rows = int(scale_rows)
         self.background = bool(background)
@@ -415,7 +428,7 @@ class MutableIndex:
 
     # -- rebuild + epoch swap ------------------------------------------------
     def _pad_for_shards(self) -> None:
-        pad = (-self._n) % self.shards
+        pad = (-self._n) % (self.shard_align or self.shards)
         if pad:
             self._grow(pad)
             self._del[self._n:self._n + pad] = True  # permanent tombstones
@@ -581,6 +594,34 @@ class MutableBackend:
     def prewarm(self, **kw) -> None:
         self.inner.prewarm(**kw)
 
+    # -- elastic delegation (only when the inner engine is rescalable) -------
+    def __getattr__(self, name):
+        # defined dynamically so a MutableBackend over a non-rescalable
+        # engine does NOT satisfy core.backend.RescalableBackend — the
+        # runtime_checkable isinstance probes these attributes
+        if name in ("num_shards", "prepare_rescale", "rescale_options"):
+            return getattr(self.inner, name)
+        if name == "rescale":
+            inner_rescale = self.inner.rescale
+
+            def rescale(shards: int) -> bool:
+                ok = inner_rescale(shards)
+                if ok and self.mutable_index.shards is not None:
+                    # future rebuilds must target the mesh now serving
+                    self.mutable_index.shards = int(shards)
+                    self.mutable_index.sharded = self.inner.index
+                if ok:
+                    # lane count may follow the mesh: mirror the merged
+                    # frontier bookkeeping onto the new width
+                    B = int(self.inner.num_lanes)
+                    for lst in (self.last_candidates, self.last_meta):
+                        del lst[B:]
+                        lst.extend([None] * (B - len(lst)))
+                return ok
+
+            return rescale
+        raise AttributeError(name)
+
     # -- the write-aware surface ---------------------------------------------
     def maybe_swap(self) -> bool:
         """Install a pending epoch swap if the engine is idle (between
@@ -594,6 +635,19 @@ class MutableBackend:
             # the engine's rerank corpus is the epoch snapshot — rows the
             # new index covers, not newer delta rows appended since
             n_epoch = art.num_shards * art.shard_size
+            if art.num_shards != getattr(self.inner, "num_shards",
+                                         art.num_shards):
+                # a rescale landed while the background rebuild ran: the
+                # rebuilt epoch targets the old mesh — repartition it onto
+                # the serving shard count (same rows, exact re-blocking)
+                from repro.sharded_search.search import reshard_index
+                art = reshard_index(
+                    art, int(self.inner.num_shards),
+                    self.mutable_index.float_view()[:n_epoch],
+                    M=self.mutable_index.M,
+                    builder=self.mutable_index.builder)
+                self.mutable_index.sharded = art
+                self.mutable_index.shards = int(self.inner.num_shards)
             self.inner.swap_index(
                 art, self.mutable_index.float_view()[:n_epoch])
         else:

@@ -17,6 +17,9 @@ mesh's data axis and the *same* scheduler drives a
 ``sharded_search.engine.ShardedEngine`` backend (shard-local beams,
 tournament merge, per-lane progressive budgets). On CPU, force host
 devices first, e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+``--elastic`` instead starts on half the available power-of-two devices and
+lets the scheduler grow/shrink the shard count under sustained queue depth,
+migrating in-flight lanes between rounds (contract 16).
 
 ``--cache-size N`` enables the semantic result cache (``serve.cache``):
 repeated or near-duplicate queries are answered from a certified cached
@@ -48,7 +51,15 @@ from repro.serve.rag import RagPipeline
 
 def _build_db(docs: np.ndarray, args, cost_model) -> DiverseVectorDB:
     shards = args.mesh_shards or None
-    if shards:
+    if args.elastic:
+        if args.mesh_shards:
+            raise SystemExit("--elastic picks its own shard counts "
+                             "(shards='auto'); drop --mesh-shards")
+        if jax.device_count() < 2:
+            raise SystemExit("--elastic needs >= 2 devices (set XLA_FLAGS="
+                             "--xla_force_host_platform_device_count=4)")
+        shards = "auto"
+    if shards and shards != "auto":
         if shards & (shards - 1):
             raise SystemExit(f"--mesh-shards {shards} must be a power of "
                              "two (tournament merge)")
@@ -59,7 +70,7 @@ def _build_db(docs: np.ndarray, args, cost_model) -> DiverseVectorDB:
     return DiverseVectorDB(docs, "ip", shards=shards, num_lanes=args.lanes,
                            max_k=max(args.k, 16), M=8, policy=args.policy,
                            cache_size=args.cache_size, cost_model=cost_model,
-                           prewarm=args.prewarm)
+                           prewarm=args.prewarm, elastic=args.elastic or None)
 
 
 def main():
@@ -83,6 +94,13 @@ def main():
     ap.add_argument("--mesh-shards", type=int, default=0,
                     help="serve retrieval from a P-way sharded mesh backend "
                          "(0 = single-host engine)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="elastic mesh serving (shards='auto'): start on "
+                         "half the available power-of-two devices and let "
+                         "the scheduler grow/shrink the shard count under "
+                         "sustained queue depth (requires --engine "
+                         "scheduler; in-flight lanes migrate between "
+                         "rounds, contract 16)")
     ap.add_argument("--cache-size", type=int, default=0,
                     help="semantic result cache capacity: repeated/near-"
                          "duplicate queries are served from certified "
@@ -103,8 +121,9 @@ def main():
 
     rng = np.random.default_rng(0)
     docs = rng.normal(size=(args.corpus, args.dim)).astype(np.float32)
-    if args.mesh_shards and args.engine != "scheduler":
-        raise SystemExit("--mesh-shards requires --engine scheduler")
+    if (args.mesh_shards or args.elastic) and args.engine != "scheduler":
+        raise SystemExit("--mesh-shards/--elastic require --engine "
+                         "scheduler")
     if args.upserts and args.engine != "scheduler":
         raise SystemExit("--upserts requires --engine scheduler")
     cfg = get_config(args.arch).reduced()
@@ -156,8 +175,13 @@ def main():
               f"rebuilds={idx['rebuilds']}")
     if args.engine == "scheduler":
         stats = pipe.scheduler.latency_stats()
-        where = (f"mesh[{args.mesh_shards}]" if args.mesh_shards
-                 else "single-host")
+        if args.elastic:
+            where = (f"elastic-mesh[{stats['shards']}] "
+                     f"scale_events={stats['scale_events']}")
+        elif args.mesh_shards:
+            where = f"mesh[{args.mesh_shards}]"
+        else:
+            where = "single-host"
         print(f"scheduler[{where}|{stats['policy']}]: "
               f"p50={stats['p50_latency'] * 1e3:.1f}ms "
               f"p99={stats['p99_latency'] * 1e3:.1f}ms "

@@ -59,7 +59,8 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.backend import LaneBackend, LaneRequest
+from repro.core.backend import (LaneBackend, LaneRequest,
+                                RescalableBackend)
 from repro.core.batch_progressive import ProgressiveEngine
 from repro.core.graph import FlatGraph
 from repro.core.pgs import DiverseResult
@@ -179,6 +180,31 @@ class WriteTicket:
         return self.t_applied is not None
 
 
+@dataclasses.dataclass
+class ElasticPolicy:
+    """When to move a rescalable backend between its prepared meshes.
+
+    The scheduler samples queue depth at every pump boundary (the same
+    between-rounds point the epoch swap uses — but the scale event is
+    quiesce-free: in-flight lanes migrate, nothing drains). A signal must
+    hold for ``sustain`` consecutive pumps before it fires, and after any
+    scale event ``cooldown`` pumps pass before the next — both guards keep
+    a bursty queue from thrashing the mesh.
+
+    * grow: ``pending >= grow_depth`` (default: the backend's lane count —
+      a full extra wave is waiting) sustained ``sustain`` pumps -> rescale
+      to the next-larger prepared shard count.
+    * shrink: ``pending <= shrink_depth`` sustained ``shrink_sustain``
+      pumps -> next-smaller prepared count. In-flight lanes do NOT block a
+      shrink; they straddle it and resume on the smaller mesh.
+    """
+    grow_depth: int | None = None      # None -> backend.num_lanes
+    shrink_depth: int = 0
+    sustain: int = 2
+    shrink_sustain: int = 8
+    cooldown: int = 8
+
+
 def percentile(xs: list[float], p: float) -> float:
     """p-th percentile of a (possibly empty) sample — the summary helper
     shared with benchmarks so reported stats can't drift."""
@@ -253,6 +279,7 @@ class LaneScheduler:
                  cache: SemanticResultCache | None = None,
                  cache_size: int = 0,
                  shed: Callable[[Request, "LaneScheduler"], bool] | None = None,
+                 elastic: "ElasticPolicy | bool | None" = None,
                  prewarm: bool = True,
                  prewarm_capacity: int | None = None,
                  prewarm_ks: tuple = (), prewarm_widths: tuple = (),
@@ -335,6 +362,22 @@ class LaneScheduler:
         self._next_rid = 0
         self._next_wid = 0
         self.steps = 0
+        if elastic:
+            if not isinstance(backend, RescalableBackend):
+                raise ValueError(
+                    "elastic= needs a rescalable backend (a ShardedEngine, "
+                    "bare or under MutableBackend) with prepared targets — "
+                    "the single-host engine has no mesh to scale")
+            self.elastic = ElasticPolicy() if elastic is True else elastic
+        else:
+            self.elastic = None
+        #: one dict per scale event: when, from/to shard counts, the
+        #: migration pause (seconds the pump boundary spent inside
+        #: ``backend.rescale``), and the queue state that triggered it
+        self.scale_events: list[dict] = []
+        self._elastic_hot = 0
+        self._elastic_cold = 0
+        self._elastic_cooldown = 0
         if prewarm:
             self.backend.prewarm(max_capacity=prewarm_capacity,
                                  ks=prewarm_ks, widths=prewarm_widths)
@@ -525,6 +568,52 @@ class LaneScheduler:
             req.lane = int(lane)
             self.inflight[int(lane)] = req
 
+    def _maybe_rescale(self) -> None:
+        """Elastic scale trigger, run at the pump boundary (between backend
+        rounds — every lane is paused-but-resumable there, which is what
+        makes the quiesce-free migration legal)."""
+        pol = self.elastic
+        if pol is None:
+            return
+        if self._elastic_cooldown > 0:
+            self._elastic_cooldown -= 1
+            return
+        depth = len(self.pending)
+        grow_depth = (pol.grow_depth if pol.grow_depth is not None
+                      else self.num_lanes)
+        if depth >= grow_depth:
+            self._elastic_hot += 1
+            self._elastic_cold = 0
+        elif depth <= pol.shrink_depth:
+            self._elastic_cold += 1
+            self._elastic_hot = 0
+        else:
+            self._elastic_hot = self._elastic_cold = 0
+        cur = int(self.backend.num_shards)
+        options = self.backend.rescale_options()
+        target = None
+        if self._elastic_hot >= pol.sustain:
+            bigger = [p for p in options if p > cur]
+            target = min(bigger) if bigger else None
+        elif self._elastic_cold >= pol.shrink_sustain and not self.inflight:
+            # shrink only when fully idle: targets prepared with fewer
+            # lanes then always get their clean lane shrink too (the
+            # engine never drops an occupied lane)
+            smaller = [p for p in options if p < cur]
+            target = max(smaller) if smaller else None
+        if target is None:
+            return
+        t0 = self.clock()
+        if self.backend.rescale(target):
+            self.scale_events.append(dict(
+                t=t0, from_shards=cur, to_shards=int(target),
+                pause_s=self.clock() - t0, pending=depth,
+                inflight=len(self.inflight)))
+            # serving capacity may follow the mesh (lane-scaled targets)
+            self.num_lanes = int(self.backend.num_lanes)
+        self._elastic_hot = self._elastic_cold = 0
+        self._elastic_cooldown = pol.cooldown
+
     # -- serving loop -------------------------------------------------------
     def pump(self) -> list[Request]:
         """Refill freed lanes (in policy order), advance the backend one
@@ -533,9 +622,13 @@ class LaneScheduler:
         (expansions, rounds) and measured service time are folded into the
         cost model before the next refill, so policy predictions track the
         live workload. Queued writes are applied first — the pump boundary
-        is the write boundary (contract 15)."""
+        is the write boundary (contract 15) and, under ``elastic=``, the
+        scale boundary (contract 16: in-flight lanes migrate, nothing
+        drains)."""
         if self.write_queue:
             self.apply_writes()
+        if self.elastic is not None:
+            self._maybe_rescale()
         self._refill()
         done: list[Request] = []
         if self.backend.active_count():
@@ -659,6 +752,11 @@ class LaneScheduler:
           because a write touched their stored frontier.
         * ``signatures`` / ``unplanned_signatures`` — backend compile
           signatures seen / seen after a freeze (recompile audit).
+        * ``shards`` — the rescalable backend's current mesh shard count
+          (None on a single-host backend); ``scale_events`` — lifetime
+          elastic scale events (grow + shrink; the per-event records,
+          including migration pause, are in ``scale_events`` the list
+          attribute).
         * ``compressed`` / ``bytes_per_vector`` — the backend's corpus
           representation: whether rounds score a quantized corpus, and the
           stored bytes per vector (the memory-scaling stat).
@@ -728,4 +826,8 @@ class LaneScheduler:
                 getattr(self.backend, "bytes_per_vector", 0.0)),
             signatures=len(self.backend.signature_log),
             unplanned_signatures=len(self.backend.signature_log.unplanned),
+            shards=(int(self.backend.num_shards)
+                    if isinstance(self.backend, RescalableBackend)
+                    else None),
+            scale_events=len(self.scale_events),
         )

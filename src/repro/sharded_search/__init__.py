@@ -6,6 +6,8 @@ from repro.sharded_search.search import (  # noqa: F401
     build_sharded_index,
     exact_rerank_frontier,
     init_sharded_state,
+    migrate_sharded_state,
+    reshard_index,
     resume_jit_cache_sizes,
     sharded_diverse_resume,
     sharded_diverse_search,

@@ -65,6 +65,8 @@ from repro.core.pgs import DiverseResult
 from repro.core.progressive import SearchStats
 from repro.sharded_search.search import (ShardedIndex, beam_state_capacity,
                                          init_sharded_state,
+                                         migrate_sharded_state,
+                                         reshard_index,
                                          sharded_diverse_resume,
                                          sharded_diverse_search)
 
@@ -157,11 +159,18 @@ class ShardedEngine:
             self.beam_state = None
         self.signatures = SignatureLog(max_signatures)
         self._unharvested: list[int] = []
+        #: prepared elastic targets: shard count -> (mesh, index), built and
+        #: prewarmed ahead of the scale event by ``prepare_rescale``
+        self._rescale_targets: dict[int, tuple] = {}
 
     # -- protocol surface ---------------------------------------------------
     @property
     def num_lanes(self) -> int:
         return self.B
+
+    @property
+    def num_shards(self) -> int:
+        return self.index.num_shards
 
     @property
     def bytes_per_vector(self) -> float:
@@ -342,7 +351,191 @@ class ShardedEngine:
             self.beam_state = init_sharded_state(self.index, self.B, cap,
                                                  self.mesh, self.axis)
             self.fresh[:] = True
+        # prepared elastic targets hold the *old* epoch's rows — serving a
+        # rescale onto one would resurrect the pre-swap corpus; the elastic
+        # controller re-prepares its targets over the new epoch
+        self._rescale_targets.clear()
         self.signatures.note("swap", self.B, self.n_total)
+
+    # -- elastic rescale -----------------------------------------------------
+    def _target_capacity(self, index: ShardedIndex) -> int:
+        floor = beam_state_capacity(index, self.n_total, self.L_factor)
+        cap = self._state_capacity or floor
+        if cap < floor:
+            # shrinking the mesh grows the shard size, which can RAISE the
+            # resumable-beam floor past a pinned state_capacity — refuse at
+            # prepare time, not mid-migration
+            raise ValueError(
+                f"state_capacity={cap} is below the {index.num_shards}-shard "
+                f"resumable-beam floor {floor} (beam_state_capacity)")
+        return cap
+
+    def prepare_rescale(self, shards: int, mesh, index: ShardedIndex | None
+                        = None, *, M: int | None = None,
+                        builder: str = "knng", prewarm: bool = True,
+                        max_capacity: int | None = None,
+                        ks: tuple = (),
+                        num_lanes: int | None = None) -> ShardedIndex:
+        """Build (or adopt) and prewarm an elastic target mesh.
+
+        Resharding and compilation are the expensive halves of a scale
+        event, so both happen here, ahead of load: the corpus is
+        repartitioned onto ``shards`` (``reshard_index`` — quantized codes
+        re-blocked exactly, graphs rebuilt), and the target mesh's dispatch
+        ladder is compiled by executing dummy rounds against a throwaway
+        beam state at the *post-rescale* queue capacity, so post-scale
+        traffic re-enters cached jit callables (``resume_jit_cache_sizes``
+        stays flat — the zero-recompile discipline extends to the new
+        mesh). Signatures are mesh-independent ``("sharded", …)`` tuples
+        plus one planned ``("rescale", shards)`` marker, so preparing both
+        targets before ``signature_log.freeze()`` keeps scale events off
+        the unplanned list. The actual ``rescale`` is then only the
+        in-flight state migration — milliseconds, not a rebuild.
+
+        ``num_lanes`` gives the target its own lane count (default: keep
+        the current one) — serving capacity follows the mesh, so a grow
+        typically scales lanes with devices and the prewarmed ladder here
+        covers the wider lane groups. A lane shrink is applied only when
+        the tail lanes are free at rescale time (it never drops an
+        occupied lane; the scheduler's elastic trigger only shrinks an
+        idle engine).
+        """
+        if shards & (shards - 1) or shards < 1:
+            raise ValueError(f"shards={shards} must be a power of two")
+        B_t = int(num_lanes or self.B)
+        if B_t < 1:
+            raise ValueError(f"num_lanes={B_t} must be >= 1")
+        if index is None:
+            index = reshard_index(
+                self.index, shards,
+                self.all_vectors if self.compressed else None,
+                M=M, builder=builder)
+        if index.num_shards != shards:
+            raise ValueError(f"prepared index has {index.num_shards} "
+                             f"shards, expected {shards}")
+        if index.num_shards * index.shard_size != self.n_total:
+            raise ValueError("elastic targets must cover the same corpus "
+                             "(resharding is a capacity knob)")
+        self.signatures.note("rescale", shards)
+        # preparing a target implies the return path: scaling back to the
+        # current topology is planned too
+        self.signatures.note("rescale", self.index.num_shards)
+        if prewarm and shards != self.index.num_shards:
+            cap = (self._target_capacity(index)
+                   if self.resume == "beam" else 0)
+            state = (init_sharded_state(index, B_t, cap, mesh, self.axis)
+                     if self.resume == "beam" else None)
+            d = int(index.dim)
+            top = min(max_capacity or self.K0, self.n_total)
+            for g in pow2_group_sizes(B_t):
+                qs = jnp.zeros((g, d), jnp.float32)
+                epss = jnp.zeros((g,), jnp.float32)
+                for k in tuple(int(kk) for kk in ks) or (self.max_k,):
+                    K = min(max(self.K0, 2 * k), self.n_total)
+                    while True:
+                        self.signatures.note("sharded", g, K, k)
+                        if self.resume == "beam":
+                            sharded_diverse_resume(
+                                index, self.all_vectors, state, qs,
+                                np.zeros(g, np.int64), np.ones(g, bool),
+                                k, epss, K, mesh, self.axis, self.L_factor,
+                                self.merge, "div_astar", self.max_expansions)
+                        else:
+                            sharded_diverse_search(
+                                index, self.all_vectors, qs, k, epss, K,
+                                mesh, self.axis, self.L_factor, self.merge,
+                                "div_astar", self.max_expansions,
+                                with_expansions=True)
+                        if K >= top:
+                            break
+                        K = min(K * 2, self.n_total)
+        self._rescale_targets[shards] = (mesh, index, B_t)
+        return index
+
+    def rescale_options(self) -> tuple[int, ...]:
+        """Shard counts this engine can serve at right now: the current
+        mesh plus every prepared elastic target."""
+        return tuple(sorted(set(self._rescale_targets)
+                            | {self.index.num_shards}))
+
+    def rescale(self, shards: int) -> bool:
+        """Quiesce-free scale event: move the corpus AND every in-flight
+        lane to the prepared ``shards``-shard mesh, between rounds.
+
+        Unlike ``swap_index`` (same corpus *content* change, which drains
+        lanes first), a rescale migrates the carried ``ShardedSearchState``
+        — each lane's per-shard queues re-bucket by global id, visited
+        bits follow their rows, step counters keep their per-lane totals —
+        so occupied lanes resume their budget ladder on the new topology
+        without redoing expansions (contract 16). When the target was
+        prepared with its own lane count, the lane axis scales too:
+        serving capacity follows the mesh. Extra lanes are appended
+        ``LANE_FREE``; a lane shrink is applied only if the tail lanes are
+        free right now — an occupied lane is never dropped, the engine
+        just keeps its current width until the tail drains. The outgoing
+        configuration is remembered as a target, so scaling back is always
+        one prepared ``rescale`` away. Returns False for a no-op (already
+        at ``shards``); raises if the target was never prepared.
+        """
+        if shards == self.index.num_shards:
+            return False
+        target = self._rescale_targets.get(shards)
+        if target is None:
+            raise RuntimeError(
+                f"no prepared target for {shards} shards — call "
+                "prepare_rescale first (resharding + compilation are the "
+                "expensive halves; the scale event itself must not pay "
+                "them)")
+        mesh, index, B_t = target
+        # remember the outgoing config so the controller can scale back
+        self._rescale_targets[self.index.num_shards] = (self.mesh,
+                                                        self.index, self.B)
+        B_new = B_t
+        if B_new < self.B and (self.status[B_new:] != LANE_FREE).any():
+            B_new = self.B   # occupied tail: keep width, shrink shards only
+        if self.resume == "beam":
+            self.beam_state = migrate_sharded_state(
+                self.beam_state, shards, self._target_capacity(index),
+                mesh=mesh, axis=self.axis, num_lanes=B_new)
+        if B_new != self.B:
+            self._resize_lanes(B_new)
+        self.index = index
+        self.mesh = mesh
+        self.signatures.note("rescale", shards)
+        return True
+
+    def _resize_lanes(self, B_new: int) -> None:
+        """Pad (grow) or slice (shrink) every per-lane host array to
+        ``B_new`` lanes, preserving the surviving prefix verbatim. The
+        caller guarantees dropped tail lanes are ``LANE_FREE``."""
+        B = self.B
+
+        def grow(a, fill):
+            out = np.full((B_new,) + a.shape[1:], fill, a.dtype)
+            out[:B] = a
+            return out
+
+        if B_new > B:
+            self.qs = grow(self.qs, 0)
+            self.status = grow(self.status, LANE_FREE)
+            self.ks = grow(self.ks, 1)
+            self.epss = grow(self.epss, 0)
+            self.K = grow(self.K, 0)
+            self.maxK = grow(self.maxK, self.n_total)
+            self.rounds = grow(self.rounds, 0)
+            self.out_ids = grow(self.out_ids, -1)
+            self.out_sc = grow(self.out_sc, 0)
+            self.cert = grow(self.cert, False)
+            self.expansions = grow(self.expansions, 0)
+            self.fresh = grow(self.fresh, True)
+            self.last_candidates += [None] * (B_new - B)
+        else:
+            for name in ("qs", "status", "ks", "epss", "K", "maxK",
+                         "rounds", "out_ids", "out_sc", "cert",
+                         "expansions", "fresh"):
+                setattr(self, name, getattr(self, name)[:B_new])
+            self.last_candidates = self.last_candidates[:B_new]
+        self.B = B_new
 
     # -- prewarm ------------------------------------------------------------
     def prewarm(self, *, max_capacity: int | None = None, ks: tuple = (),

@@ -188,6 +188,94 @@ def build_sharded_index(vectors: np.ndarray, num_shards: int, metric: str,
     )
 
 
+def reshard_index(index: ShardedIndex, num_shards: int,
+                  all_vectors=None, *, M: int | None = None,
+                  builder: str = "knng") -> ShardedIndex:
+    """Repartition a ``ShardedIndex`` across a new power-of-two shard count.
+
+    The partition is round-robin contiguous (shard ``s`` owns global rows
+    ``[s*ns, (s+1)*ns)``), so repartitioning is a pure re-blocking of the
+    stacked row arrays: global ids never move, and a quantized corpus's
+    codes/scales are re-blocked **exactly** — no requantization (int8 scale
+    blocks are ``scale_rows``-row aligned, which must divide the new shard
+    size; PQ codebooks are replicated and untouched). Per-shard proximity
+    graphs are shard-local structures and are rebuilt deterministically
+    over each new partition from the float rows — resharding is a capacity
+    knob, never a results knob (``docs/ARCHITECTURE.md`` contract 16), so
+    a reshard round trip (4 -> 8 -> 4 with the same build parameters) is
+    bit-identical to the original.
+
+    ``all_vectors`` is the host-retained float corpus, required when the
+    index is quantized (``vectors`` is None); ``M``/``builder`` must match
+    the original build (``M`` defaults to the stored neighbor width
+    divided by 2 — ``build_knn_graph``'s ``M0 = 2 * M`` — which is only
+    correct for the default ``knng`` builder).
+    """
+    p_old, ns_old = index.num_shards, index.shard_size
+    n = p_old * ns_old
+    if num_shards & (num_shards - 1) or num_shards < 1:
+        raise ValueError(f"num_shards={num_shards} must be a power of two "
+                         "(tournament merge)")
+    if n % num_shards:
+        raise ValueError(f"corpus of {n} rows does not split across "
+                         f"{num_shards} shards")
+    if num_shards == p_old:
+        return index
+    ns_new = n // num_shards
+    if index.scheme == "int8" and (ns_old % index.scale_rows
+                                   or ns_new % index.scale_rows):
+        raise ValueError(
+            f"int8 scale blocks ({index.scale_rows} rows) must divide both "
+            f"shard sizes ({ns_old} -> {ns_new}); rebuild instead of "
+            "resharding")
+    if index.vectors is not None:
+        flat = np.asarray(index.vectors).reshape(n, -1)
+    elif all_vectors is not None:
+        flat = np.asarray(all_vectors, np.float32)[:n]
+    else:
+        raise ValueError("resharding a quantized index needs the "
+                         "host-retained float corpus (all_vectors=)")
+    if M is None:
+        M = index.neighbors.shape[-1] // 2
+
+    from repro.index.flat import build_knn_graph
+    from repro.index.hnsw import build_hnsw
+
+    vecs, nbrs, entries = [], [], []
+    for s in range(num_shards):
+        chunk = flat[s * ns_new:(s + 1) * ns_new]
+        if builder == "hnsw":
+            g = build_hnsw(chunk, metric=index.metric, M=M)
+        else:
+            g = build_knn_graph(chunk, metric=index.metric, M=M)
+        vecs.append(np.asarray(g.vectors))
+        nbrs.append(np.asarray(g.neighbors))
+        entries.append(int(g.entry))
+    m0 = max(a.shape[1] for a in nbrs)
+    nbrs = [np.pad(a, ((0, 0), (0, m0 - a.shape[1])), constant_values=-1)
+            for a in nbrs]
+    codes = scales = None
+    if index.codes is not None:
+        c = np.asarray(index.codes)
+        codes = jnp.asarray(c.reshape(n, *c.shape[2:])
+                            .reshape(num_shards, ns_new, *c.shape[2:]))
+    if index.scales is not None:
+        sc = np.asarray(index.scales)
+        scales = jnp.asarray(sc.reshape(-1).reshape(num_shards, -1))
+    return ShardedIndex(
+        vectors=None if index.scheme else jnp.asarray(np.stack(vecs)),
+        neighbors=jnp.asarray(np.stack(nbrs)),
+        entries=jnp.asarray(np.array(entries, np.int32)),
+        bases=jnp.asarray(np.arange(num_shards, dtype=np.int32) * ns_new),
+        codes=codes,
+        scales=scales,
+        codebooks=index.codebooks,
+        metric=index.metric,
+        scheme=index.scheme,
+        scale_rows=index.scale_rows,
+    )
+
+
 def _local_topk(vectors, neighbors, entry, base, qs, metric: str,
                 k: int, L: int):
     """Shard-local beam search for a query batch; returns GLOBAL ids plus
@@ -323,6 +411,109 @@ def init_sharded_state(index: ShardedIndex, num_lanes: int, capacity: int,
         visited=jnp.zeros((p, num_lanes, ns), jnp.bool_),
         steps=jnp.zeros((p, num_lanes), jnp.int32),
     )
+    if mesh is None:
+        return leaves
+    sharding = NamedSharding(mesh, P(axis))
+    return ShardedSearchState(
+        *(jax.device_put(leaf, sharding) for leaf in leaves))
+
+
+def migrate_sharded_state(state: ShardedSearchState, num_shards: int,
+                          capacity: int | None = None,
+                          mesh: Mesh | None = None,
+                          axis: str = "data",
+                          num_lanes: int | None = None) -> ShardedSearchState:
+    """Re-bucket in-flight per-lane beam state onto a new shard layout.
+
+    The contiguous partition makes every queue entry's global id
+    ``local + s * ns``; migration maps each entry to its new shard, re-sorts
+    every (lane, shard) queue under the canonical (score desc, id asc)
+    order, and re-blocks the visited bitmap — set bits follow their global
+    row, so no expansion is ever redone after a scale event. ``steps``
+    preserves each lane's per-shard totals (a split shard's counter rides
+    on its first child; merged shards sum), which keeps both the engine's
+    cumulative-expansion counters and ``resume_search``'s relative step
+    budget exact. With the engine-default capacity
+    (``beam_state_capacity``) no entry can be dropped: a new shard holds at
+    most ``ns_new <= capacity`` distinct ids.
+
+    ``num_lanes`` resizes the lane axis alongside the shard axis (serving
+    capacity follows the mesh): extra lanes are appended empty (unseeded),
+    a smaller count keeps lanes ``[:num_lanes]`` verbatim and drops the
+    tail — the caller is responsible for only dropping lanes whose beams
+    are dead (the engine drops ``LANE_FREE`` tails only).
+
+    Host-side by design — scale events are rare, and the migrated pytree is
+    ``device_put`` onto ``mesh`` exactly like ``init_sharded_state``.
+    """
+    ids = np.asarray(state.ids)
+    scores = np.asarray(state.scores)
+    stable = np.asarray(state.stable)
+    visited = np.asarray(state.visited)
+    steps = np.asarray(state.steps)
+    p_old, B, C_old = ids.shape
+    ns_old = visited.shape[-1]
+    n = p_old * ns_old
+    if num_shards & (num_shards - 1) or n % num_shards:
+        raise ValueError(f"cannot migrate {p_old}x{ns_old} beam state to "
+                         f"{num_shards} shards")
+    ns_new = n // num_shards
+    C_new = int(capacity or C_old)
+
+    # queue entries -> global ids, flattened over the old shard axis
+    bases_old = (np.arange(p_old, dtype=np.int64) * ns_old)[:, None, None]
+    gids = np.where(ids >= 0, ids.astype(np.int64) + bases_old, -1)
+    gids = gids.transpose(1, 0, 2).reshape(B, -1)       # [B, p_old*C_old]
+    sc = scores.transpose(1, 0, 2).reshape(B, -1)
+    st = stable.transpose(1, 0, 2).reshape(B, -1)
+
+    new_ids = np.full((num_shards, B, C_new), -1, np.int32)
+    new_sc = np.full((num_shards, B, C_new), -np.inf, np.float32)
+    new_st = np.ones((num_shards, B, C_new), np.bool_)
+    for s in range(num_shards):
+        lo, hi = s * ns_new, (s + 1) * ns_new
+        for b in range(B):
+            sel = (gids[b] >= lo) & (gids[b] < hi)
+            g, s_b, t_b = gids[b][sel], sc[b][sel], st[b][sel]
+            if len(g) > C_new:
+                # silently dropping beam candidates would void the widening
+                # contract the same way an under-floor state_capacity does
+                raise ValueError(
+                    f"capacity {C_new} cannot hold the {len(g)} migrated "
+                    f"candidates of lane {b} shard {s}; size the target "
+                    "state with beam_state_capacity")
+            order = np.lexsort((g, -s_b))
+            m = len(order)
+            new_ids[s, b, :m] = (g[order] - lo).astype(np.int32)
+            new_sc[s, b, :m] = s_b[order]
+            new_st[s, b, :m] = t_b[order]
+
+    new_vis = (visited.transpose(1, 0, 2).reshape(B, n)
+               .reshape(B, num_shards, ns_new).transpose(1, 0, 2))
+    if num_shards >= p_old:
+        f = num_shards // p_old
+        new_steps = np.zeros((num_shards, B), np.int32)
+        new_steps[::f] = steps
+    else:
+        f = p_old // num_shards
+        new_steps = steps.reshape(num_shards, f, B).sum(axis=1,
+                                                        dtype=np.int32)
+    B_new = int(num_lanes or B)
+    if B_new != B:
+        def _lanes(a, fill):
+            out = np.full(a.shape[:1] + (B_new,) + a.shape[2:], fill,
+                          a.dtype)
+            out[:, :min(B, B_new)] = a[:, :min(B, B_new)]
+            return out
+        new_ids = _lanes(new_ids, -1)
+        new_sc = _lanes(new_sc, -np.inf)
+        new_st = _lanes(new_st, True)
+        new_vis = _lanes(new_vis, False)
+        new_steps = _lanes(new_steps, 0)
+    leaves = ShardedSearchState(
+        ids=jnp.asarray(new_ids), scores=jnp.asarray(new_sc),
+        stable=jnp.asarray(new_st), visited=jnp.asarray(new_vis),
+        steps=jnp.asarray(new_steps))
     if mesh is None:
         return leaves
     sharding = NamedSharding(mesh, P(axis))

@@ -13,18 +13,31 @@ cfg = get_config("qwen2-1.5b").reduced()
 mesh8 = make_mesh((4, 2), ("data", "model"))
 mesh4 = make_mesh((2, 2), ("data", "model"))
 params = M.init_params(cfg, jax.random.key(0))
-p8 = reshard_tree(params, cfg, mesh8)
+
+# shrink 8 -> 4 through a checkpoint round trip (logical keys, layout-free)
+p8 = reshard_tree(params, mesh8, cfg)
 with tempfile.TemporaryDirectory() as d:
     ckpt.save(d, 1, p8)
-    restored = ckpt.restore(d, 1, p8, shardings=sh.to_named(sh.param_spec_tree(cfg, p8, mesh4), mesh4))
-# values identical after 8-dev -> 4-dev move
-a = np.asarray(jax.tree.leaves(params)[0]); b = np.asarray(jax.tree.leaves(restored)[0])
-np.testing.assert_array_equal(a, b)
-info = plan(cfg, mesh8, mesh4)
-assert info["dp_change"] == 0.5
-# loss identical on both meshes
+    restored = ckpt.restore(d, 1, p8, shardings=sh.to_named(
+        sh.param_spec_tree(cfg, p8, mesh4), mesh4))
+a = np.asarray(jax.tree.leaves(params)[0])
+np.testing.assert_array_equal(a, np.asarray(jax.tree.leaves(restored)[0]))
+
+# grow 4 -> 8 in memory: reshard_tree re-places the restored tree directly
+p8b = reshard_tree(restored, mesh8, cfg)
+np.testing.assert_array_equal(a, np.asarray(jax.tree.leaves(p8b)[0]))
+
+# plan() is a pure mesh diff; plan(a, b) and plan(b, a) are exact inverses
+down, up = plan(mesh8, mesh4), plan(mesh4, mesh8)
+assert down["dp_change"] == 0.5 and up["dp_change"] == 2.0
+assert down["old"] == up["new"] and down["new"] == up["old"]
+for ax, r in down["axis_changes"].items():
+    assert up["axis_changes"][ax] == 1.0 / r, (ax, r)
+
+# loss identical on every placement
 batch = M.make_batch(cfg, batch=4, seq=8, rng=jax.random.key(1))
 l8 = float(M.loss_fn(cfg, p8, batch))
 l4 = float(M.loss_fn(cfg, restored, batch))
-assert abs(l8 - l4) < 1e-4, (l8, l4)
+l8b = float(M.loss_fn(cfg, p8b, batch))
+assert abs(l8 - l4) < 1e-4 and abs(l8 - l8b) < 1e-4, (l8, l4, l8b)
 print("OK")

@@ -47,6 +47,17 @@ def test_elastic_reshard_8to4():
     _run("elastic_check.py")
 
 
+def test_elastic_scale_straddle_4dev():
+    """Contract 16 end-to-end: engine-direct lanes straddle a grow
+    (2 -> 4) and a shrink (4 -> 2) mid-ladder and finish bit-matching the
+    fixed final mesh at the same K-budget or independently Theorem-2
+    re-checked (0 violations); a DiverseVectorDB with an ElasticPolicy
+    performs one grow + one shrink under a burst, admits a queued request
+    into a lane on the NEW mesh mid-run, and the frozen SignatureLog /
+    resume-dispatch jit cache stay flat across the scale events."""
+    _run("elastic_scale_check.py", timeout=900)
+
+
 def test_small_mesh_dryrun_multifamily():
     _run("small_mesh_dryrun.py", timeout=560)
 
